@@ -1,0 +1,189 @@
+"""Shared benchmark harness: tiny-model train/eval loops + timing.
+
+Paper-fidelity benchmarks run REAL training of a small decoder on the
+synthetic online KV task (answers only recoverable through compressed
+memory), so accuracy deltas between methods are meaningful, then measure
+the same quantities the paper tabulates (accuracy per time step, peak KV
+bytes, step time). Scale is CPU-sized; trends, ratios and orderings are
+the reproduction target (absolute GPU numbers are not reproducible in this
+container — EXPERIMENTS.md §Paper-fidelity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+from repro.data.synthetic import KVTaskConfig, sample_kv_batch
+from repro.launch.train import make_train_step, trainable_mask_for
+from repro.models import transformer as T
+from repro.models.config import CCMConfig, ModelConfig
+from repro.optim import partition as PT
+from repro.optim.adamw import AdamWConfig, init_adamw
+
+TASK = KVTaskConfig(n_keys=16, n_vals=16)
+T_MAX = 4
+CHUNK = 8
+COMP = 2
+TAIL = 8
+
+
+def bench_cfg(**kw) -> ModelConfig:
+    base = dict(name="bench", family="dense", n_layers=2, d_model=128,
+                n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=128,
+                compute_dtype="float32", train_mode="lora",
+                ccm=CCMConfig(comp_len=COMP, max_steps=T_MAX))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def layout_for(t: int, comp_len: int = COMP) -> M.SegmentLayout:
+    return M.segment_layout(t, CHUNK, comp_len, TAIL)
+
+
+def pretrain_base(steps: int = 600, seed: int = 0,
+                  lr: float = 3e-3, sampler=None) -> Dict:
+    """Fine-tune the base model full-context on the task (the paper first
+    fine-tunes LLaMA on each dataset; full-context = upper bound)."""
+    cfg = bench_cfg(train_mode="full").replace(
+        ccm=CCMConfig(enabled=False, comp_len=COMP, max_steps=T_MAX))
+    layout = layout_for(T_MAX)
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    tr = trainable_mask_for(cfg, params)
+    tp, fp = PT.partition(params, tr)
+    opt = init_adamw(tp)
+    step = jax.jit(make_train_step(
+        cfg, layout, AdamWConfig(lr=lr, total_steps=steps)))
+    draw = sampler or (lambda k, lo, b: sample_kv_batch(k, lo, b, TASK))
+    for s in range(steps):
+        batch = draw(jax.random.fold_in(
+            jax.random.PRNGKey(seed + 1), s), layout, 32)
+        tp, opt, m, _ = step(tp, fp, opt, batch, None)
+    return PT.merge(tp, fp)
+
+
+def train_compression(base_params: Dict, cfg: ModelConfig,
+                      steps: int = 600, seed: int = 1, lr: float = 3e-3,
+                      unconditional: bool = False, sampler=None) -> Dict:
+    """Train the compression adapter (LoRA + comp embeddings) on a frozen
+    base — paper Alg. 1."""
+    layout = layout_for(cfg.ccm.max_steps, cfg.ccm.comp_len)
+    fresh = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    params = dict(base_params)
+    params["comp_embed"] = fresh["comp_embed"]
+    params = _graft_lora(params, fresh)
+    tr = trainable_mask_for(cfg, params)
+    tp, fp = PT.partition(params, tr)
+    opt = init_adamw(tp)
+    from repro.launch.train import _loss_fn
+    from repro.optim.adamw import adamw_update
+
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps)
+
+    @jax.jit
+    def step(tp, fp, opt, batch):
+        def lf(tp_):
+            merged = PT.merge(tp_, fp)
+            logits = T.train_forward(merged, cfg, batch["tokens"], layout,
+                                     unconditional_lora=unconditional)
+            tail = batch["tokens"][:, layout.seq_len - layout.tail_len:]
+            from repro.optim.losses import next_token_loss
+            return next_token_loss(logits, tail, batch["loss_mask"])
+
+        loss, grads = jax.value_and_grad(lf)(tp)
+        tp2, opt2, m = adamw_update(opt_cfg, tp, grads, opt)
+        m["loss"] = loss
+        return tp2, opt2, m
+
+    draw = sampler or (lambda k, lo, b: sample_kv_batch(k, lo, b, TASK))
+    for s in range(steps):
+        batch = draw(jax.random.fold_in(
+            jax.random.PRNGKey(seed + 2), s), layout, 32)
+        tp, opt, m = step(tp, fp, opt, batch)
+    return PT.merge(tp, fp)
+
+
+def _graft_lora(params: Dict, fresh: Dict) -> Dict:
+    """Copy fresh (zero-delta) LoRA subtrees into a base param tree that
+    may lack them (base pretrained without CCM)."""
+    import copy
+    out = jax.tree.map(lambda x: x, params)
+    layers = dict(out["layers"])
+    attn = dict(layers["attn"])
+    attn["lora"] = fresh["layers"]["attn"]["lora"]
+    layers["attn"] = attn
+    out["layers"] = layers
+    return out
+
+
+def eval_at_timesteps(params: Dict, cfg: ModelConfig,
+                      ts=(1, 2, 4), n_batches: int = 6,
+                      seed: int = 99,
+                      unconditional: bool = False) -> Dict[int, float]:
+    """Accuracy of value prediction at each online time step t."""
+    out = {}
+    for t in ts:
+        layout = layout_for(t, cfg.ccm.comp_len)
+        fn = jax.jit(lambda toks: T.train_forward(
+            params, cfg, toks, layout, unconditional_lora=unconditional))
+        correct = total = 0
+        for b in range(n_batches):
+            batch = sample_kv_batch(jax.random.fold_in(
+                jax.random.PRNGKey(seed), t * 100 + b), layout, 16, TASK)
+            logits = fn(batch["tokens"])
+            tail = batch["tokens"][:, layout.seq_len - layout.tail_len:]
+            pred = jnp.argmax(logits[:, :-1], axis=-1)
+            hit = (pred == tail[:, 1:]) * batch["loss_mask"]
+            correct += float(hit.sum())
+            total += float(batch["loss_mask"].sum())
+        out[t] = correct / max(total, 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV memory accounting (paper's "peak KV memory" MB numbers)
+# ---------------------------------------------------------------------------
+
+def kv_bytes(cfg: ModelConfig, n_tokens: int, bytes_per=2) -> int:
+    return 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * n_tokens * bytes_per
+
+
+def peak_kv_tokens(method: str, t: int, lc: int = CHUNK, m: int = COMP,
+                   tail: int = TAIL) -> int:
+    """Peak #tokens whose KV is live during [compress then infer] at step t
+    (paper Fig. 5 / Table 3)."""
+    if method == "full":
+        return t * lc + tail
+    if method == "no_context":
+        return tail
+    if method == "ccm-concat":
+        return max((t - 1) * m + lc + m, t * m + tail)
+    if method == "ccm-merge":
+        return max(m + lc + m, m + tail)
+    if method == "gisting":          # fixed-context recompression of C(t)
+        return max(t * lc + t * m, t * m + tail)
+    if method == "gisting-online":
+        return max(lc + m + (t - 1) * m, t * m + tail)
+    if method == "compressive":
+        return max(lc + t * m, t * m + tail)
+    raise KeyError(method)
+
+
+def timed(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """us per call (blocked until ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

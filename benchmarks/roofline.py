@@ -1,0 +1,105 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts (experiments/dryrun/*.json).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = collective_bytes_per_device / link_bw    (~50 GB/s/link)
+
+(cost_analysis is per-device post-SPMD; `calibrated` entries are the
+scan-trip-count-corrected values — see dryrun.calibrated_cost.)
+Also reports MODEL_FLOPS = 6*N*D (6*N_active*D for MoE; x3 for the
+fwd+bwd train step) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPE_TOKENS = {   # global tokens processed per step
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,       # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: Dict) -> float:
+    n = rec["n_params_active"]
+    d = SHAPE_TOKENS[rec["shape"]]
+    mult = 6.0 if rec["shape"] == "train_4k" else 2.0   # fwd+bwd vs fwd
+    if rec["shape"] == "train_4k" and "mode=lora" in (rec.get("note") or ""):
+        mult = 4.0   # frozen base: fwd + activation-grad bwd, no wgrad
+    return mult * n * d
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    cal = rec.get("calibrated") or {}
+    flops = cal.get("flops") or rec["cost"].get("flops", 0.0)
+    byts = cal.get("bytes") or rec["cost"].get("bytes accessed", 0.0)
+    coll = cal.get("collective", rec.get("collective_total", 0.0))
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"),
+                   (t_x, "collective"))[1]
+    mf = model_flops(rec)
+    chips = rec["devices"]
+    hlo_global = flops * chips
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_bound_s": max(t_c, t_m, t_x),
+        # fraction of the ideal compute-bound time actually achievable
+        "roofline_fraction": (mf / chips / PEAK_FLOPS)
+        / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) > 0 else 0.0,
+        "peak_gb": (rec["memory"]["peak_bytes"] or 0) / 1e9,
+    }
+
+
+def print_table(mesh: str = "single", dryrun_dir: str = DRYRUN_DIR,
+                include_variants: bool = False):
+    recs = [r for r in load_records(dryrun_dir) if r["mesh"] == mesh
+            and (include_variants or not r.get("variant"))]
+    hdr = (f"{'arch':<26} {'shape':<12} {'comp_s':>9} {'mem_s':>9} "
+           f"{'coll_s':>9} {'dom':<10} {'useful':>7} {'roofl%':>7} "
+           f"{'peakGB':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    rows = {}
+    for r in recs:
+        t = roofline_terms(r)
+        print(f"{r['arch']:<26} {r['shape']:<12} "
+              f"{t['compute_s']:9.2e} {t['memory_s']:9.2e} "
+              f"{t['collective_s']:9.2e} {t['dominant']:<10} "
+              f"{t['useful_ratio']:7.2f} {100*t['roofline_fraction']:6.1f}% "
+              f"{t['peak_gb']:7.2f}")
+        rows[f"{r['arch']}/{r['shape']}"] = t
+    return rows
+
+
+def main():
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print_table(mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark driver: one function per paper table (see tables.py).
+
+Prints ``name,us_per_call,derived`` CSV and writes
+experiments/bench_results.json. ``--fast`` trims training steps for CI.
+Roofline tables (from the dry-run artifacts) are appended when present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table names")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import tables as TB
+    steps = 120 if args.fast else 600
+    small = 100 if args.fast else 400
+    jobs = {
+        "table3_complexity": lambda: TB.table3_complexity(),
+        "table8_training_speed": lambda: TB.table8_training_speed(),
+        "table1_throughput": lambda: TB.table1_throughput(),
+        "fig6_memory_vs_performance":
+            lambda: TB.fig6_memory_vs_performance(steps),
+        "table5_conditional_lora":
+            lambda: TB.table5_conditional_lora(small),
+        "fig8_streaming": lambda: TB.fig8_streaming(steps),
+        "table16_merge_design": lambda: TB.table16_merge_design(small),
+        "table18_comp_len": lambda: TB.table18_comp_len(small),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        jobs = {k: v for k, v in jobs.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    results = {}
+    for name, fn in jobs.items():
+        t0 = time.time()
+        try:
+            results[name] = fn()
+        except Exception as e:  # keep the suite running
+            import traceback
+            traceback.print_exc()
+            results[name] = {"error": str(e)}
+        print(f"# {name} done in {time.time()-t0:.0f}s")
+
+    # roofline from dry-run artifacts, if present
+    try:
+        from benchmarks import roofline as RL
+        recs = RL.load_records()
+        if recs:
+            for mesh in ("single", "multi"):
+                if any(r["mesh"] == mesh for r in recs):
+                    print(f"\n# === roofline ({mesh}-pod) ===")
+                    results[f"roofline_{mesh}"] = RL.print_table(mesh)
+    except Exception as e:
+        print(f"# roofline skipped: {e}")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

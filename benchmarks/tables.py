@@ -1,0 +1,275 @@
+"""One function per paper table/figure (EXPERIMENTS.md §Paper-fidelity).
+
+Each prints ``name,us_per_call,derived`` CSV rows and returns a dict that
+benchmarks.run aggregates into experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import inference as I
+from repro.core import masks as M
+from repro.core import streaming as ST
+from repro.data.synthetic import lm_stream, sample_kv_batch
+from repro.models import transformer as T
+from repro.models.config import CCMConfig, ModelConfig
+from repro.optim.losses import next_token_loss
+
+
+def _variant_cfg(method: str, mode: str = "concat", **kw) -> ModelConfig:
+    return C.bench_cfg(**kw).replace(
+        ccm=CCMConfig(comp_len=C.COMP, max_steps=C.T_MAX, mode=mode,
+                      method=method))
+
+
+def _eval_no_context(params, cfg, ts=(1, 2, 4), n_batches=6) -> Dict:
+    lo0 = M.segment_layout(0, C.CHUNK, C.COMP, C.TAIL)
+    plain = cfg.replace(ccm=CCMConfig(enabled=False))
+    fn = jax.jit(lambda toks: T.train_forward(params, plain, toks, lo0))
+    out = {}
+    for t in ts:
+        lo = C.layout_for(t)
+        correct = total = 0
+        for b in range(n_batches):
+            batch = sample_kv_batch(jax.random.fold_in(
+                jax.random.PRNGKey(99), t * 100 + b), lo, 16, C.TASK)
+            tail = batch["tokens"][:, lo.seq_len - lo.tail_len:]
+            logits = fn(tail)
+            pred = jnp.argmax(logits[:, :-1], axis=-1)
+            hit = (pred == tail[:, 1:]) * batch["loss_mask"]
+            correct += float(hit.sum())
+            total += float(batch["loss_mask"].sum())
+        out[t] = correct / max(total, 1)
+    return out
+
+
+# ===========================================================================
+def fig6_memory_vs_performance(steps: int = 400) -> Dict:
+    """Fig. 6 + Fig. 7 + Tables 23-25 (shape): accuracy vs time step and vs
+    peak KV memory, CCM vs baselines vs full/no-context."""
+    t0 = time.time()
+    base = C.pretrain_base(steps)
+    results = {}
+    full_cfg = C.bench_cfg().replace(ccm=CCMConfig(enabled=False))
+    results["full"] = C.eval_at_timesteps(base, full_cfg)
+    results["no_context"] = _eval_no_context(base, full_cfg)
+    variants = {
+        "ccm-concat": _variant_cfg("ccm", "concat"),
+        "ccm-merge": _variant_cfg("ccm", "merge"),
+        "gisting-online": _variant_cfg("gisting"),
+        "compressive": _variant_cfg("compressive"),
+    }
+    for name, cfg in variants.items():
+        p = C.train_compression(base, cfg, steps)
+        results[name] = C.eval_at_timesteps(p, cfg)
+    rows = {}
+    for name, accs in results.items():
+        for t, acc in accs.items():
+            mname = name if name in ("full", "no_context") else \
+                ("ccm-merge" if name == "ccm-merge" else name)
+            method_key = {"full": "full", "no_context": "no_context",
+                          "ccm-concat": "ccm-concat",
+                          "ccm-merge": "ccm-merge",
+                          "gisting-online": "gisting-online",
+                          "compressive": "compressive"}[name]
+            toks = C.peak_kv_tokens(method_key, t)
+            kb = C.kv_bytes(C.bench_cfg(), toks) / 1024
+            C.csv_row(f"fig6/{name}/t{t}", 0.0,
+                      f"acc={acc:.3f};peak_kv_kb={kb:.1f}")
+            rows[f"{name}/t{t}"] = {"acc": acc, "peak_kv_kb": kb}
+    print(f"# fig6 wall: {time.time()-t0:.0f}s")
+    return rows
+
+
+# ===========================================================================
+def table5_conditional_lora(steps: int = 300) -> Dict:
+    """Table 5: conditional vs default (unconditional) LoRA."""
+    base = C.pretrain_base(steps)
+    out = {}
+    for method, mode in [("ccm", "concat"), ("ccm", "merge"),
+                         ("gisting", "concat")]:
+        cfg = _variant_cfg(method, mode)
+        tag = f"{method}-{mode}" if method == "ccm" else method
+        for cond in (True, False):
+            p = C.train_compression(base, cfg, steps,
+                                    unconditional=not cond)
+            acc = C.eval_at_timesteps(p, cfg, ts=(C.T_MAX,),
+                                      unconditional=not cond)[C.T_MAX]
+            key = f"{tag}/{'conditional' if cond else 'default'}"
+            C.csv_row(f"table5/{key}", 0.0, f"acc={acc:.3f}")
+            out[key] = acc
+    return out
+
+
+# ===========================================================================
+def table8_training_speed() -> Dict:
+    """Table 8: parallelized CCM training vs recursive (RMT/AutoCompressor-
+    style BPTT through t sequential compressions). ms per sample."""
+    cfg = _variant_cfg("ccm", "concat")
+    layout = C.layout_for(C.T_MAX)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = sample_kv_batch(jax.random.PRNGKey(1), layout, 8, C.TASK)
+
+    def par_loss(p):
+        lg = T.train_forward(p, cfg, batch["tokens"], layout)
+        tail = batch["tokens"][:, layout.seq_len - layout.tail_len:]
+        return next_token_loss(lg, tail, batch["loss_mask"])
+
+    def rec_loss(p):
+        """RMT/AutoCompressor-style: BPTT through t sequential compression
+        forwards, then the tail pass."""
+        state = I.init_online_state(cfg, 8, max_cache_len=C.TAIL + 2)
+        step = layout.chunk_len + layout.comp_len
+        toks = batch["tokens"]
+        for j in range(layout.t_steps):
+            chunk = toks[:, j * step:(j + 1) * step - layout.comp_len]
+            state = I.ingest_context(p, cfg, state, chunk)
+        tail = toks[:, layout.t_steps * step:]
+        lg, _ = I.prefill(p, cfg, state, tail, full_logits=True)
+        return next_token_loss(lg, tail, batch["loss_mask"])
+
+    par_step = jax.jit(jax.grad(par_loss))
+    us_par = C.timed(par_step, params, iters=5)
+    rec_step = jax.jit(jax.grad(rec_loss))
+    us_rec = C.timed(rec_step, params, iters=5)
+    ratio = us_rec / us_par
+    C.csv_row("table8/parallel", us_par / 8, f"ms_per_sample={us_par/8e3:.2f}")
+    C.csv_row("table8/recursive", us_rec / 8,
+              f"ms_per_sample={us_rec/8e3:.2f};speedup={ratio:.2f}x")
+    return {"parallel_us": us_par, "recursive_us": us_rec,
+            "speedup": ratio}
+
+
+# ===========================================================================
+def table1_throughput() -> Dict:
+    """Table 1 (shape): serving cost at time step 16-analog — decode step
+    time + context KV length, full-context vs CCM-concat vs CCM-merge."""
+    t = C.T_MAX
+    lc, m = C.CHUNK, C.COMP
+    out = {}
+    for method, ctx_tokens in [
+            ("full", t * lc), ("ccm-concat", t * m), ("ccm-merge", m)]:
+        cfg = _variant_cfg("ccm",
+                           "merge" if method == "ccm-merge" else "concat")
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        B = 32
+        state = I.init_online_state(cfg, B, max_cache_len=ctx_tokens + 64)
+        state = state._replace(cache=state.cache._replace(
+            length=jnp.asarray(ctx_tokens if method == "full" else 0,
+                               jnp.int32)))
+        if method != "full":
+            state = state._replace(mem=state.mem._replace(
+                slots=jnp.asarray(t if method == "ccm-concat" else 1,
+                                  jnp.int32)))
+        step = jax.jit(lambda s, tok: I.decode_step(params, cfg, s, tok))
+        tok = jnp.ones((B, 1), jnp.int32)
+        us = C.timed(lambda: step(state, tok)[0], iters=20)
+        thr = B / (us / 1e6)
+        kvb = C.kv_bytes(cfg, ctx_tokens) / 1024
+        C.csv_row(f"table1/{method}", us,
+                  f"samples_per_s={thr:.0f};ctx_kv_len={ctx_tokens};"
+                  f"ctx_kv_kb={kvb:.1f}")
+        out[method] = {"us": us, "throughput": thr,
+                       "ctx_tokens": ctx_tokens}
+    return out
+
+
+# ===========================================================================
+def table3_complexity() -> Dict:
+    """Table 3: measured peak-KV scaling vs time step per method."""
+    out = {}
+    for method in ("full", "ccm-concat", "ccm-merge", "gisting-online",
+                   "compressive"):
+        toks = [C.peak_kv_tokens(method, t) for t in (1, 2, 4, 8, 16)]
+        growth = toks[-1] / toks[0]
+        C.csv_row(f"table3/{method}", 0.0,
+                  "peak_tokens=" + "|".join(map(str, toks))
+                  + f";growth16x={growth:.1f}")
+        out[method] = toks
+    return out
+
+
+# ===========================================================================
+def _stream_kv_batch(key, layout, batch, vocab):
+    """CCM-layout batch whose chunks/tail are a CONTIGUOUS token stream
+    (fig8 trains compression on the streaming distribution)."""
+    import numpy as np
+    from repro.data.synthetic import COMP, lm_stream
+    raw_len = layout.t_steps * layout.chunk_len + layout.tail_len
+    raw = lm_stream(key, batch, raw_len, vocab)
+    comp = np.asarray(layout.comp_mask)
+    toks = jnp.zeros((batch, layout.seq_len), jnp.int32)
+    toks = toks.at[:, ~comp].set(raw)
+    toks = toks.at[:, comp].set(COMP)
+    lm = jnp.ones((batch, layout.tail_len - 1), jnp.float32)
+    return {"tokens": toks, "loss_mask": lm}
+
+
+def fig8_streaming(steps: int = 400) -> Dict:
+    """Fig. 8: streaming perplexity, CCM vs StreamingLLM (same KV budget).
+
+    Trains base + compression ON the stream distribution (PG19-analog)."""
+    ccm = CCMConfig(comp_len=C.COMP, max_steps=C.T_MAX, stream_window=64,
+                    stream_sink=4, stream_chunk=16, stream_mem_slots=8)
+    cfg = C.bench_cfg().replace(ccm=ccm)
+    import functools
+    sampler = functools.partial(_stream_kv_batch, vocab=cfg.vocab_size)
+    base = C.pretrain_base(steps, sampler=sampler)
+    params = C.train_compression(base, cfg, steps, sampler=sampler)
+    toks = lm_stream(jax.random.PRNGKey(5), 8, 512, cfg.vocab_size)
+    out = {}
+    for name, ccm_on in (("ccm", True), ("streamingllm", False)):
+        st = ST.init_stream_state(cfg, 8)
+        step = jax.jit(lambda s, t: ST.stream_step(params, cfg, s, t,
+                                                   ccm_on=ccm_on))
+        nll = cnt = 0.0
+        for i in range(0, 512 - 16, 16):
+            lg, st = step(st, toks[:, i:i + 16])
+            lp = jax.nn.log_softmax(lg.astype(jnp.float32)[:, :-1], -1)
+            tgt = toks[:, i + 1:i + 16]
+            nll += float(-jnp.take_along_axis(
+                lp, tgt[..., None], -1).sum())
+            cnt += tgt.size
+        ppl = float(np.exp(nll / cnt))
+        C.csv_row(f"fig8/{name}", 0.0, f"ppl={ppl:.2f}")
+        out[name] = ppl
+    return out
+
+
+# ===========================================================================
+def table16_merge_design(steps: int = 300) -> Dict:
+    """Table 16: merge update — arithmetic average vs EMA."""
+    base = C.pretrain_base(steps)
+    out = {}
+    for name, alpha in (("arith", None), ("ema0.5", 0.5)):
+        cfg = C.bench_cfg().replace(ccm=CCMConfig(
+            comp_len=C.COMP, max_steps=C.T_MAX, mode="merge",
+            merge_alpha=alpha))
+        p = C.train_compression(base, cfg, steps)
+        accs = C.eval_at_timesteps(p, cfg)
+        C.csv_row(f"table16/{name}", 0.0,
+                  ";".join(f"t{t}={a:.3f}" for t, a in accs.items()))
+        out[name] = accs
+    return out
+
+
+# ===========================================================================
+def table18_comp_len(steps: int = 300) -> Dict:
+    """Table 18: <COMP> token length sweep."""
+    base = C.pretrain_base(steps)
+    out = {}
+    for m in (1, 2, 4):
+        cfg = C.bench_cfg().replace(ccm=CCMConfig(
+            comp_len=m, max_steps=C.T_MAX))
+        p = C.train_compression(base, cfg, steps)
+        acc = C.eval_at_timesteps(p, cfg, ts=(C.T_MAX,))[C.T_MAX]
+        C.csv_row(f"table18/m{m}", 0.0, f"acc={acc:.3f}")
+        out[f"m{m}"] = acc
+    return out

@@ -1,0 +1,65 @@
+"""Quickstart: train a compressed-context-memory adapter on a tiny model
+and watch it answer queries whose evidence lives ONLY in compressed memory.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Steps: (1) fine-tune a tiny decoder full-context on the synthetic online
+KV task, (2) train the conditional-LoRA compression adapter (paper Alg. 1),
+(3) run ONLINE inference — contexts arrive chunk by chunk, are compressed
+into <COMP> KV memory (raw KV discarded), then queries are answered from
+memory alone. Compare against no-context accuracy.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "benchmarks")
+sys.path.insert(0, ".")
+
+from benchmarks import common as C
+from repro.core import inference as I
+from repro.data.synthetic import sample_kv_batch
+from repro.models import transformer as T
+
+
+def main(steps: int = 300):
+    print("1) fine-tuning base model (full context)...")
+    base = C.pretrain_base(steps)
+    cfg = C.bench_cfg()
+    print("2) training CCM-concat compression adapter...")
+    params = C.train_compression(base, cfg, steps)
+
+    print("3) online inference with compressed context memory")
+    layout = C.layout_for(C.T_MAX)
+    batch = sample_kv_batch(jax.random.PRNGKey(7), layout, 4, C.TASK)
+    toks = batch["tokens"]
+    state = I.init_online_state(cfg, 4, max_cache_len=32)
+    step = layout.chunk_len + layout.comp_len
+    for j in range(layout.t_steps):
+        chunk = toks[:, j * step:(j + 1) * step - layout.comp_len]
+        state = I.ingest_context(params, cfg, state, chunk)
+        raw = (j + 1) * layout.chunk_len
+        comp = int(state.mem.slots) * cfg.ccm.comp_len
+        print(f"   step {j+1}: context {raw:3d} tokens -> memory "
+              f"{comp:2d} KV slots (compression {raw/comp:.1f}x)")
+    tail = toks[:, layout.t_steps * step:]
+    logits, _ = I.prefill(params, cfg, state, tail, full_logits=True)
+    pred = jnp.argmax(logits[:, :-1], axis=-1)
+    lm = batch["loss_mask"]
+    acc = float(((pred == tail[:, 1:]) * lm).sum() / lm.sum())
+    print(f"   query accuracy FROM MEMORY ONLY: {acc:.3f}")
+
+    # no-context control
+    lo0 = C.M.segment_layout(0, C.CHUNK, C.COMP, C.TAIL)
+    plain = cfg.replace(ccm=cfg.ccm.__class__(enabled=False))
+    lg0 = T.train_forward(base, plain, tail, lo0)
+    pred0 = jnp.argmax(lg0[:, :-1], axis=-1)
+    acc0 = float(((pred0 == tail[:, 1:]) * lm).sum() / lm.sum())
+    print(f"   query accuracy WITHOUT context:  {acc0:.3f}")
+    print("done — compressed memory carries the task information.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Established context-compression baselines (paper §4 comparisons),
+expressed in the same parallelized-training framework as CCM.
+
+  Gisting-online (Mu et al. 2023, adapted to online use as in the paper):
+      each chunk c(j) is compressed INDEPENDENTLY — its <COMP> tokens see
+      only c(j) (not Mem(j-1)); inference concatenates the per-chunk gists.
+      Mask: causal AND (same_seg OR (comp_k AND q in tail)).
+
+  Compressive Transformer (Rae et al. 2020): old raw KV are pooled by a
+      fixed function (mean-pool groups) into a shorter memory; implemented
+      as per-segment virtual slots = mean-pooled raw-KV of that segment,
+      visible to later segments and the tail.
+
+Both train with the same conditional-LoRA budget and compression factor as
+CCM (paper's fair-comparison protocol).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+
+
+def gisting_online_mask(seg_ids: jnp.ndarray, comp_mask: jnp.ndarray,
+                        t_steps: int) -> jnp.ndarray:
+    """(S, S) bool: chunks are independent; gists visible only to the tail;
+    gist tokens see their own chunk only."""
+    S = seg_ids.shape[0]
+    q_idx = jnp.arange(S)[:, None]
+    k_idx = jnp.arange(S)[None, :]
+    causal = k_idx <= q_idx
+    same = seg_ids[:, None] == seg_ids[None, :]
+    tail_q = (seg_ids == t_steps + 1)[:, None]
+    return causal & (same | (comp_mask[None, :] & tail_q))
+
+
+def compressive_virtual_kv(k: jnp.ndarray, v: jnp.ndarray,
+                           seg_ids: jnp.ndarray, comp_mask: jnp.ndarray,
+                           t_steps: int, comp_len: int
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-segment mean-pooled raw KV -> (B, T*m, H, D) memory slots.
+
+    Segment j's chunk (raw tokens only) is pooled into ``comp_len`` slots
+    (pool factor = chunk_len / comp_len — the paper-matched compression
+    rate)."""
+    B, S, H, D = k.shape
+    raw = np.asarray(~np.asarray(comp_mask))
+    segs = np.asarray(seg_ids)
+    m = comp_len
+    slots_k, slots_v = [], []
+    for j in range(1, t_steps + 1):
+        idx = np.nonzero(raw & (segs == j))[0]
+        usable = (len(idx) // m) * m
+        idx = jnp.asarray(idx[:usable])
+        kj = k[:, idx].reshape(B, m, usable // m, H, D).mean(axis=2)
+        vj = v[:, idx].reshape(B, m, usable // m, H, D).mean(axis=2)
+        slots_k.append(kj)
+        slots_v.append(vj)
+    return (jnp.concatenate(slots_k, axis=1),
+            jnp.concatenate(slots_v, axis=1))
+
+
+def compressive_slot_mask(seg_ids: jnp.ndarray, t_steps: int,
+                          comp_len: int) -> jnp.ndarray:
+    """(Q, T*m): segment q attends every pooled slot of segments < seg_q."""
+    slot_seg = jnp.repeat(jnp.arange(1, t_steps + 1), comp_len)[None, :]
+    return slot_seg < seg_ids[:, None]

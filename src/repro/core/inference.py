@@ -1,0 +1,498 @@
+"""Online inference: g_comp / g_update / memory-conditioned decoding.
+
+This is the runtime half of the paper (Eq. 1-3): contexts c(t) arrive and are
+*compressed* (never cached raw); inputs I(t) are prefetched into a bounded KV
+cache attending [Mem(t), I(t)]; decoding attends [Mem(t), cache].
+
+Every function is functional state-in/state-out with fixed shapes, so each
+online step is one jitted XLA program (dry-runnable with ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.core.memory import MemState, init_memory, mem_layers, update_memory
+from repro.distributed.context import DistContext
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.scan_utils import scan_layers
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (L, B, Smax, Hkv, hd) — bf16 or int8 (quantized)
+    v: jnp.ndarray
+    length: jnp.ndarray   # () int32 — filled positions
+    k_scale: Optional[jnp.ndarray] = None   # (L, B, Smax, Hkv) if int8
+    v_scale: Optional[jnp.ndarray] = None
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def quantize_kv(x: jnp.ndarray):
+    """per-(token, head) symmetric int8: x (..., hd) -> (q, scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return q.astype(dtype) * scale[..., None].astype(dtype)
+
+
+class SSMState(NamedTuple):
+    ssm: jnp.ndarray      # (L, B, H, P, N)
+    conv: jnp.ndarray     # (L, B, K-1, C)
+
+
+class OnlineState(NamedTuple):
+    cache: Optional[KVCache] = None
+    mem: Optional[MemState] = None
+    ssm: Optional[SSMState] = None
+    cross: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+    pos: Optional[jnp.ndarray] = None   # () int32 virtual stream position
+
+
+# ---------------------------------------------------------------------------
+# state init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               n_layers: Optional[int] = None) -> KVCache:
+    Lc = n_layers if n_layers is not None else mem_layers(cfg)
+    shape = (max(Lc, 1), batch, max_len, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_dtype == "int8":
+        z = jnp.zeros(shape, jnp.int8)
+        sc = jnp.zeros(shape[:-1], jnp.float32)
+        return KVCache(k=z, v=z, length=jnp.zeros((), jnp.int32),
+                       k_scale=sc, v_scale=sc)
+    z = jnp.zeros(shape, cfg.cdtype)
+    return KVCache(k=z, v=z, length=jnp.zeros((), jnp.int32))
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K, C = cfg.ssm_conv, cfg.d_inner + 2 * cfg.ssm_state
+    Ls = cfg.n_layers
+    return SSMState(
+        ssm=jnp.zeros((Ls, batch, H, P, N), cfg.cdtype),
+        conv=jnp.zeros((Ls, batch, max(K - 1, 1), C), cfg.cdtype))
+
+
+def init_online_state(cfg: ModelConfig, batch: int, max_cache_len: int,
+                      mem_slots: Optional[int] = None) -> OnlineState:
+    st: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("ssm", "hybrid"):
+        st["ssm"] = init_ssm_state(cfg, batch)
+    if cfg.family != "ssm":
+        st["cache"] = init_cache(cfg, batch, max_cache_len)
+        if cfg.ccm.enabled:
+            st["mem"] = init_memory(cfg, batch, mem_slots)
+    return OnlineState(**st)
+
+
+# ---------------------------------------------------------------------------
+# attention over [mem | cache | self] for a block of new tokens
+# ---------------------------------------------------------------------------
+
+def _mem_info(mem_k, valid_tokens) -> A.KeyInfo:
+    Mx = mem_k.shape[1]
+    return A.mem_key_info(Mx, valid=jnp.arange(Mx) < valid_tokens)
+
+
+def _cache_info(cache_k, length) -> A.KeyInfo:
+    Smax = cache_k.shape[1]
+    return A.KeyInfo(idx=jnp.full((Smax,), -1, jnp.int32),
+                     seg=jnp.zeros((Smax,), jnp.int32),
+                     comp=jnp.ones((Smax,), bool),
+                     valid=jnp.arange(Smax) < length)
+
+
+def _attend_online(cfg, q, k_new, v_new, self_info: A.KeyInfo,
+                   q_info: A.KeyInfo,
+                   mem_kv=None, mem_valid=None,
+                   cache_kv=None, cache_len=None, impl=None):
+    """q over [mem?, cache?, self]. k_new/v_new are this block's KV."""
+    ks, vs, infos = [], [], []
+    if mem_kv is not None:
+        mk, mv = mem_kv
+        ks.append(mk); vs.append(mv)
+        infos.append(_mem_info(mk, mem_valid))
+    if cache_kv is not None:
+        ck, cv = cache_kv
+        ks.append(ck); vs.append(cv)
+        infos.append(_cache_info(ck, cache_len))
+    ks.append(k_new); vs.append(v_new); infos.append(self_info)
+    k = jnp.concatenate(ks, axis=1)
+    v = jnp.concatenate(vs, axis=1)
+    info = infos[0]
+    for i in infos[1:]:
+        info = A.concat_info(info, i)
+    return A.attend(cfg, q, k, v, q_info, info, impl=impl)
+
+
+def _write_cache(ck, cv, k_new, v_new, at):
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k_new.astype(ck.dtype), at, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v_new.astype(cv.dtype), at, 1)
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# generic attention-stack pass over new tokens (prefill / decode / compress)
+# ---------------------------------------------------------------------------
+
+def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
+                     comp_gate, q_info, self_info, state: OnlineState,
+                     write_to_cache: bool, collect_comp: Optional[jnp.ndarray],
+                     dist: Optional[DistContext], impl=None):
+    """Runs the layer stack for dense/moe/vlm/encdec families.
+
+    Returns (x, new_cache, comp_kv) where comp_kv is (L, B, m, Hkv, hd)
+    pairs when ``collect_comp`` (bool (S,) selector) is given.
+    """
+    cache, mem = state.cache, state.mem
+    mem_valid = mem.valid_len(cfg.ccm.comp_len) if mem is not None else None
+    cross = state.cross
+    quant = cache is not None and cache.quantized
+
+    def body(h, xs):
+        lp = xs["lp"]
+        ck, cv = xs["ck"], xs["cv"]
+        if quant:
+            ck_f = dequantize_kv(ck, xs["ks"], cfg.cdtype)
+            cv_f = dequantize_kv(cv, xs["vs"], cfg.cdtype)
+        else:
+            ck_f, cv_f = ck, cv
+        hn = L.apply_norm(cfg, lp["ln1"], h)
+        q, k_new, v_new = A.qkv_project(
+            cfg, lp["attn"], hn, comp_gate,
+            positions if cfg.pos_embed == "rope" else None)
+        o = _attend_online(
+            cfg, q, k_new, v_new, self_info, q_info,
+            mem_kv=(xs["mk"], xs["mv"]) if mem is not None else None,
+            mem_valid=mem_valid,
+            cache_kv=(ck_f, cv_f) if cache is not None else None,
+            cache_len=cache.length if cache is not None else None, impl=impl)
+        h = h + A.out_project(cfg, lp["attn"], o, comp_gate)
+        if cross is not None:
+            xk, xv = xs["cross"]
+            hx = L.apply_norm(cfg, lp["ln_x"], h)
+            qx, _, _ = A.qkv_project(cfg, lp["xattn"], hx, None, None)
+            ox = A.attend_dense(qx, xk, xv, None, 1.0 / cfg.hd ** 0.5)
+            h = h + A.out_project(cfg, lp["xattn"], ox, None)
+        hn = L.apply_norm(cfg, lp["ln2"], h)
+        if "moe" in lp:
+            h = h + MOE.apply_moe(cfg, lp["moe"], hn, dist)
+        else:
+            h = h + L.apply_mlp(cfg, lp["mlp"], hn)
+        outs = {}
+        if write_to_cache:
+            if quant:
+                qk, sk = quantize_kv(k_new)
+                qv, sv = quantize_kv(v_new)
+                nk, nv = _write_cache(ck, cv, qk, qv, cache.length)
+                nks = jax.lax.dynamic_update_slice_in_dim(
+                    xs["ks"], sk.astype(xs["ks"].dtype), cache.length, 1)
+                nvs = jax.lax.dynamic_update_slice_in_dim(
+                    xs["vs"], sv.astype(xs["vs"].dtype), cache.length, 1)
+                outs["cache"] = (nk, nv, nks, nvs)
+            else:
+                nk, nv = _write_cache(ck, cv, k_new, v_new, cache.length)
+                outs["cache"] = (nk, nv)
+        if collect_comp is not None:
+            idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0]
+            outs["comp"] = (k_new[:, idx], v_new[:, idx])
+        return h, outs
+
+    xs = {"lp": params["layers"]}
+    if mem is not None:
+        xs["mk"], xs["mv"] = mem.k, mem.v
+    if cache is not None:
+        xs["ck"], xs["cv"] = cache.k, cache.v
+        if quant:
+            xs["ks"], xs["vs"] = cache.k_scale, cache.v_scale
+    else:
+        Ld = jax.tree.leaves(params["layers"])[0].shape[0]
+        xs["ck"] = jnp.zeros((Ld, x.shape[0], 0, cfg.n_kv_heads, cfg.hd),
+                             cfg.cdtype)
+        xs["cv"] = xs["ck"]
+    if cross is not None:
+        xs["cross"] = cross
+    x, outs = scan_layers(cfg.unroll_layers, body, x, xs)
+
+    new_cache = cache
+    if write_to_cache and cache is not None:
+        if quant:
+            nk, nv, nks, nvs = outs["cache"]
+            new_cache = KVCache(k=nk, v=nv, length=cache.length + x.shape[1],
+                                k_scale=nks, v_scale=nvs)
+        else:
+            nk, nv = outs["cache"]
+            new_cache = KVCache(k=nk, v=nv,
+                                length=cache.length + x.shape[1])
+    comp_kv = outs.get("comp") if collect_comp is not None else None
+    return x, new_cache, comp_kv
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid passes
+# ---------------------------------------------------------------------------
+
+def _ssm_stack_pass(params, cfg: ModelConfig, x, state: SSMState,
+                    decode: bool):
+    def body(h, xs):
+        lp, s_ssm, s_conv = xs
+        out, ns = T._mamba_block(cfg, lp, h,
+                                 {"ssm": s_ssm, "conv": s_conv}, decode)
+        return out, (ns["ssm"], ns["conv"])
+
+    x, (n_ssm, n_conv) = scan_layers(
+        cfg.unroll_layers, body, x,
+        (params["layers"], state.ssm, state.conv))
+    return x, SSMState(ssm=n_ssm, conv=n_conv)
+
+
+def _hybrid_pass(params, cfg: ModelConfig, x, positions, *, comp_gate,
+                 q_info, self_info, state: OnlineState, write_to_cache,
+                 collect_comp, dist, decode: bool):
+    """Zamba2: grouped mamba scans + shared attention sites with CCM."""
+    n_groups, g, rem = T._hybrid_sites(cfg)
+    stacked = params["layers"]
+    head = jax.tree.map(lambda a: a[:n_groups * g].reshape(
+        (n_groups, g) + a.shape[1:]), stacked)
+    tail = jax.tree.map(lambda a: a[n_groups * g:], stacked)
+    st_head = jax.tree.map(lambda a: a[:n_groups * g].reshape(
+        (n_groups, g) + a.shape[1:]), state.ssm)
+    st_tail = jax.tree.map(lambda a: a[n_groups * g:], state.ssm)
+    sa = params["shared_attn"]
+    cache, mem = state.cache, state.mem
+    mem_valid = mem.valid_len(cfg.ccm.comp_len) if mem is not None else None
+
+    new_states, new_ck, new_cv, comp_ks, comp_vs = [], [], [], [], []
+    for gi in range(n_groups):
+        grp = jax.tree.map(lambda a: a[gi], head)
+        gst = jax.tree.map(lambda a: a[gi], st_head)
+        x, nst = _ssm_stack_pass(params={"layers": grp}, cfg=cfg, x=x,
+                                 state=SSMState(*gst), decode=decode)
+        new_states.append(nst)
+        # shared attention site gi
+        hn = L.apply_norm(cfg, sa["ln1"], x)
+        q, k_new, v_new = A.qkv_project(
+            cfg, sa["attn"], hn, comp_gate,
+            positions if cfg.pos_embed == "rope" else None)
+        o = _attend_online(
+            cfg, q, k_new, v_new, self_info, q_info,
+            mem_kv=(mem.k[gi], mem.v[gi]) if mem is not None else None,
+            mem_valid=mem_valid,
+            cache_kv=(cache.k[gi], cache.v[gi]) if cache is not None else None,
+            cache_len=cache.length if cache is not None else None)
+        x = x + A.out_project(cfg, sa["attn"], o, comp_gate)
+        hn = L.apply_norm(cfg, sa["ln2"], x)
+        x = x + L.apply_mlp(cfg, sa["mlp"], hn)
+        if write_to_cache and cache is not None:
+            nk, nv = _write_cache(cache.k[gi], cache.v[gi], k_new, v_new,
+                                  cache.length)
+            new_ck.append(nk); new_cv.append(nv)
+        if collect_comp is not None:
+            idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0]
+            comp_ks.append(k_new[:, idx]); comp_vs.append(v_new[:, idx])
+    if rem:
+        x, nst = _ssm_stack_pass(params={"layers": tail}, cfg=cfg, x=x,
+                                 state=SSMState(*st_tail), decode=decode)
+    else:
+        nst = SSMState(*st_tail)
+
+    # reassemble ssm states (n_groups*g + rem layers)
+    grp_ssm = jnp.concatenate([s.ssm for s in new_states]) if new_states \
+        else state.ssm[:0]
+    grp_conv = jnp.concatenate([s.conv for s in new_states]) if new_states \
+        else state.conv[:0]
+    new_ssm = SSMState(ssm=jnp.concatenate([grp_ssm, nst.ssm]),
+                       conv=jnp.concatenate([grp_conv, nst.conv]))
+    new_cache = cache
+    if write_to_cache and cache is not None:
+        new_cache = KVCache(k=jnp.stack(new_ck), v=jnp.stack(new_cv),
+                            length=cache.length + x.shape[1])
+    comp_kv = (jnp.stack(comp_ks), jnp.stack(comp_vs)) if comp_ks else None
+    return x, new_cache, new_ssm, comp_kv
+
+
+# ---------------------------------------------------------------------------
+# public online ops
+# ---------------------------------------------------------------------------
+
+def _embed_block(cfg, params, tokens, positions, comp_mask=None,
+                 comp_offset=None):
+    x = T.embed_tokens(cfg, params, tokens, comp_mask, comp_offset)
+    if cfg.pos_embed == "learned":
+        x = T._add_learned_pos(cfg, params["pos_embed"], x, positions)
+    return x
+
+
+def ingest_context(params, cfg: ModelConfig, state: OnlineState,
+                   chunk_tokens: jnp.ndarray,
+                   dist: Optional[DistContext] = None) -> OnlineState:
+    """Online step for a new context c(t): compress into memory (attention
+    archs), update recurrent states (SSM/hybrid). Raw KV is NOT cached."""
+    B, lc = chunk_tokens.shape
+    m = cfg.ccm.comp_len
+    if cfg.family == "ssm":
+        x = _embed_block(cfg, params, chunk_tokens,
+                         state.pos + jnp.arange(lc))
+        x, new_ssm = _ssm_stack_pass(params, cfg, x, state.ssm, decode=False)
+        return state._replace(ssm=new_ssm, pos=state.pos + lc)
+
+    S = lc + m
+    comp_mask = jnp.arange(S) >= lc
+    comp_off = jnp.maximum(jnp.arange(S) - lc, 0)
+    tokens = jnp.concatenate(
+        [chunk_tokens, jnp.zeros((B, m), chunk_tokens.dtype)], axis=1)
+    positions = state.pos + jnp.arange(S)
+    x = _embed_block(cfg, params, tokens, positions, comp_mask, comp_off)
+    comp_gate = jnp.broadcast_to(comp_mask.astype(cfg.cdtype)[None], (B, S))
+    self_info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32),
+                          seg=jnp.ones((S,), jnp.int32), comp=comp_mask)
+    q_info = self_info
+
+    if cfg.family == "hybrid":
+        x, _, new_ssm, comp_kv = _hybrid_pass(
+            params, cfg, x, positions, comp_gate=comp_gate, q_info=q_info,
+            self_info=self_info, state=state, write_to_cache=False,
+            collect_comp=comp_mask, dist=dist, decode=False)
+        h_k, h_v = comp_kv
+        new_mem = update_memory(cfg, state.mem, h_k, h_v, S)
+        return state._replace(ssm=new_ssm, mem=new_mem, pos=state.pos + S)
+
+    x, _, comp_kv = _attn_stack_pass(
+        params, cfg, x, positions, comp_gate=comp_gate, q_info=q_info,
+        self_info=self_info, state=state, write_to_cache=False,
+        collect_comp=comp_mask, dist=dist)
+    h_k, h_v = comp_kv
+    new_mem = update_memory(cfg, state.mem, h_k, h_v, S)
+    return state._replace(mem=new_mem, pos=state.pos + S)
+
+
+def prefill(params, cfg: ModelConfig, state: OnlineState,
+            tokens: jnp.ndarray, dist: Optional[DistContext] = None,
+            patches: Optional[jnp.ndarray] = None,
+            impl: Optional[str] = None, full_logits: bool = False):
+    """Process input I(t) attending [Mem(t), self-causal]; KV cached.
+
+    Returns (logits, new_state) — last position only unless full_logits."""
+    B, S = tokens.shape
+    positions = state.pos + jnp.arange(S)
+    x = _embed_block(cfg, params, tokens, positions)
+    if patches is not None:
+        pe = patches.astype(cfg.cdtype) @ params["frontend"]["proj"].astype(cfg.cdtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    if cfg.family == "ssm":
+        x, new_ssm = _ssm_stack_pass(params, cfg, x, state.ssm, decode=False)
+        logits = T.lm_logits(params, cfg, x if full_logits else x[:, -1:])
+        return logits, state._replace(ssm=new_ssm, pos=state.pos + S)
+
+    self_info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32),
+                          seg=jnp.ones((S,), jnp.int32),
+                          comp=jnp.zeros((S,), bool))
+    q_info = self_info
+    if cfg.family == "hybrid":
+        x, new_cache, new_ssm, _ = _hybrid_pass(
+            params, cfg, x, positions, comp_gate=None, q_info=q_info,
+            self_info=self_info, state=state, write_to_cache=True,
+            collect_comp=None, dist=dist, decode=False)
+        logits = T.lm_logits(params, cfg, x if full_logits else x[:, -1:])
+        return logits, state._replace(cache=new_cache, ssm=new_ssm,
+                                      pos=state.pos + S)
+    x, new_cache, _ = _attn_stack_pass(
+        params, cfg, x, positions, comp_gate=None, q_info=q_info,
+        self_info=self_info, state=state, write_to_cache=True,
+        collect_comp=None, dist=dist, impl=impl)
+    logits = T.lm_logits(params, cfg, x if full_logits else x[:, -1:])
+    return logits, state._replace(cache=new_cache, pos=state.pos + S)
+
+
+def decode_step(params, cfg: ModelConfig, state: OnlineState,
+                tokens: jnp.ndarray, dist: Optional[DistContext] = None):
+    """One-token decode attending [Mem, cache, self]. tokens (B, 1)."""
+    B, S = tokens.shape
+    positions = state.pos + jnp.arange(S)
+    x = _embed_block(cfg, params, tokens, positions)
+    if cfg.family == "ssm":
+        x, new_ssm = _ssm_stack_pass(params, cfg, x, state.ssm, decode=True)
+        logits = T.lm_logits(params, cfg, x)
+        return logits, state._replace(ssm=new_ssm, pos=state.pos + S)
+
+    big = jnp.full((S,), 2 ** 30, jnp.int32)
+    self_info = A.KeyInfo(idx=big + jnp.arange(S, dtype=jnp.int32),
+                          seg=jnp.ones((S,), jnp.int32),
+                          comp=jnp.zeros((S,), bool))
+    q_info = self_info
+    if cfg.family == "hybrid":
+        x, new_cache, new_ssm, _ = _hybrid_pass(
+            params, cfg, x, positions, comp_gate=None, q_info=q_info,
+            self_info=self_info, state=state, write_to_cache=True,
+            collect_comp=None, dist=dist, decode=True)
+        logits = T.lm_logits(params, cfg, x)
+        return logits, state._replace(cache=new_cache, ssm=new_ssm,
+                                      pos=state.pos + S)
+    x, new_cache, _ = _attn_stack_pass(
+        params, cfg, x, positions, comp_gate=None, q_info=q_info,
+        self_info=self_info, state=state, write_to_cache=True,
+        collect_comp=None, dist=dist)
+    logits = T.lm_logits(params, cfg, x)
+    return logits, state._replace(cache=new_cache, pos=state.pos + S)
+
+
+def encode_cross(params, cfg: ModelConfig, frames: jnp.ndarray):
+    """Whisper: run encoder once, produce per-decoder-layer cross K/V."""
+    enc_out = T.encode(params, cfg, frames)
+
+    def kv(lp):
+        _, k, v = A.qkv_project(cfg, {"wq": lp["wq"], "wk": lp["wk"],
+                                      "wv": lp["wv"], "wo": lp["wo"]},
+                                enc_out, None, None)
+        return k, v
+
+    xattn = params["layers"]["xattn"]
+    ks, vs = jax.vmap(kv)(xattn)
+    return ks, vs
+
+
+def generate(params, cfg: ModelConfig, state: OnlineState,
+             prompt: jnp.ndarray, max_new: int,
+             dist: Optional[DistContext] = None,
+             temperature: float = 0.0, key: Optional[jax.Array] = None):
+    """Greedy/temperature sampling loop (lax.scan over decode steps)."""
+    logits, state = prefill(params, cfg, state, prompt, dist)
+    first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    def step(carry, i):
+        st, tok, k = carry
+        lg, st = decode_step(params, cfg, st, tok[:, None], dist)
+        lg = lg[:, -1]
+        if temperature > 0:
+            k, sub = jax.random.split(k)
+            nxt = jax.random.categorical(sub, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return (st, nxt.astype(jnp.int32), k), nxt
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    (_, _, _), toks = jax.lax.scan(step, (state, first, key),
+                                   jnp.arange(max_new - 1))
+    toks = jnp.concatenate([first[None], toks], axis=0)   # (max_new, B)
+    return toks.swapaxes(0, 1)

@@ -1,0 +1,63 @@
+"""Conditional LoRA (paper Eq. 4 / Fig. 4).
+
+``x' = W x + m * (DeltaW) x`` with ``m = 1(x is <COMP>)``: the low-rank delta
+fires only at <COMP>-token rows, so compression capability lives entirely in
+``delta_theta`` and never perturbs normal-token computation.
+
+TPU adaptation: instead of gathering <COMP> rows (layout-hostile), the gate is
+fused multiplicatively — dense, branch-free, MXU-friendly. The rank-r
+intermediate is tiny (r = 8..16). ``repro.kernels.cond_lora`` provides the
+fused Pallas kernel; this module is the reference / CPU implementation and
+the parameter plumbing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_lora(key: jax.Array, d_in: int, d_out: int, rank: int,
+              dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """A ~ N(0, 1/d_in); B = 0 so the delta starts at zero."""
+    a = jax.random.normal(key, (rank, d_in), dtype) / jnp.sqrt(d_in)
+    b = jnp.zeros((rank, d_out), dtype)
+    return {"a": a, "b": b}
+
+
+def lora_delta(x: jnp.ndarray, lora: Dict[str, jnp.ndarray],
+               scale: float) -> jnp.ndarray:
+    """(x @ A^T) @ B * scale, computed in x.dtype."""
+    a = lora["a"].astype(x.dtype)
+    b = lora["b"].astype(x.dtype)
+    return ((x @ a.T) @ b) * jnp.asarray(scale, x.dtype)
+
+
+def cond_linear(x: jnp.ndarray, w: jnp.ndarray,
+                lora: Optional[Dict[str, jnp.ndarray]],
+                gate: Optional[jnp.ndarray],
+                scale: float = 2.0,
+                bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """y = x @ W (+bias) + gate * ((x @ A^T) @ B) * scale.
+
+    x: (..., d_in); w: (d_in, d_out); gate: (...,) in {0.,1.} or None for
+    unconditional LoRA (the paper's "default LoRA" ablation).
+    """
+    y = x @ w.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    if lora is not None:
+        d = lora_delta(x, lora, scale)
+        if gate is not None:
+            d = d * gate[..., None].astype(x.dtype)
+        y = y + d
+    return y
+
+
+def lora_scale(rank: int, alpha: float) -> float:
+    return float(alpha) / float(rank)
+
+
+def tree_zeros_like_lora(lora_tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, lora_tree)

@@ -1,0 +1,192 @@
+"""CCM segment layout and attention-mask primitives.
+
+Parallel-training layout (paper Fig. 3) for ``t`` online steps, ``m``
+<COMP> tokens per step and an input/output tail::
+
+    [ c(1) <COMP>^m | c(2) <COMP>^m | ... | c(t) <COMP>^m | I(t) O(t) ]
+      seg=1           seg=2                 seg=t           seg=t+1
+
+Mask rule (CCM-concat), equivalent to "c(j) sees only Mem(j-1); <COMP>_j
+compresses c(j) given Mem(j-1); I(t) sees only Mem(t)":
+
+    allow(q, k) = (k <= q) and (seg_k == seg_q or comp_k)
+
+CCM-merge replaces the per-segment <COMP> keys by *virtual memory slots*
+holding the running (weighted) average of the compressed states; queries of
+segment ``j`` may attend only slot ``j-1``.
+
+All helpers are pure jnp and shape-polymorphic; per-batch layouts are uniform
+(a single 1-D ``seg_ids``/``comp_mask`` describes the whole batch), padding
+inside chunks is handled with a key-padding mask.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+class SegmentLayout(NamedTuple):
+    """Static description of one CCM training sequence."""
+
+    seg_ids: jnp.ndarray    # (S,) int32, 1..t+1
+    comp_mask: jnp.ndarray  # (S,) bool, True at <COMP> positions
+    positions: jnp.ndarray  # (S,) int32, RoPE position ids (memory-reassigned)
+    t_steps: int
+    comp_len: int
+    chunk_len: int
+    tail_len: int
+
+    @property
+    def seq_len(self) -> int:
+        return int(self.seg_ids.shape[0])
+
+
+def segment_layout(t_steps: int, chunk_len: int, comp_len: int,
+                   tail_len: int, mode: str = "concat") -> SegmentLayout:
+    """Build the uniform parallel-training layout.
+
+    ``chunk_len`` counts the raw tokens of each c(j) (excl. <COMP>).
+
+    Positions are the *packed* indices 0..S-1: the parallel training pass is
+    then an exact unroll of the recursion where inference maintains a virtual
+    stream-position counter covering every token ever processed (contexts and
+    <COMP> tokens alike) — identical RoPE phases train vs. online.
+    """
+    segs, comps = [], []
+    m = comp_len
+    for j in range(1, t_steps + 1):
+        seg_len = chunk_len + m
+        segs.append(np.full(seg_len, j, np.int32))
+        comps.append(np.concatenate([np.zeros(chunk_len, bool), np.ones(m, bool)]))
+    segs.append(np.full(tail_len, t_steps + 1, np.int32))
+    comps.append(np.zeros(tail_len, bool))
+    total = t_steps * (chunk_len + m) + tail_len
+    poss = [np.arange(total, dtype=np.int32)]
+    del mode
+    return SegmentLayout(
+        seg_ids=jnp.asarray(np.concatenate(segs)),
+        comp_mask=jnp.asarray(np.concatenate(comps)),
+        positions=jnp.asarray(np.concatenate(poss)),
+        t_steps=t_steps, comp_len=comp_len,
+        chunk_len=chunk_len, tail_len=tail_len)
+
+
+# ---------------------------------------------------------------------------
+# mask builders
+# ---------------------------------------------------------------------------
+
+def comp_offset_array(comp_mask: jnp.ndarray) -> jnp.ndarray:
+    """(S,) offset of each <COMP> token within its group (0 elsewhere).
+
+    Used to select the per-offset <COMP> embedding (a group of length m has
+    m distinct learned embeddings, shared across time steps — paper §B).
+    """
+    cm = np.asarray(comp_mask)
+    out = np.zeros_like(cm, dtype=np.int32)
+    run = 0
+    for i, c in enumerate(cm):
+        run = run + 1 if c else 0
+        out[i] = max(run - 1, 0)
+    return jnp.asarray(out)
+
+
+def ccm_mask_concat(seg_ids: jnp.ndarray, comp_mask: jnp.ndarray,
+                    k_seg_ids: Optional[jnp.ndarray] = None,
+                    k_comp_mask: Optional[jnp.ndarray] = None,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Boolean (Q, K) mask: causal AND (same segment OR key-is-<COMP>).
+
+    ``q_offset`` shifts query indices relative to keys (for incremental
+    evaluation where queries are a suffix of the key sequence).
+    """
+    k_seg_ids = seg_ids if k_seg_ids is None else k_seg_ids
+    k_comp_mask = comp_mask if k_comp_mask is None else k_comp_mask
+    q_idx = jnp.arange(seg_ids.shape[0])[:, None] + q_offset
+    k_idx = jnp.arange(k_seg_ids.shape[0])[None, :]
+    causal = k_idx <= q_idx
+    same_seg = seg_ids[:, None] == k_seg_ids[None, :]
+    return causal & (same_seg | k_comp_mask[None, :])
+
+
+def causal_mask(q_len: int, k_len: int, q_offset: int = 0) -> jnp.ndarray:
+    q = jnp.arange(q_len)[:, None] + q_offset
+    k = jnp.arange(k_len)[None, :]
+    return k <= q
+
+
+def merge_slot_mask(seg_ids: jnp.ndarray, t_steps: int) -> jnp.ndarray:
+    """(Q, T) mask over virtual memory slots: seg j attends slot j-1 only.
+
+    Slot index s (0-based) holds Mem(s+1) = avg(h(1..s+1)); a query in
+    segment j uses Mem(j-1) -> slot j-2. The tail segment t+1 uses Mem(t)
+    -> slot t-1.
+    """
+    slot = jnp.arange(1, t_steps + 1)[None, :]  # slot s holds Mem(s)
+    want = (seg_ids - 1)[:, None]               # segment j wants Mem(j-1)
+    return slot == want
+
+
+def intra_segment_causal(seg_ids: jnp.ndarray,
+                         comp_mask: jnp.ndarray) -> jnp.ndarray:
+    """(Q, K) raw-key mask used in merge mode: causal AND same segment."""
+    q_idx = jnp.arange(seg_ids.shape[0])[:, None]
+    k_idx = jnp.arange(seg_ids.shape[0])[None, :]
+    return (k_idx <= q_idx) & (seg_ids[:, None] == seg_ids[None, :])
+
+
+# ---------------------------------------------------------------------------
+# merge-mode virtual slots
+# ---------------------------------------------------------------------------
+
+def merge_coefficients(t_steps: int, alpha: Optional[float]) -> jnp.ndarray:
+    """(T, T) lower-triangular weights W[j, i] s.t. Mem(j+1)=sum_i W[j,i] h(i+1).
+
+    alpha=None  -> arithmetic mean  W[j, i<=j] = 1/(j+1)
+    alpha=a     -> EMA: Mem(t) = (1-a) Mem(t-1) + a h(t), a_1 = 1.
+    """
+    t = t_steps
+    if alpha is None:
+        w = np.tril(np.ones((t, t))) / np.arange(1, t + 1)[:, None]
+    else:
+        w = np.zeros((t, t))
+        for j in range(t):
+            for i in range(j + 1):
+                coef = 1.0 if i == 0 else alpha
+                coef *= (1.0 - alpha) ** (j - i)
+                w[j, i] = coef
+    return jnp.asarray(w, jnp.float32)
+
+
+def merge_virtual_kv(k: jnp.ndarray, v: jnp.ndarray,
+                     comp_mask: jnp.ndarray, t_steps: int, comp_len: int,
+                     alpha: Optional[float]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build virtual memory-slot KV for merge-mode parallel training.
+
+    k, v: (B, S, H, D) per-layer attention keys/values.
+    Returns (B, T*comp_len, H, D) slot keys/values where slot j (0-based,
+    holding Mem(j+1)) is the weighted average of the <COMP>-group KVs of
+    segments 1..j+1.
+    """
+    B, S, H, D = k.shape
+    m = comp_len
+    idx = jnp.nonzero(comp_mask, size=t_steps * m)[0]       # static layout
+    hk = k[:, idx].reshape(B, t_steps, m, H, D)
+    hv = v[:, idx].reshape(B, t_steps, m, H, D)
+    w = merge_coefficients(t_steps, alpha).astype(k.dtype)  # (T, T)
+    mem_k = jnp.einsum("ji,bimhd->bjmhd", w, hk).reshape(B, t_steps * m, H, D)
+    mem_v = jnp.einsum("ji,bimhd->bjmhd", w, hv).reshape(B, t_steps * m, H, D)
+    return mem_k, mem_v
+
+
+def expand_slot_mask(slot_mask: jnp.ndarray, comp_len: int) -> jnp.ndarray:
+    """(Q, T) -> (Q, T*comp_len) by repeating each slot column."""
+    return jnp.repeat(slot_mask, comp_len, axis=1)
+
+
+def apply_mask(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Additive -inf masking; mask broadcastable to logits."""
+    return jnp.where(mask, logits, NEG_INF)

@@ -1,0 +1,99 @@
+"""Compressed context memory state + update functions (paper Eq. 1-2).
+
+Fixed-shape functional state so every online step is a single jitted XLA
+program:
+
+  concat: k/v (L, B, T*m, Hkv, hd); ``slots`` counts filled <COMP> groups.
+  merge : k/v (L, B,   m, Hkv, hd); running (weighted) average; ``steps``
+          tracks t for the a_t = 1/t arithmetic-mean coefficient.
+
+Also holds the virtual stream-position counter ``stream_pos`` (total tokens
+ever processed, contexts + <COMP> alike) so online RoPE phases match the
+parallel-training unroll exactly (see masks.segment_layout docstring).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class MemState(NamedTuple):
+    k: jnp.ndarray            # (L, B, M, Hkv, hd)
+    v: jnp.ndarray            # (L, B, M, Hkv, hd)
+    slots: jnp.ndarray        # () int32 — filled <COMP> groups (concat)
+    steps: jnp.ndarray        # () int32 — online time step t
+    stream_pos: jnp.ndarray   # () int32 — virtual stream position
+
+    def max_slots(self, comp_len: int) -> int:
+        return self.k.shape[2] // comp_len
+
+    def valid_len(self, comp_len: int) -> jnp.ndarray:
+        return self.slots * comp_len
+
+
+def mem_layers(cfg: ModelConfig) -> int:
+    """Number of attention layers that carry CCM memory."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every   # shared-attn sites
+    if cfg.family == "encdec":
+        return cfg.n_layers                     # decoder self-attn
+    if cfg.family == "ssm":
+        return 0
+    return cfg.n_layers
+
+
+def init_memory(cfg: ModelConfig, batch: int,
+                max_slots: Optional[int] = None,
+                dtype=None) -> MemState:
+    L = max(mem_layers(cfg), 1)
+    m = cfg.ccm.comp_len
+    if max_slots is None:
+        max_slots = cfg.ccm.mem_slots
+    if cfg.ccm.mode == "merge":
+        max_slots = 1
+    shape = (L, batch, max_slots * m, cfg.n_kv_heads, cfg.hd)
+    dt = dtype or cfg.cdtype
+    z = jnp.zeros(shape, dt)
+    zero = jnp.zeros((), jnp.int32)
+    return MemState(k=z, v=z, slots=zero, steps=zero, stream_pos=zero)
+
+
+def update_memory(cfg: ModelConfig, mem: MemState, h_k: jnp.ndarray,
+                  h_v: jnp.ndarray, n_new_tokens: jnp.ndarray) -> MemState:
+    """Apply g_update with the new compressed state h(t).
+
+    h_k/h_v: (L, B, m, Hkv, hd) — the <COMP> keys/values from g_comp.
+    n_new_tokens: tokens consumed this step (context + m), advances the
+    virtual stream position.
+    """
+    m = cfg.ccm.comp_len
+    t_new = mem.steps + 1
+    if cfg.ccm.mode == "merge":
+        if cfg.ccm.merge_alpha is None:
+            a = 1.0 / t_new.astype(jnp.float32)          # arithmetic mean
+        else:
+            a = jnp.where(t_new == 1, 1.0, cfg.ccm.merge_alpha)
+        a = a.astype(mem.k.dtype)
+        new_k = mem.k * (1 - a) + h_k.astype(mem.k.dtype) * a
+        new_v = mem.v * (1 - a) + h_v.astype(mem.v.dtype) * a
+        slots = jnp.ones((), jnp.int32)
+    else:
+        start = mem.slots * m
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            mem.k, h_k.astype(mem.k.dtype), start, axis=2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            mem.v, h_v.astype(mem.v.dtype), start, axis=2)
+        slots = jnp.minimum(mem.slots + 1, mem.max_slots(m))
+    return MemState(k=new_k, v=new_v, slots=slots, steps=t_new,
+                    stream_pos=mem.stream_pos + n_new_tokens)
+
+
+def evict_oldest(mem: MemState, comp_len: int) -> MemState:
+    """Concat-mode streaming: drop the oldest <COMP> group (paper Fig. 9)."""
+    k = jnp.roll(mem.k, -comp_len, axis=2)
+    v = jnp.roll(mem.v, -comp_len, axis=2)
+    return mem._replace(k=k, v=v, slots=jnp.maximum(mem.slots - 1, 0))

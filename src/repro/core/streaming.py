@@ -1,0 +1,190 @@
+"""Streaming inference: sliding window + attention sink + CCM (paper Fig. 9).
+
+StreamingLLM keeps [sink | recent window] and *drops* evicted tokens; CCM
+instead *compresses* the evicted block into the compressed memory with a
+forward pass of only the m <COMP> tokens attending [Mem, evicted-block KV] —
+O(m) compute per eviction, reusing the KV already in the cache. When the
+concat memory itself is full, the oldest <COMP> group is emitted
+(paper: "emit the oldest compressed key/value pair").
+
+Positions are the monotone virtual-stream ids (train-consistent; see
+masks.segment_layout). DESIGN §7 records this deviation from the paper's
+per-step position reassignment.
+
+Every op is fixed-shape/functional: the whole streaming step (conditional
+compression + window shift + chunk prefill) is one jitted XLA program.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.core.memory import MemState, evict_oldest, init_memory, update_memory
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.models.scan_utils import scan_layers
+from repro.models.config import ModelConfig
+
+
+class StreamState(NamedTuple):
+    win_k: jnp.ndarray    # (L, B, W, Hkv, hd)
+    win_v: jnp.ndarray
+    win_len: jnp.ndarray  # () int32
+    mem: MemState
+    pos: jnp.ndarray      # () int32 virtual stream position
+
+
+def init_stream_state(cfg: ModelConfig, batch: int) -> StreamState:
+    c = cfg.ccm
+    from repro.core.memory import mem_layers
+    Lc = max(mem_layers(cfg), 1)
+    W = c.stream_window
+    z = jnp.zeros((Lc, batch, W, cfg.n_kv_heads, cfg.hd), cfg.cdtype)
+    return StreamState(win_k=z, win_v=z,
+                       win_len=jnp.zeros((), jnp.int32),
+                       mem=init_memory(cfg, batch, c.stream_mem_slots),
+                       pos=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# compression from cached KV (no re-embedding of evicted tokens)
+# ---------------------------------------------------------------------------
+
+def compress_from_kv(params, cfg: ModelConfig, mem: MemState,
+                     blk_k: jnp.ndarray, blk_v: jnp.ndarray,
+                     pos0: jnp.ndarray) -> MemState:
+    """Run m <COMP> tokens through the stack attending [Mem, block KV].
+
+    blk_k/blk_v: (L, B, cc, Hkv, hd) — the KV of the tokens being evicted.
+    """
+    m = cfg.ccm.comp_len
+    B = blk_k.shape[1]
+    off = jnp.arange(m, dtype=jnp.int32)
+    x = jnp.take(params["comp_embed"].astype(cfg.cdtype), off, axis=0)
+    x = jnp.broadcast_to(x[None], (B, m, x.shape[-1]))
+    positions = pos0 + off
+    gate = jnp.ones((B, m), cfg.cdtype)
+    self_info = A.KeyInfo(idx=jnp.arange(m, dtype=jnp.int32),
+                          seg=jnp.ones((m,), jnp.int32),
+                          comp=jnp.ones((m,), bool))
+    mem_valid = mem.valid_len(m)
+
+    def body(h, xs):
+        lp, bk, bv, mk, mv = xs
+        hn = L.apply_norm(cfg, lp["ln1"], h)
+        q, k_new, v_new = A.qkv_project(
+            cfg, lp["attn"], hn, gate,
+            positions if cfg.pos_embed == "rope" else None)
+        Mx = mk.shape[1]
+        blk_info = A.KeyInfo(idx=jnp.full((bk.shape[1],), -1, jnp.int32),
+                             seg=jnp.zeros((bk.shape[1],), jnp.int32),
+                             comp=jnp.ones((bk.shape[1],), bool))
+        mem_info = A.mem_key_info(Mx, valid=jnp.arange(Mx) < mem_valid)
+        info = A.concat_info(A.concat_info(mem_info, blk_info), self_info)
+        kk = jnp.concatenate([mk, bk, k_new], axis=1)
+        vv = jnp.concatenate([mv, bv, v_new], axis=1)
+        o = A.attend(cfg, q, kk, vv, self_info, info)
+        h = h + A.out_project(cfg, lp["attn"], o, gate)
+        hn = L.apply_norm(cfg, lp["ln2"], h)
+        if "moe" in lp:
+            h = h + MOE.apply_moe(cfg, lp["moe"], hn, None)
+        else:
+            h = h + L.apply_mlp(cfg, lp["mlp"], hn)
+        return h, (k_new, v_new)
+
+    _, (hk, hv) = scan_layers(
+        cfg.unroll_layers, body, x,
+        (params["layers"], blk_k, blk_v, mem.k, mem.v))
+    full = mem.slots >= mem.max_slots(m)
+    mem = jax.lax.cond(full, lambda mm: evict_oldest(mm, m),
+                       lambda mm: mm, mem)
+    return update_memory(cfg, mem, hk, hv, m)
+
+
+# ---------------------------------------------------------------------------
+# streaming step
+# ---------------------------------------------------------------------------
+
+def stream_step(params, cfg: ModelConfig, st: StreamState,
+                chunk_tokens: jnp.ndarray,
+                ccm_on: bool = True) -> Tuple[jnp.ndarray, StreamState]:
+    """Process ``c`` new tokens: maybe compress+evict, then prefill into the
+    window attending [Mem, sink+window, self]. Returns per-token logits.
+
+    ccm_on=False reproduces the StreamingLLM baseline (evict = drop), with
+    an identical KV budget for fair comparison (paper Fig. 8).
+    """
+    B, c = chunk_tokens.shape
+    cc = cfg.ccm.stream_chunk
+    sink = cfg.ccm.stream_sink
+    W = cfg.ccm.stream_window
+
+    def do_evict(s: StreamState) -> StreamState:
+        if ccm_on:
+            blk_k = jax.lax.dynamic_slice_in_dim(s.win_k, sink, cc, axis=2)
+            blk_v = jax.lax.dynamic_slice_in_dim(s.win_v, sink, cc, axis=2)
+            new_mem = compress_from_kv(params, cfg, s.mem, blk_k, blk_v,
+                                       s.pos)
+        else:
+            new_mem = s.mem
+        # shift [sink+cc, W) left by cc
+        def shift(a):
+            head = a[:, :, :sink]
+            tail = a[:, :, sink + cc:]
+            pad = jnp.zeros_like(a[:, :, :cc])
+            return jnp.concatenate([head, tail, pad], axis=2)
+        return StreamState(win_k=shift(s.win_k), win_v=shift(s.win_v),
+                           win_len=s.win_len - cc, mem=new_mem,
+                           pos=s.pos + (cfg.ccm.comp_len if ccm_on else 0))
+
+    st = jax.lax.cond(st.win_len + c > W, do_evict, lambda s: s, st)
+
+    positions = st.pos + jnp.arange(c)
+    x = T.embed_tokens(cfg, params, chunk_tokens)
+    if cfg.pos_embed == "learned":
+        x = T._add_learned_pos(cfg, params["pos_embed"], x, positions)
+    self_info = A.KeyInfo(idx=jnp.arange(c, dtype=jnp.int32),
+                          seg=jnp.ones((c,), jnp.int32),
+                          comp=jnp.zeros((c,), bool))
+    mem_valid = st.mem.valid_len(cfg.ccm.comp_len)
+
+    def body(h, xs):
+        lp, wk, wv, mk, mv = xs
+        hn = L.apply_norm(cfg, lp["ln1"], h)
+        q, k_new, v_new = A.qkv_project(
+            cfg, lp["attn"], hn, None,
+            positions if cfg.pos_embed == "rope" else None)
+        win_info = A.KeyInfo(idx=jnp.full((W,), -1, jnp.int32),
+                             seg=jnp.zeros((W,), jnp.int32),
+                             comp=jnp.ones((W,), bool),
+                             valid=jnp.arange(W) < st.win_len)
+        mem_info = A.mem_key_info(mk.shape[1],
+                                  valid=jnp.arange(mk.shape[1]) < mem_valid)
+        info = A.concat_info(A.concat_info(mem_info, win_info), self_info)
+        kk = jnp.concatenate([mk, wk, k_new], axis=1)
+        vv = jnp.concatenate([mv, wv, v_new], axis=1)
+        o = A.attend(cfg, q, kk, vv, self_info, info)
+        h = h + A.out_project(cfg, lp["attn"], o, None)
+        hn = L.apply_norm(cfg, lp["ln2"], h)
+        if "moe" in lp:
+            h = h + MOE.apply_moe(cfg, lp["moe"], hn, None)
+        else:
+            h = h + L.apply_mlp(cfg, lp["mlp"], hn)
+        nwk = jax.lax.dynamic_update_slice_in_dim(
+            wk, k_new.astype(wk.dtype), st.win_len, axis=1)
+        nwv = jax.lax.dynamic_update_slice_in_dim(
+            wv, v_new.astype(wv.dtype), st.win_len, axis=1)
+        return h, (nwk, nwv)
+
+    x, (nk, nv) = scan_layers(
+        cfg.unroll_layers, body, x,
+        (params["layers"], st.win_k, st.win_v, st.mem.k, st.mem.v))
+    logits = T.lm_logits(params, cfg, x)
+    st = StreamState(win_k=nk, win_v=nv, win_len=st.win_len + c,
+                     mem=st.mem, pos=st.pos + c)
+    return logits, st

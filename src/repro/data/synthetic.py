@@ -1,0 +1,142 @@
+"""Synthetic online-interaction data (MetaICL/LaMP-shaped), fully on-device.
+
+Each batch element is an *identity* with a hidden key->value mapping.
+Context chunks c(j) show (key, value) demonstration pairs; the tail
+interleaves query keys with answer values. A model that compresses context
+well answers queries whose evidence appeared in earlier chunks — exactly the
+paper's multi-task/personalization setup, but deterministic and dataless so
+tests, examples and benchmarks can validate compression quality (loss with
+memory must beat loss without).
+
+Token map: 0 pad | 1 <COMP> placeholder | 2 bos | 3 sep |
+           keys   [4, 4+n_keys) | values [4+n_keys, 4+n_keys+n_vals)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import SegmentLayout
+
+PAD, COMP, BOS, SEP = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class KVTaskConfig:
+    n_keys: int = 32
+    n_vals: int = 32
+
+    @property
+    def min_vocab(self) -> int:
+        return 4 + self.n_keys + self.n_vals
+
+    def key_id(self, k):
+        return 4 + k
+
+    def val_id(self, v):
+        return 4 + self.n_keys + v
+
+
+def sample_kv_batch(key: jax.Array, layout: SegmentLayout, batch: int,
+                    task: KVTaskConfig = KVTaskConfig()) -> Dict[str, jnp.ndarray]:
+    """Returns {'tokens': (B,S) i32, 'loss_mask': (B, tail-1) f32}.
+
+    loss positions: tail even offsets (predict the value following each
+    query key). Keys queried in the tail are drawn from keys shown in the
+    context chunks, so the answer is in Mem — compressible signal.
+    """
+    t, lc, m, tail = (layout.t_steps, layout.chunk_len, layout.comp_len,
+                      layout.tail_len)
+    n_pairs = lc // 2
+    kmap, kctx, kq = jax.random.split(key, 3)
+    # identity mapping: value for each key, per batch element
+    mapping = jax.random.randint(kmap, (batch, task.n_keys), 0, task.n_vals)
+    # context demonstrations: (B, t, n_pairs) keys — distinct within a chunk
+    ctx_keys = jax.vmap(jax.vmap(
+        lambda k: jax.random.permutation(k, task.n_keys)[:n_pairs]))(
+        jax.random.split(kctx, batch * t).reshape(batch, t, 2))
+    ctx_vals = jnp.take_along_axis(
+        mapping[:, None, :].repeat(t, 1), ctx_keys, axis=2)
+    pair = jnp.stack([task.key_id(ctx_keys), task.val_id(ctx_vals)], axis=-1)
+    chunk = pair.reshape(batch, t, 2 * n_pairs)
+    if lc > 2 * n_pairs:
+        chunk = jnp.concatenate(
+            [chunk, jnp.full((batch, t, lc - 2 * n_pairs), SEP,
+                             jnp.int32)], axis=-1)
+    comp_toks = jnp.full((batch, t, m), COMP, jnp.int32)
+    body = jnp.concatenate([chunk, comp_toks], axis=-1).reshape(batch, -1)
+    # tail: query keys = DISTINCT positions of keys seen in context
+    # (sampling with replacement would let later tail queries copy earlier
+    # tail answers, contaminating the no-context control)
+    n_q = tail // 2
+    flat_ctx = ctx_keys.reshape(batch, -1)
+    reps = -(-n_q // flat_ctx.shape[1])   # tile if more queries than context
+
+    def _pick(k):
+        perm = jax.random.permutation(k, flat_ctx.shape[1])
+        return jnp.tile(perm, reps)[:n_q]
+
+    pick = jax.vmap(_pick)(jax.random.split(kq, batch))
+    q_keys = jnp.take_along_axis(flat_ctx, pick, axis=1)
+    q_vals = jnp.take_along_axis(mapping, q_keys, axis=1)
+    qa = jnp.stack([task.key_id(q_keys), task.val_id(q_vals)],
+                   axis=-1).reshape(batch, 2 * n_q)
+    if tail > 2 * n_q:
+        qa = jnp.concatenate(
+            [qa, jnp.full((batch, tail - 2 * n_q), PAD, jnp.int32)], axis=-1)
+    tokens = jnp.concatenate([body, qa], axis=-1).astype(jnp.int32)
+    # next-token loss over tail[:-1]: predict values at even offsets
+    off = np.arange(tail - 1)
+    lm = ((off % 2 == 0) & (off < 2 * n_q - 1)).astype(np.float32)
+    loss_mask = jnp.broadcast_to(jnp.asarray(lm)[None], (batch, tail - 1))
+    return {"tokens": tokens, "loss_mask": loss_mask}
+
+
+def lm_stream(key: jax.Array, batch: int, length: int, vocab: int,
+              period: int = 97) -> jnp.ndarray:
+    """Semi-predictable token stream (noisy periodic pattern) for streaming
+    / perplexity benchmarks: position-dependent structure a compressor can
+    exploit."""
+    base = (jnp.arange(length) % period)[None, :] + 4
+    noise = jax.random.randint(key, (batch, length), 0, vocab // 8)
+    mix = jax.random.bernoulli(jax.random.fold_in(key, 1),
+                               0.2, (batch, length))
+    toks = jnp.where(mix, 4 + noise, base)
+    return jnp.clip(toks, 0, vocab - 1).astype(jnp.int32)
+
+
+class ShardableIndexIterator:
+    """Stateless-indexable data iterator: restart/elastic-safe.
+
+    ``state = (epoch, step)`` is checkpointed; every host derives its shard
+    deterministically from (seed, epoch, step, host_id) — a restarted or
+    re-scaled job resumes mid-epoch without coordination (DESIGN §6
+    straggler/fault notes).
+    """
+
+    def __init__(self, seed: int, batch_per_host: int, n_hosts: int = 1,
+                 host_id: int = 0):
+        self.seed, self.bph = seed, batch_per_host
+        self.n_hosts, self.host_id = n_hosts, host_id
+        self.step = 0
+
+    def key_for(self, step: int) -> jax.Array:
+        k = jax.random.PRNGKey(self.seed)
+        k = jax.random.fold_in(k, step)
+        return jax.random.fold_in(k, self.host_id)
+
+    def next_key(self) -> jax.Array:
+        k = self.key_for(self.step)
+        self.step += 1
+        return k
+
+    def state_dict(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, st):
+        self.step = int(st["step"])
+        self.seed = int(st["seed"])

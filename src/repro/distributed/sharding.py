@@ -1,0 +1,220 @@
+"""Logical-axis sharding rules -> PartitionSpec trees, per architecture.
+
+TP rule (DESIGN §6): shard a weight dim on the ``model`` axis iff divisible
+by its size — heads for attention (gemma-2b's 8 q-heads / 1 kv-head
+replicate), d_ff for MLPs, vocab for embedding/head, expert-f for MoE
+(ragged_tp) or the expert dim (ep). Mamba blocks replicate weights (DP-only;
+DESIGN §6 note). Everything operates on ``jax.eval_shape`` results, so a
+400B param tree is never materialized to derive its specs.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import DistContext, divisible
+from repro.models.config import ModelConfig
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _shard_last(shape, n, axis_name, at=-1):
+    """Spec sharding dim ``at`` iff divisible, else replicated."""
+    dims = [None] * len(shape)
+    if divisible(shape[at], n):
+        dims[at] = axis_name
+    return P(*dims)
+
+
+def _fsdp_spec(shape, nm, ma) -> P:
+    """ZeRO-3: shard the largest divisible weight dim over the model axis;
+    GSPMD inserts per-layer all-gathers (weights) instead of per-layer
+    activation reductions — a win whenever weight bytes << activation
+    bytes (small models on big meshes)."""
+    best = None
+    for i, s in enumerate(shape):
+        if divisible(s, nm) and s >= 128:
+            if best is None or s >= shape[best]:
+                best = i
+    dims = [None] * len(shape)
+    if best is not None:
+        dims[best] = ma
+    return P(*dims)
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, dist: DistContext) -> P:
+    names = path
+    ma, nm = dist.model_axis, dist.n_model
+    leaf = names[-1]
+    joined = "/".join(names)
+
+    # --- never shard small / norm / scalar things
+    if len(shape) <= 1 or any(s in joined for s in
+                              ("ln1", "ln2", "ln_x", "final_norm", "norm",
+                               "dt_bias", "a_log", "d_skip", "conv",
+                               "comp_embed", "frontend")):
+        return P()
+    if leaf == "router":
+        return P()
+    if cfg.sharding_strategy == "fsdp" and "lora" not in names:
+        return _fsdp_spec(shape, nm, ma)
+    if "lora" in names:
+        # a: (..., r, d_in) replicate; b: (..., r, d_out) follow target dim
+        if leaf == "a":
+            return P()
+        return _shard_last(shape, nm, ma)
+    if leaf in ("embed", "pos_embed"):
+        return _shard_last(shape, nm, ma, at=-2)   # vocab/pos rows
+    if leaf == "lm_head":
+        return _shard_last(shape, nm, ma)
+    if "mamba" in names:
+        return P()
+    if "moe" in names:
+        if cfg.moe_impl == "ep":
+            at = -3  # expert dim of (..., E, d, f)
+            dims = [None] * len(shape)
+            if divisible(shape[at], nm):
+                dims[at] = ma
+            return P(*dims)
+        if leaf in ("wi", "wg"):
+            return _shard_last(shape, nm, ma)
+        if leaf == "wo":
+            return _shard_last(shape, nm, ma, at=-2)
+        return P()
+    if leaf in ("wq", "wk", "wv", "bq", "bk", "bv"):
+        return _shard_last(shape, nm, ma)
+    if leaf == "wo":
+        return _shard_last(shape, nm, ma, at=-2)
+    if leaf in ("wi", "wg"):
+        return _shard_last(shape, nm, ma)
+    return P()
+
+
+def param_pspecs(cfg: ModelConfig, params_shapes: Any,
+                 dist: DistContext) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [param_spec(_path_names(p), tuple(v.shape), cfg, dist)
+             for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspecs(param_specs_tree: Any, opt_state_shapes: Any) -> Any:
+    """AdamW moments follow their parameter's spec; step is replicated.
+
+    Frozen leaves (None moments) get no spec (pytree structure match)."""
+    from repro.optim.adamw import AdamWState
+
+    def follow(spec, leaf):
+        return None if leaf is None else spec
+
+    mu = jax.tree.map(follow, param_specs_tree, opt_state_shapes.mu,
+                      is_leaf=lambda x: x is None)
+    nu = jax.tree.map(follow, param_specs_tree, opt_state_shapes.nu,
+                      is_leaf=lambda x: x is None)
+    return AdamWState(step=P(), mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# activation / state specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(dist: DistContext, extra_dims: int = 1) -> P:
+    return P(dist.batch_axes, *([None] * extra_dims))
+
+
+def cache_pspecs(cfg: ModelConfig, dist: DistContext,
+                 shard_seq: bool = False):
+    """KVCache spec: (L, B, S, Hkv, hd). batch on data axes; kv heads on
+    model iff divisible; optionally shard the sequence axis (SP) instead of
+    batch (long_500k, batch=1)."""
+    from repro.core.inference import KVCache
+    ma = dist.model_axis if divisible(cfg.n_kv_heads, dist.n_model) else None
+    if shard_seq:
+        kv = P(None, None, dist.batch_axes, ma, None)
+        sc = P(None, None, dist.batch_axes, ma)
+    else:
+        kv = P(None, dist.batch_axes, None, ma, None)
+        sc = P(None, dist.batch_axes, None, ma)
+    if cfg.kv_cache_dtype == "int8":
+        return KVCache(k=kv, v=kv, length=P(), k_scale=sc, v_scale=sc)
+    return KVCache(k=kv, v=kv, length=P())
+
+
+def mem_pspecs(cfg: ModelConfig, dist: DistContext, batch_sharded=True):
+    from repro.core.memory import MemState
+    ma = dist.model_axis if divisible(cfg.n_kv_heads, dist.n_model) else None
+    b = dist.batch_axes if batch_sharded else None
+    kv = P(None, b, None, ma, None)
+    return MemState(k=kv, v=kv, slots=P(), steps=P(), stream_pos=P())
+
+
+def ssm_pspecs(cfg: ModelConfig, dist: DistContext, batch_sharded=True):
+    from repro.core.inference import SSMState
+    b = dist.batch_axes if batch_sharded else None
+    return SSMState(ssm=P(None, b, None, None, None),
+                    conv=P(None, b, None, None))
+
+
+def online_state_pspecs(cfg: ModelConfig, dist: DistContext,
+                        batch_sharded: bool = True,
+                        shard_cache_seq: bool = False):
+    from repro.core.inference import OnlineState
+    st = {"pos": P(), "cache": None, "mem": None, "ssm": None, "cross": None}
+    if cfg.family in ("ssm", "hybrid"):
+        st["ssm"] = ssm_pspecs(cfg, dist, batch_sharded)
+    if cfg.family != "ssm":
+        cs = cache_pspecs(cfg, dist, shard_seq=shard_cache_seq)
+        if not batch_sharded:
+            cs = KVCacheReplaceBatch(cs)
+        st["cache"] = cs
+        if cfg.ccm.enabled:
+            st["mem"] = mem_pspecs(cfg, dist, batch_sharded)
+    if cfg.family == "encdec":
+        ma = dist.model_axis if divisible(cfg.n_kv_heads, dist.n_model) \
+            else None
+        b = dist.batch_axes if batch_sharded else None
+        st["cross"] = (P(None, b, None, ma, None),
+                       P(None, b, None, ma, None))
+    return OnlineState(**st)
+
+
+def KVCacheReplaceBatch(cs):
+    def unb(p):
+        if p is None:
+            return None
+        dims = list(p)
+        dims[1] = None
+        return P(*dims)
+    return cs._replace(k=unb(cs.k), v=unb(cs.v),
+                       k_scale=unb(cs.k_scale), v_scale=unb(cs.v_scale))
+
+
+def stream_state_pspecs(cfg: ModelConfig, dist: DistContext,
+                        batch_sharded: bool = True):
+    from repro.core.streaming import StreamState
+    ma = dist.model_axis if divisible(cfg.n_kv_heads, dist.n_model) else None
+    b = dist.batch_axes if batch_sharded else None
+    win = P(None, b, None, ma, None)
+    return StreamState(win_k=win, win_v=win, win_len=P(),
+                       mem=mem_pspecs(cfg, dist, batch_sharded),
+                       pos=P())
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None)

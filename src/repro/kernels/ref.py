@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ccm_attention_ref(q, k, v, q_idx, q_seg, k_idx, k_seg, k_comp, k_valid,
+                      scale: float):
+    """Dense-mask flash-attention oracle.
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D); metadata 1-D int32/bool.
+    Mask: (k_idx <= q_idx) & ((k_seg == q_seg) | k_comp) & k_valid.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32) * scale
+    mask = (k_idx[None, :] <= q_idx[:, None]) \
+        & ((k_seg[None, :] == q_seg[:, None]) | k_comp[None, :]) \
+        & k_valid[None, :]
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows -> zero output (not uniform garbage)
+    any_valid = mask.any(axis=-1)[None, None, None, :, None]
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(q.dtype), v)
+    out = jnp.where(any_valid, out, 0)
+    return out.reshape(B, Hq, Sq, D)
+
+
+def cond_lora_ref(x, w, a, b, gate, scale: float,
+                  bias: Optional[jnp.ndarray] = None):
+    """y = x@w (+bias) + gate * ((x@a^T)@b) * scale.
+
+    x (M, K); w (K, N); a (r, K); b (r, N); gate (M,)."""
+    y = x @ w
+    if bias is not None:
+        y = y + bias
+    d = ((x @ a.T) @ b) * scale
+    return y + d * gate[:, None].astype(y.dtype)
+
+
+def kv_merge_ref(mem, h, t):
+    """Arithmetic-mean memory update: (1 - 1/t) * mem + (1/t) * h."""
+    a = (1.0 / t.astype(jnp.float32)).astype(mem.dtype)
+    return mem * (1 - a) + h * a
+
+
+def kv_cummean_ref(h):
+    """h (T, ...) -> running means along axis 0 (merge-mode training)."""
+    csum = jnp.cumsum(h.astype(jnp.float32), axis=0)
+    denom = jnp.arange(1, h.shape[0] + 1, dtype=jnp.float32)
+    denom = denom.reshape((-1,) + (1,) * (h.ndim - 1))
+    return (csum / denom).astype(h.dtype)

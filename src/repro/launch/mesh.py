@@ -1,0 +1,45 @@
+"""Production meshes (DESIGN §6).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.distributed.context import DistContext
+
+
+def _mk(shape, axes):
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_dist(mesh) -> DistContext:
+    axes = mesh.axis_names
+    return DistContext(mesh=mesh,
+                       data_axes=("data",) if "data" in axes else (),
+                       model_axis="model",
+                       pod_axis="pod" if "pod" in axes else None)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires host-platform device count)."""
+    return _mk((n_data, n_model), ("data", "model"))
+
+
+def available_mesh(model_parallel: int = 1):
+    """Elastic: build the best mesh from whatever devices are alive."""
+    n = jax.device_count()
+    nm = model_parallel
+    while n % nm:
+        nm -= 1
+    return _mk((n // nm, nm), ("data", "model"))

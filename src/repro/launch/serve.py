@@ -1,0 +1,116 @@
+"""Serving: jitted online-inference step builders (pjit/GSPMD).
+
+Three production step programs per architecture (these are what the
+dry-run lowers per shape):
+
+  prefill_step — input I(t) over [Mem, self] (prefill_32k)
+  decode_step  — one token over [Mem, cache(S)] (decode_32k)
+  stream_step  — CCM streaming decode: bounded window + compressed memory
+                 (long_500k for attention archs; the paper's unbounded-
+                 stream answer, Fig. 8/9)
+  ingest_step  — g_comp for a new context chunk (the online compression op)
+
+SSM/hybrid archs decode in O(1) state — long_500k lowers their native
+decode_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import inference as I
+from repro.core import streaming as STR
+from repro.distributed import sharding as SH
+from repro.distributed.context import DistContext, divisible
+from repro.models.config import ModelConfig
+
+
+def serve_specs(cfg: ModelConfig, dist: DistContext, *,
+                batch_sharded: bool = True, shard_cache_seq: bool = False):
+    state_specs = SH.online_state_pspecs(
+        cfg, dist, batch_sharded=batch_sharded,
+        shard_cache_seq=shard_cache_seq)
+    tok_spec = P(dist.batch_axes if batch_sharded else None, None)
+    return state_specs, tok_spec
+
+
+def make_prefill_step(cfg: ModelConfig, dist: Optional[DistContext] = None,
+                      impl: Optional[str] = None, **spec_kw) -> Callable:
+    def fn(params, state, tokens, patches=None):
+        return I.prefill(params, cfg, state, tokens, dist, patches=patches,
+                         impl=impl)
+
+    if dist is None:
+        return jax.jit(fn)
+    return _jit_with_specs(fn, cfg, dist, **spec_kw)
+
+
+def make_decode_step(cfg: ModelConfig, dist: Optional[DistContext] = None,
+                     **spec_kw) -> Callable:
+    def fn(params, state, tokens):
+        return I.decode_step(params, cfg, state, tokens, dist)
+
+    if dist is None:
+        return jax.jit(fn)
+    return _jit_with_specs(fn, cfg, dist, **spec_kw)
+
+
+def make_ingest_step(cfg: ModelConfig, dist: Optional[DistContext] = None,
+                     **spec_kw) -> Callable:
+    def fn(params, state, tokens):
+        return I.ingest_context(params, cfg, state, tokens, dist)
+
+    if dist is None:
+        return jax.jit(fn)
+    return _jit_with_specs(fn, cfg, dist, ingest=True, **spec_kw)
+
+
+def make_stream_step(cfg: ModelConfig, params_shapes,
+                     dist: Optional[DistContext] = None,
+                     batch_sharded: bool = True) -> Callable:
+    def fn(params, st, tokens):
+        return STR.stream_step(params, cfg, st, tokens)
+
+    if dist is None:
+        return jax.jit(fn)
+    pspecs = SH.param_pspecs(cfg, params_shapes, dist)
+    sspecs = SH.stream_state_pspecs(cfg, dist, batch_sharded)
+    tok = P(dist.batch_axes if batch_sharded else None, None)
+    mesh = dist.mesh
+    vspec = P(dist.batch_axes if batch_sharded else None, None, None)
+    return jax.jit(
+        fn,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, sspecs),
+                      SH.named(mesh, tok)),
+        out_shardings=(SH.named(mesh, vspec), SH.named(mesh, sspecs)),
+        donate_argnums=(1,))
+
+
+def _jit_with_specs(fn, cfg: ModelConfig, dist: DistContext,
+                    ingest: bool = False, batch_sharded: bool = True,
+                    shard_cache_seq: bool = False,
+                    params_shapes=None) -> Callable:
+    state_specs, tok_spec = serve_specs(
+        cfg, dist, batch_sharded=batch_sharded,
+        shard_cache_seq=shard_cache_seq)
+    mesh = dist.mesh
+    pspecs = SH.param_pspecs(cfg, params_shapes, dist) \
+        if params_shapes is not None else None
+    p_in = SH.named(mesh, pspecs) if pspecs is not None else None
+    st_in = SH.named(mesh, state_specs)
+    vocab_sharded = dist.model_axis \
+        if divisible(cfg.vocab_size, dist.n_model) else None
+    logit_spec = P(dist.batch_axes if batch_sharded else None, None,
+                   vocab_sharded)
+    if ingest:
+        out_sh = st_in
+    else:
+        out_sh = (SH.named(mesh, logit_spec), st_in)
+    return jax.jit(fn,
+                   in_shardings=(p_in, st_in, SH.named(mesh, tok_spec)),
+                   out_shardings=out_sh,
+                   donate_argnums=(1,))

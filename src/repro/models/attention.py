@@ -1,0 +1,267 @@
+"""Attention: GQA/MQA/MHA with CCM-aware masking, three implementations.
+
+  dense   — einsum logits + additive mask; short sequences / merge-mode
+            training with virtual memory slots.
+  chunked — double-blocked online-softmax (flash-style) in pure jnp; the
+            CPU/compile-analysis analogue of the Pallas kernel. Mask is
+            evaluated per (q-block, k-block) from per-token metadata
+            (index, segment id, is-<COMP>), never materialized at S×S.
+  pallas  — repro.kernels.ccm_attention (TPU target; interpret-validated).
+
+Conventions: q (B, Sq, Hq, D); k/v (B, Sk, Hkv, D); GQA grouping is done
+here (no materialized head repetition). Softmax statistics in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora as lora_lib
+from repro.core.masks import NEG_INF
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+
+class KeyInfo(NamedTuple):
+    """Per-token metadata driving the CCM mask, all shape (Sk,) or (Sq,).
+
+    idx  : global position index used for causality (mem keys get -1).
+    seg  : CCM segment id (mem keys 0; plain causal = all zeros + comp 1s).
+    comp : True where the key is a <COMP> token / memory slot.
+    valid: False at padding (keys only).
+    """
+    idx: jnp.ndarray
+    seg: jnp.ndarray
+    comp: jnp.ndarray
+    valid: Optional[jnp.ndarray] = None
+
+
+def plain_causal_info(length: int, offset: int = 0) -> KeyInfo:
+    idx = jnp.arange(length, dtype=jnp.int32) + offset
+    z = jnp.zeros((length,), jnp.int32)
+    return KeyInfo(idx=idx, seg=z, comp=jnp.ones((length,), bool))
+
+
+def mem_key_info(length: int, valid: Optional[jnp.ndarray] = None) -> KeyInfo:
+    """Memory keys: always visible (idx=-1, comp=True)."""
+    return KeyInfo(idx=jnp.full((length,), -1, jnp.int32),
+                   seg=jnp.zeros((length,), jnp.int32),
+                   comp=jnp.ones((length,), bool),
+                   valid=valid)
+
+
+def concat_info(a: KeyInfo, b: KeyInfo) -> KeyInfo:
+    def cat(x, y, fill_x, fill_y):
+        if x is None and y is None:
+            return None
+        if x is None:
+            x = fill_x
+        if y is None:
+            y = fill_y
+        return jnp.concatenate([x, y])
+    va = jnp.ones(a.idx.shape, bool)
+    vb = jnp.ones(b.idx.shape, bool)
+    return KeyInfo(idx=jnp.concatenate([a.idx, b.idx]),
+                   seg=jnp.concatenate([a.seg, b.seg]),
+                   comp=jnp.concatenate([a.comp, b.comp]),
+                   valid=cat(a.valid, b.valid, va, vb))
+
+
+def mask_from_info(q: KeyInfo, k: KeyInfo) -> jnp.ndarray:
+    """(Q, K) CCM mask: causal AND (same-segment OR k-is-comp) AND k-valid."""
+    causal = k.idx[None, :] <= q.idx[:, None]
+    allow = (k.seg[None, :] == q.seg[:, None]) | k.comp[None, :]
+    m = causal & allow
+    if k.valid is not None:
+        m = m & k.valid[None, :]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# core attends
+# ---------------------------------------------------------------------------
+
+def _group(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    B, S, Hq, D = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, D)
+
+
+def attend_dense(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 mask: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D), mask (Sq,Sk) or (B,Sq,Sk) or None."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    qg = _group(q, Hkv)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        else:
+            mask = mask[:, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill), n
+
+
+def attend_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   q_info: KeyInfo, k_info: KeyInfo, scale: float,
+                   q_chunk: int = 512, k_chunk: int = 1024) -> jnp.ndarray:
+    """Double-blocked online-softmax attention with CCM mask.
+
+    Memory high-watermark per step: O(B * Hq * q_chunk * k_chunk) — the CPU
+    analogue of the Pallas flash kernel's VMEM tiling.
+    """
+    B, Sq0, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    valid = k_info.valid if k_info.valid is not None \
+        else jnp.ones((k.shape[1],), bool)
+
+    q, _ = _pad_to(q, q_chunk, axis=1)
+    qi_idx, _ = _pad_to(q_info.idx, q_chunk, axis=0, fill=-(10 ** 9))
+    qi_seg, _ = _pad_to(q_info.seg, q_chunk, axis=0, fill=-1)
+    k, _ = _pad_to(k, k_chunk, axis=1)
+    v, _ = _pad_to(v, k_chunk, axis=1)
+    ki_idx, _ = _pad_to(k_info.idx, k_chunk, axis=0, fill=10 ** 9)
+    ki_seg, _ = _pad_to(k_info.seg, k_chunk, axis=0, fill=-2)
+    ki_comp, _ = _pad_to(k_info.comp, k_chunk, axis=0, fill=False)
+    ki_valid, _ = _pad_to(valid, k_chunk, axis=0, fill=False)
+
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    qg = _group(q, Hkv).reshape(B, nq, q_chunk, Hkv, G, D)
+    kb = k.reshape(B, nk, k_chunk, Hkv, D)
+    vb = v.reshape(B, nk, k_chunk, Hkv, D)
+
+    def q_block(carrys, xs):
+        qblk, qidx, qseg = xs  # (B,qc,Hkv,G,D), (qc,), (qc,)
+
+        def k_step(state, kxs):
+            m_i, l_i, acc = state
+            kblk, vblk, kidx, kseg, kcomp, kval = kxs
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)
+            logits = logits.astype(jnp.float32) * scale
+            msk = (kidx[None, :] <= qidx[:, None]) \
+                & ((kseg[None, :] == qseg[:, None]) | kcomp[None, :]) \
+                & kval[None, :]
+            logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_i, logits.max(axis=-1))
+            alpha = jnp.exp(m_i - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_i * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] \
+                + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qblk.dtype), vblk)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+             ki_idx.reshape(nk, k_chunk), ki_seg.reshape(nk, k_chunk),
+             ki_comp.reshape(nk, k_chunk), ki_valid.reshape(nk, k_chunk)))
+        out = acc / jnp.maximum(l_f[..., None], 1e-37)
+        return carrys, out.astype(qblk.dtype)
+
+    _, outs = jax.lax.scan(
+        q_block, (),
+        (qg.swapaxes(0, 1), qi_idx.reshape(nq, q_chunk),
+         qi_seg.reshape(nq, q_chunk)))
+    # outs: (nq, B, Hkv, G, qc, D) -> (B, Sq, Hq, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, D)
+    return out[:, :Sq0]
+
+
+def attend(cfg: ModelConfig, q, k, v, q_info: KeyInfo, k_info: KeyInfo,
+           impl: Optional[str] = None) -> jnp.ndarray:
+    scale = 1.0 / (cfg.hd ** 0.5)
+    impl = impl or cfg.attn_impl
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.ccm_attention(q, k, v, q_info, k_info, scale)
+    if impl == "chunked":
+        return attend_chunked(q, k, v, q_info, k_info, scale,
+                              q_chunk=min(cfg.attn_chunk, 512),
+                              k_chunk=cfg.attn_chunk)
+    mask = mask_from_info(q_info, k_info)
+    return attend_dense(q, k, v, mask, scale)
+
+
+# ---------------------------------------------------------------------------
+# attention block parameters & projections (with conditional LoRA)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, with_lora: bool = True,
+                   d_model: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 9)
+    p = {"wq": L.dense_init(ks[0], d, Hq * hd, cfg.pdtype),
+         "wk": L.dense_init(ks[1], d, Hkv * hd, cfg.pdtype),
+         "wv": L.dense_init(ks[2], d, Hkv * hd, cfg.pdtype),
+         "wo": L.dense_init(ks[3], Hq * hd, d, cfg.pdtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), cfg.pdtype)
+    if with_lora and cfg.ccm.enabled:
+        r = cfg.ccm.lora_rank
+        p["lora"] = {
+            "q": lora_lib.init_lora(ks[4], d, Hq * hd, r),
+            "k": lora_lib.init_lora(ks[5], d, Hkv * hd, r),
+            "v": lora_lib.init_lora(ks[6], d, Hkv * hd, r),
+            "o": lora_lib.init_lora(ks[7], Hq * hd, d, r),
+        }
+    return p
+
+
+def qkv_project(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                comp_gate: Optional[jnp.ndarray],
+                positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd) with RoPE at `positions`.
+
+    comp_gate: (B,S) {0,1} — conditional-LoRA gate (1 at <COMP> tokens); None
+    disables the delta entirely (pure pretrained weights).
+    """
+    B, S, _ = x.shape
+    lora = p.get("lora")
+    sc = lora_lib.lora_scale(cfg.ccm.lora_rank, cfg.ccm.lora_alpha)
+
+    def proj(name, bias_name):
+        lw = lora.get(name) if (lora is not None and comp_gate is not None) else None
+        return lora_lib.cond_linear(x, p["w" + name], lw, comp_gate, sc,
+                                    bias=p.get(bias_name))
+
+    q = proj("q", "bq").reshape(B, S, cfg.n_heads, cfg.hd)
+    k = proj("k", "bk").reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = proj("v", "bv").reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if positions is not None:
+        cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def out_project(cfg: ModelConfig, p: Dict, o: jnp.ndarray,
+                comp_gate: Optional[jnp.ndarray]) -> jnp.ndarray:
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    lora = p.get("lora")
+    lw = lora.get("o") if (lora is not None and comp_gate is not None) else None
+    sc = lora_lib.lora_scale(cfg.ccm.lora_rank, cfg.ccm.lora_alpha)
+    return lora_lib.cond_linear(o, p["wo"], lw, comp_gate, sc)

@@ -1,0 +1,107 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, embeddings, init."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 statistics, cast back)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Dict[str, jnp.ndarray]:
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), cfg.pdtype),
+                "bias": jnp.zeros((d,), cfg.pdtype)}
+    return {"scale": jnp.zeros((d,), cfg.pdtype)}  # rms: stored as (1+scale)
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, jnp.ndarray],
+               x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE with explicit per-token positions (CCM reassigns positions)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                 dtype=jnp.float32):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2). Rotate-half pairing
+    (x1, x2) = split(x, 2, -1) — llama convention."""
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU / GeGLU / GELU
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d: int, f: int) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], d, f, cfg.pdtype),
+                "wg": dense_init(ks[1], d, f, cfg.pdtype),
+                "wo": dense_init(ks[2], f, d, cfg.pdtype)}
+    return {"wi": dense_init(ks[0], d, f, cfg.pdtype),
+            "wo": dense_init(ks[2], f, d, cfg.pdtype)}
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict[str, jnp.ndarray],
+              x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype), approximate=True) \
+            * (x @ p["wi"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype), approximate=True)
+    return h @ p["wo"].astype(x.dtype)

@@ -1,0 +1,32 @@
+"""scan-or-unroll over stacked layer parameters.
+
+Production path: ``lax.scan`` (O(1) HLO in depth). Calibration path
+(``cfg.unroll_layers``): Python loop, used by the dry-run to recover
+per-layer HLO FLOPs/bytes that XLA's cost_analysis cannot see inside a
+while-loop body (it counts loop bodies once, and not at all under remat).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(unroll: bool, body: Callable, carry: Any, xs: Any,
+                remat: bool = False) -> Tuple[Any, Any]:
+    """Semantics of ``jax.lax.scan(body, carry, xs)`` with optional unroll."""
+    if remat and not unroll:
+        body = jax.checkpoint(body)
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm: within-chunk attention-like diagonal blocks on the
+MXU plus an inter-chunk linear recurrence over per-chunk states — the
+TPU-friendly formulation (contiguous (chunk x chunk) and (P x N) matmuls,
+one short ``lax.scan`` across chunks instead of a length-S scan).
+
+Single-group variant (n_groups = 1): B/C shared across heads.
+
+State for decoding: s (B, H, P, N) with
+    s_t = exp(dt*A) * s_{t-1} + dt * B_t (outer) x_t ;  y_t = C_t . s_t + D*x_t
+— the arch's native "compressed context memory" (cf. DESIGN §5: CCM is
+inapplicable to attention-free layers; this state plays the same role).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+
+def init_mamba(key, cfg: ModelConfig, d: int) -> Dict:
+    di, N, H, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * di + 2 * N + H   # z, x, B, C, dt
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": L.dense_init(ks[0], d, d_in_proj, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32)
+                   / jnp.sqrt(K)).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": {"scale": jnp.zeros((di,), cfg.pdtype)},
+        "out_proj": L.dense_init(ks[2], di, d, cfg.pdtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x (..., Q) -> (..., Q, Q) with out[..., i, j] = sum_{j<k<=i} x[..., k],
+    -inf above the diagonal (strictly causal cumulative log-decay)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x (B,S,C), w (K,C). Returns y and the last
+    K-1 inputs (decode conv state)."""
+    K = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return y + b.astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD scan. x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N).
+
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    B_, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    nc = S // Q
+    assert S % Q == 0, "seq must be divisible by ssm_chunk"
+    xc = x.reshape(B_, nc, Q, H, Pd)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+    dA = dtc * A[None, None, None, :]                 # (B,nc,Q,H) log-decay
+    dA = dA.astype(jnp.float32)
+
+    # --- diagonal (within-chunk) term: attention-like on the MXU
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc).astype(jnp.float32)
+    M = scores[:, :, None] * Lmat                            # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(x.dtype),
+                        xdt.astype(x.dtype))
+
+    # --- per-chunk states: S_c = sum_k exp(sum_{j>k} dA_j) * dt_k B_k x_k^T
+    dA_cum = jnp.cumsum(dA, axis=2)                          # (B,nc,Q,H)
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)    # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                        Bc.astype(jnp.float32), (dtc * decay_states),
+                        xc.astype(jnp.float32))              # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (short scan over nc chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (B,nc,H)
+    s0 = init_state.astype(jnp.float32) if init_state is not None else \
+        jnp.zeros((B_, H, Pd, N), jnp.float32)
+
+    def step(s, xs):
+        dec, st = xs                                         # (B,H), (B,H,P,N)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s                                      # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                 # (B,nc,H,P,N)
+
+    # --- off-diagonal: y_off[q] = C_q . (exp(dA_cum_q) * S_prev)
+    out_decay = jnp.exp(dA_cum)                              # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       Cc.astype(jnp.float32), out_decay,
+                       prev_states)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B_, S, H, Pd)
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def apply_mamba(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                state: Optional[Dict] = None,
+                decode: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """Mamba2 block. x (B,S,d). state = {'ssm': (B,H,P,N), 'conv': (B,K-1,C)}.
+
+    decode=True uses the O(1) recurrence (S small, typically 1).
+    """
+    B_, S, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xr, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])          # (B,S,H)
+    A = -jnp.exp(p["a_log"])                                  # (H,) < 0
+    xh = xr.reshape(B_, S, H, Pd)
+    ssm_state = state["ssm"] if state is not None else None
+
+    if decode:
+        s = ssm_state.astype(jnp.float32) if ssm_state is not None else \
+            jnp.zeros((B_, H, Pd, N), jnp.float32)
+
+        def one(s, t):
+            dec = jnp.exp(dt[:, t] * A[None])                # (B,H)
+            upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, t].astype(jnp.float32),
+                             dt[:, t], xh[:, t].astype(jnp.float32))
+            s = s * dec[..., None, None] + upd
+            y = jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), s)
+            return s, y
+
+        s, ys = jax.lax.scan(one, s, jnp.arange(S))
+        y = ys.swapaxes(0, 1)                                 # (B,S,H,P)
+        final = s
+    else:
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm,
+                               min(cfg.ssm_chunk, S), ssm_state)
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["norm"]["scale"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"ssm": final.astype(x.dtype) if not decode else
+                 final.astype(x.dtype), "conv": new_conv}
+    return out, new_state

@@ -1,0 +1,345 @@
+"""Model assembly: init + train-forward + prefill/decode/compress for every
+assigned architecture family.
+
+Layer parameters are stacked along a leading layer axis and traversed with
+``jax.lax.scan`` so compile time / HLO size is O(1) in depth (48-layer
+llama4 compiles as fast as 4-layer smoke configs). Hybrid (Zamba2) uses
+grouped scans with a *shared* attention block between groups.
+
+CCM integration (paper): the training forward is the parallelized unroll
+(masks from ``repro.core.masks``); ``compress_chunk`` / ``decode_step`` are
+the online g_comp / inference of Eq. (1)-(3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.core.memory import MemState, init_memory, update_memory
+from repro.distributed.context import DistContext
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"ln1": L.init_norm(cfg, cfg.d_model),
+                "mamba": SSM.init_mamba(ks[0], cfg, cfg.d_model)}
+    if cfg.family == "hybrid":
+        return {"ln1": L.init_norm(cfg, cfg.d_model),
+                "mamba": SSM.init_mamba(ks[0], cfg, cfg.d_model)}
+    p = {"ln1": L.init_norm(cfg, cfg.d_model),
+         "attn": A.init_attention(ks[0], cfg),
+         "ln2": L.init_norm(cfg, cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = MOE.init_moe(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": A.init_attention(ks[0], cfg, with_lora=False),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)}
+
+
+def _init_cross_block(key, cfg: ModelConfig) -> Params:
+    """Decoder block with cross attention (whisper-style)."""
+    p = _init_block(key, cfg)
+    ks = jax.random.split(jax.random.fold_in(key, 7), 2)
+    p["ln_x"] = L.init_norm(cfg, cfg.d_model)
+    p["xattn"] = A.init_attention(ks[0], cfg, with_lora=False)
+    return p
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 10)
+    p: Params = {"embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                       cfg.pdtype),
+                 "final_norm": L.init_norm(cfg, cfg.d_model)}
+    if cfg.ccm.enabled:
+        p["comp_embed"] = (jax.random.normal(
+            ks[1], (cfg.ccm.comp_len, cfg.d_model), jnp.float32) * 0.02
+        ).astype(cfg.pdtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                                    cfg.pdtype)
+    if cfg.pos_embed == "learned":
+        p["pos_embed"] = L.embed_init(ks[3], max(cfg.max_pos, 2048),
+                                      cfg.d_model, cfg.pdtype)
+    # stacked decoder layers
+    layer_keys = jax.random.split(ks[4], cfg.n_layers)
+    init_fn = _init_cross_block if cfg.family == "encdec" else _init_block
+    p["layers"] = jax.vmap(lambda k: init_fn(k, cfg))(layer_keys)
+    if cfg.family == "hybrid":
+        p["shared_attn"] = {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": A.init_attention(ks[5], cfg),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(ks[6], cfg, cfg.d_model, cfg.d_ff)}
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(ks[7], cfg.n_enc_layers)
+        p["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+            "pos_embed": L.embed_init(ks[8], max(cfg.max_pos, 2048),
+                                      cfg.d_model, cfg.pdtype)}
+    if cfg.family == "vlm":
+        p["frontend"] = {"proj": L.dense_init(ks[9], 1024, cfg.d_model,
+                                              cfg.pdtype)}
+    return p
+
+
+# ===========================================================================
+# embeddings
+# ===========================================================================
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jnp.ndarray,
+                 comp_mask: Optional[jnp.ndarray] = None,
+                 comp_offset: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.cdtype)
+    if comp_mask is not None and "comp_embed" in p:
+        ce = p["comp_embed"].astype(cfg.cdtype)
+        off = comp_offset if comp_offset is not None else \
+            jnp.zeros(tokens.shape[-1], jnp.int32)
+        comp_vec = jnp.take(ce, off, axis=0)          # (S, d)
+        cm = comp_mask[..., None].astype(cfg.cdtype)
+        x = x * (1 - cm) + comp_vec * cm
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    return x
+
+
+def _add_learned_pos(cfg, table, x, positions):
+    pe = jnp.take(table, jnp.clip(positions, 0, table.shape[0] - 1), axis=0)
+    return x + pe.astype(x.dtype)
+
+
+def _rope_positions(cfg, positions):
+    return positions if cfg.pos_embed == "rope" else None
+
+
+# ===========================================================================
+# block applications (training / full-sequence)
+# ===========================================================================
+
+def _attn_mlp_block(cfg: ModelConfig, lp: Params, x, *, q_info, k_info,
+                    comp_gate, positions, merge_ctx, dist,
+                    cross: Optional[Tuple] = None):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    q, k, v = A.qkv_project(cfg, lp["attn"], h, comp_gate,
+                            _rope_positions(cfg, positions))
+    if merge_ctx is not None:
+        slots_fn = merge_ctx.get("slots_fn")
+        if slots_fn is not None:
+            mem_k, mem_v = slots_fn(k, v)
+            k = jnp.concatenate([mem_k, k], axis=1)
+            v = jnp.concatenate([mem_v, v], axis=1)
+        o = A.attend_dense(q, k, v, merge_ctx["mask"], 1.0 / cfg.hd ** 0.5)
+    else:
+        o = A.attend(cfg, q, k, v, q_info, k_info)
+    x = x + A.out_project(cfg, lp["attn"], o, comp_gate)
+    if cross is not None:
+        # cross is either the encoder output (B,Se,d) -> project per layer,
+        # or a precomputed per-layer (xk, xv) tuple (decode path).
+        h = L.apply_norm(cfg, lp["ln_x"], x)
+        qx, _, _ = A.qkv_project(cfg, lp["xattn"], h, None, None)
+        if isinstance(cross, tuple):
+            xk, xv = cross
+        else:
+            _, xk, xv = A.qkv_project(cfg, lp["xattn"], cross, None, None)
+        ox = A.attend_dense(qx, xk, xv, None, 1.0 / cfg.hd ** 0.5)
+        x = x + A.out_project(cfg, lp["xattn"], ox, None)
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    if "moe" in lp:
+        return x + MOE.apply_moe(cfg, lp["moe"], h, dist)
+    return x + L.apply_mlp(cfg, lp["mlp"], h)
+
+
+def _mamba_block(cfg, lp, x, state=None, decode=False):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    out, new_state = SSM.apply_mamba(cfg, lp["mamba"], h, state, decode)
+    return x + out, new_state
+
+
+def _hybrid_sites(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, group_size, remainder) for zamba2-style layouts."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+def _scan_blocks(cfg, stacked, x, body):
+    """scan ``body(x, layer_params) -> x`` over stacked layer params."""
+    from repro.models.scan_utils import scan_layers
+
+    def step(carry, lp):
+        return body(carry, lp), None
+
+    x, _ = scan_layers(cfg.unroll_layers, step, x, stacked, remat=cfg.remat)
+    return x
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                   q_info=None, k_info=None, comp_gate=None, positions=None,
+                   merge_ctx=None, dist=None, cross=None) -> jnp.ndarray:
+    """Run the full decoder stack on embedded inputs x (B,S,d)."""
+    if cfg.family in ("ssm", "hybrid"):
+        def mbody(h, lp):
+            out, _ = _mamba_block(cfg, lp, h)
+            return out
+
+        if cfg.family == "ssm":
+            return _scan_blocks(cfg, params["layers"], x, mbody)
+        # hybrid: groups of mamba layers + shared attention block
+        n_groups, g, rem = _hybrid_sites(cfg)
+        stacked = params["layers"]
+        head = jax.tree.map(lambda a: a[:n_groups * g].reshape(
+            (n_groups, g) + a.shape[1:]), stacked)
+        tail = jax.tree.map(lambda a: a[n_groups * g:], stacked)
+        sa = params["shared_attn"]
+        for gi in range(n_groups):
+            grp = jax.tree.map(lambda a: a[gi], head)
+            x = _scan_blocks(cfg, grp, x, mbody)
+            x = _attn_mlp_block(cfg, sa, x, q_info=q_info, k_info=k_info,
+                                comp_gate=comp_gate, positions=positions,
+                                merge_ctx=merge_ctx, dist=dist)
+        if rem:
+            x = _scan_blocks(cfg, tail, x, mbody)
+        return x
+
+    body = functools.partial(
+        lambda h, lp: _attn_mlp_block(cfg, lp, h, q_info=q_info,
+                                      k_info=k_info, comp_gate=comp_gate,
+                                      positions=positions,
+                                      merge_ctx=merge_ctx, dist=dist,
+                                      cross=cross))
+    return _scan_blocks(cfg, params["layers"], x, body)
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend: conv feature extraction happens upstream)."""
+    enc = params["encoder"]
+    S = frames.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    x = _add_learned_pos(cfg, enc["pos_embed"], frames.astype(cfg.cdtype), pos)
+    info = A.KeyInfo(idx=jnp.zeros((S,), jnp.int32),
+                     seg=jnp.zeros((S,), jnp.int32),
+                     comp=jnp.ones((S,), bool))   # bidirectional
+
+    def body(h, lp):
+        return _attn_mlp_block(cfg, lp, h, q_info=info, k_info=info,
+                               comp_gate=None, positions=None,
+                               merge_ctx=None, dist=None)
+
+    x = _scan_blocks(cfg, enc["layers"], x, body)
+    return L.apply_norm(cfg, enc["final_norm"], x)
+
+
+def lm_logits(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype)
+
+
+# ===========================================================================
+# CCM parallel training forward (paper Fig. 3 / Alg. 1)
+# ===========================================================================
+
+def train_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  layout: M.SegmentLayout, dist: Optional[DistContext] = None,
+                  frames: Optional[jnp.ndarray] = None,
+                  patches: Optional[jnp.ndarray] = None,
+                  logits_slice: Optional[Tuple[int, int]] = None,
+                  unconditional_lora: bool = False) -> jnp.ndarray:
+    """One parallelized CCM forward. tokens (B,S) following ``layout``.
+
+    Returns logits over ``logits_slice`` (start, length) — by default the
+    tail (input/output) region only, so the vocab projection is computed at
+    O(tail) not O(S) positions.
+    """
+    S = layout.seq_len
+    seg, comp, pos = layout.seg_ids, layout.comp_mask, layout.positions
+    comp_off = M.comp_offset_array(comp)
+    use_ccm = cfg.ccm.enabled and not cfg.is_attention_free
+
+    x = embed_tokens(cfg, params, tokens, comp if use_ccm else None, comp_off)
+    if cfg.pos_embed == "learned":
+        x = _add_learned_pos(cfg, params["pos_embed"], x, pos)
+    if patches is not None:
+        # patches are context tokens with precomputed embeddings; <COMP>
+        # positions inside the patch span keep their comp embedding.
+        pe = patches.astype(cfg.cdtype) @ params["frontend"]["proj"].astype(cfg.cdtype)
+        xp = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+        x = jnp.where(comp[None, :, None], x, xp) if cfg.ccm.enabled else xp
+
+    comp_gate = None
+    if use_ccm:
+        comp_gate = jnp.broadcast_to(comp.astype(cfg.cdtype)[None],
+                                     tokens.shape)
+        if unconditional_lora:
+            comp_gate = jnp.ones_like(comp_gate)
+
+    merge_ctx = None
+    q_info = k_info = None
+    if use_ccm and cfg.ccm.method == "gisting":
+        from repro.core.baselines import gisting_online_mask
+        merge_ctx = {"mask": gisting_online_mask(seg, comp, layout.t_steps),
+                     "slots_fn": None}
+    elif use_ccm and cfg.ccm.method == "compressive":
+        from repro.core.baselines import (compressive_slot_mask,
+                                          compressive_virtual_kv)
+        raw_mask = M.intra_segment_causal(seg, comp)
+        slot_mask = compressive_slot_mask(seg, layout.t_steps,
+                                          layout.comp_len)
+        merge_ctx = {
+            "mask": jnp.concatenate([slot_mask, raw_mask], axis=1),
+            "slots_fn": functools.partial(
+                compressive_virtual_kv, seg_ids=seg, comp_mask=comp,
+                t_steps=layout.t_steps, comp_len=layout.comp_len)}
+    elif use_ccm and cfg.ccm.mode == "merge":
+        raw_mask = M.intra_segment_causal(seg, comp)
+        slot_mask = M.expand_slot_mask(
+            M.merge_slot_mask(seg, layout.t_steps), layout.comp_len)
+        merge_ctx = {
+            "mask": jnp.concatenate([slot_mask, raw_mask], axis=1),
+            "slots_fn": functools.partial(
+                M.merge_virtual_kv, comp_mask=comp,
+                t_steps=layout.t_steps, comp_len=layout.comp_len,
+                alpha=cfg.ccm.merge_alpha)}
+    elif use_ccm:
+        q_info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32), seg=seg,
+                           comp=comp)
+        k_info = q_info
+    else:
+        q_info = k_info = A.plain_causal_info(S)
+
+    cross = None
+    if cfg.family == "encdec":
+        cross = encode(params, cfg, frames)   # per-layer K/V inside blocks
+
+    x = forward_hidden(params, cfg, x, q_info=q_info, k_info=k_info,
+                       comp_gate=comp_gate, positions=pos,
+                       merge_ctx=merge_ctx, dist=dist, cross=cross)
+    if logits_slice is None:
+        logits_slice = (S - layout.tail_len, layout.tail_len)
+    start, length = logits_slice
+    return lm_logits(params, cfg, x[:, start:start + length])

@@ -1,0 +1,109 @@
+"""AdamW + clipping + schedules, from scratch (no optax).
+
+Supports *partial* training (the paper's LoRA-only mode): a boolean
+``trainable`` pytree mask restricts both updates and optimizer-state
+allocation — frozen leaves carry no moments (llama4-400B trains its
+conditional-LoRA deltas with megabytes, not terabytes, of optimizer state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    schedule: str = "cosine"       # cosine | constant
+    warmup_steps: int = 20
+    total_steps: int = 1000
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def _mask_tree(tree, mask, fill=None):
+    return jax.tree.map(
+        lambda x, m: x if m else (fill if fill is not None else None),
+        tree, mask, is_leaf=lambda x: x is None)
+
+
+def init_adamw(params: Any, trainable: Optional[Any] = None) -> AdamWState:
+    if trainable is None:
+        trainable = jax.tree.map(lambda _: True, params)
+    zeros = jax.tree.map(
+        lambda p, m: jnp.zeros_like(p, jnp.float32) if m else None,
+        params, trainable)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(lambda z: None if z is None
+                                      else jnp.zeros_like(z), zeros,
+                                      is_leaf=lambda x: x is None))
+
+
+def global_norm(grads: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads) if g is not None]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: AdamWState,
+                 trainable: Optional[Any] = None):
+    """Returns (new_params, new_state, metrics)."""
+    if trainable is None:
+        trainable = jax.tree.map(lambda _: True, params)
+    gnorm = global_norm(_mask_tree(grads, trainable))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu, tr):
+        if not tr or mu is None:
+            return p, mu, nu
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mh, nh = mu / bc1, nu / bc2
+        delta = mh / (jnp.sqrt(nh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    flat_tr = jax.tree.leaves(trainable)
+    out = [upd(p, g, mu, nu, tr) for p, g, mu, nu, tr
+           in zip(flat_p, flat_g, flat_mu, flat_nu, flat_tr)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,18 @@
+"""Losses: numerically-stable masked next-token cross entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
+                    loss_mask: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, T, V) for positions p..p+T; tokens (B, T+1) = the tokens at
+    those positions plus one (targets are tokens[:, 1:]); loss_mask (B, T)."""
+    targets = tokens[:, 1:]
+    lg = logits[:, :targets.shape[1]].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    mask = loss_mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

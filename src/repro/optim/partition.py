@@ -1,0 +1,53 @@
+"""Parameter partitioning for partial (LoRA-only) training.
+
+Differentiate only the trainable subtree: the loss closure merges the two
+trees, so frozen parameters are constants to AD — no cotangents, no
+optimizer state, no fp32 copies for the 400B frozen base.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+
+
+def _is_none(x):
+    return x is None
+
+
+def trainable_mask(params: Any, predicate: Callable[[Tuple], bool]) -> Any:
+    """Build a boolean mask pytree from a path predicate.
+
+    predicate receives a tuple of str path keys, e.g.
+    ``('layers', 'attn', 'lora', 'q', 'a')``.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    vals = [bool(predicate(tuple(_key_str(k) for k in path)))
+            for path, _ in flat]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def _key_str(k):
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def lora_predicate(path: Tuple[str, ...]) -> bool:
+    """The paper's trainable set: conditional-LoRA deltas + <COMP> embed."""
+    return "lora" in path or "comp_embed" in path
+
+
+def partition(params: Any, mask: Any) -> Tuple[Any, Any]:
+    train = jax.tree.map(lambda p, m: p if m else None, params, mask)
+    frozen = jax.tree.map(lambda p, m: None if m else p, params, mask)
+    return train, frozen
+
+
+def merge(train: Any, frozen: Any) -> Any:
+    return jax.tree.map(
+        lambda t, f: f if t is None else t, train, frozen,
+        is_leaf=_is_none)

@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests see 1 device;
+multi-device tests run in subprocesses (test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import masks as M
+from repro.models.config import CCMConfig, ModelConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                       compute_dtype="float32",
+                       ccm=CCMConfig(comp_len=2, max_steps=4))
+
+
+@pytest.fixture(scope="session")
+def tiny_layout():
+    return M.segment_layout(t_steps=4, chunk_len=8, comp_len=2, tail_len=8)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

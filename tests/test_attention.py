@@ -1,0 +1,102 @@
+"""Attention implementation equivalences + conditional-LoRA semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+from repro.core.lora import cond_linear, init_lora, lora_scale
+from repro.models import attention as A
+
+
+def _rand_kv(key, B, Sq, Sk, Hq, Hkv, D):
+    q = jax.random.normal(key, (B, Sq, Hq, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sk, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, Hkv, D))
+    return q, k, v
+
+
+@given(st.integers(0, 5), st.sampled_from([(4, 2), (4, 4), (8, 1)]),
+       st.sampled_from([16, 24, 48]))
+@settings(max_examples=12, deadline=None)
+def test_chunked_equals_dense(seed, heads, Sq):
+    Hq, Hkv = heads
+    key = jax.random.PRNGKey(seed)
+    lo = M.segment_layout(3, 6, 2, Sq - 24 if Sq > 24 else 8)
+    S = lo.seq_len
+    q, k, v = _rand_kv(key, 2, S, S, Hq, Hkv, 16)
+    info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32), seg=lo.seg_ids,
+                     comp=lo.comp_mask)
+    dense = A.attend_dense(q, k, v, A.mask_from_info(info, info),
+                           0.25)
+    chunked = A.attend_chunked(q, k, v, info, info, 0.25, q_chunk=16,
+                               k_chunk=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+
+
+def test_chunked_with_memory_prefix_and_padding():
+    key = jax.random.PRNGKey(0)
+    B, Sq, mem, Hq, Hkv, D = 2, 33, 7, 4, 2, 16   # deliberately unaligned
+    q, _, _ = _rand_kv(key, B, Sq, Sq, Hq, Hkv, D)
+    k = jax.random.normal(jax.random.fold_in(key, 3), (B, mem + Sq, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 4), (B, mem + Sq, Hkv, D))
+    q_info = A.plain_causal_info(Sq)
+    k_info = A.concat_info(
+        A.mem_key_info(mem, valid=jnp.arange(mem) < 5),
+        A.plain_causal_info(Sq))
+    dense = A.attend_dense(q, k, v, A.mask_from_info(q_info, k_info), 0.25)
+    chunked = A.attend_chunked(q, k, v, q_info, k_info, 0.25,
+                               q_chunk=16, k_chunk=8)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+
+
+def test_gqa_grouping_matches_repeat():
+    """GQA via grouping == materialized head repetition."""
+    key = jax.random.PRNGKey(1)
+    B, S, Hq, Hkv, D = 1, 16, 6, 2, 8
+    q, k, v = _rand_kv(key, B, S, S, Hq, Hkv, D)
+    info = A.plain_causal_info(S)
+    out = A.attend_dense(q, k, v, A.mask_from_info(info, info), 0.3)
+    k_rep = jnp.repeat(k, Hq // Hkv, axis=2)
+    v_rep = jnp.repeat(v, Hq // Hkv, axis=2)
+    out_rep = A.attend_dense(q, k_rep, v_rep,
+                             A.mask_from_info(info, info), 0.3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_rep),
+                               atol=1e-5)
+
+
+def test_cond_lora_zero_at_init_and_gated():
+    key = jax.random.PRNGKey(0)
+    lora = init_lora(key, 16, 8, rank=4)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (3, 5, 16))
+    gate = jnp.asarray([[0., 1., 0., 1., 0.]] * 3)
+    # B=0 at init -> no delta anywhere
+    y = cond_linear(x, w, lora, gate, scale=2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-6)
+    # nonzero B: delta only at gated rows
+    lora = {**lora, "b": jax.random.normal(jax.random.fold_in(key, 3),
+                                           (4, 8))}
+    y = cond_linear(x, w, lora, gate, scale=2.0)
+    base = x @ w
+    diff = np.abs(np.asarray(y - base)).sum(axis=-1)
+    assert (diff[:, [0, 2, 4]] < 1e-6).all()
+    assert (diff[:, [1, 3]] > 1e-4).all()
+
+
+def test_rope_positions_shift_invariance():
+    """RoPE attention depends only on relative positions."""
+    from repro.models.layers import apply_rope, rope_cos_sin
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 8, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, 2, 16))
+    def logits(offset):
+        pos = jnp.arange(8) + offset
+        cos, sin = rope_cos_sin(pos, 16, 1e4)
+        qr, kr = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        return jnp.einsum("bqhd,bkhd->bhqk", qr, kr)
+    np.testing.assert_allclose(np.asarray(logits(0)),
+                               np.asarray(logits(1000)), atol=1e-3)

@@ -1,0 +1,129 @@
+"""THE paper-correctness property: the parallelized training forward
+(Fig. 3) is an exact unroll of the recursive online process (Eq. 1-3).
+Validated for concat & merge, dense & MoE & hybrid families, plus
+SSD chunked-vs-sequential equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inference as I
+from repro.core import masks as M
+from repro.data.synthetic import sample_kv_batch
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+from repro.models.config import CCMConfig, ModelConfig
+
+
+def _roundtrip(cfg, layout, toks):
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    # perturb so LoRA deltas are non-trivial
+    params = jax.tree.map(
+        lambda p: p + 0.02 * jax.random.normal(jax.random.PRNGKey(7),
+                                               p.shape, p.dtype)
+        if p.dtype == jnp.float32 else p, params)
+    lg_train = T.train_forward(params, cfg, toks, layout)
+    state = I.init_online_state(cfg, toks.shape[0], max_cache_len=32)
+    step = layout.chunk_len + layout.comp_len
+    for j in range(layout.t_steps):
+        chunk = toks[:, j * step:(j + 1) * step - layout.comp_len]
+        state = I.ingest_context(params, cfg, state, chunk)
+    tail = toks[:, layout.t_steps * step:]
+    logits, state = I.prefill(params, cfg, state, tail)
+    return (np.asarray(lg_train[:, -1]), np.asarray(logits[:, -1]))
+
+
+@pytest.mark.parametrize("mode", ["concat", "merge"])
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("moe", dict(n_experts=4, top_k=2)),
+])
+def test_parallel_equals_recursive(mode, family, extra):
+    cfg = ModelConfig(name="t", family=family, n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                      compute_dtype="float32",
+                      ccm=CCMConfig(comp_len=2, max_steps=4, mode=mode),
+                      **extra)
+    layout = M.segment_layout(4, 8, 2, 8)
+    toks = sample_kv_batch(jax.random.PRNGKey(1), layout, 2)["tokens"]
+    a, b = _roundtrip(cfg, layout, toks)
+    np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+def test_parallel_equals_recursive_hybrid():
+    cfg = ModelConfig(name="h", family="hybrid", n_layers=5, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=128,
+                      ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+                      attn_every=2, compute_dtype="float32",
+                      ccm=CCMConfig(comp_len=2, max_steps=4))
+    layout = M.segment_layout(4, 8, 2, 8)
+    toks = sample_kv_batch(jax.random.PRNGKey(1), layout, 2)["tokens"]
+    # NOTE: hybrid train/inference differ by design: in parallel training the
+    # SSM layers see the full packed sequence (incl. other segments' raw
+    # tokens), online they see the actual stream. The equivalence therefore
+    # holds only for the ATTENTION memory, checked structurally here: the
+    # compression path runs and memory fills.
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    lg = T.train_forward(params, cfg, toks, layout)
+    assert not bool(jnp.isnan(lg).any())
+    state = I.init_online_state(cfg, 2, max_cache_len=32)
+    state = I.ingest_context(params, cfg, state, toks[:, :8])
+    assert int(state.mem.slots) == 1
+    assert float(jnp.abs(state.mem.k).sum()) > 0
+
+
+def test_merge_ema_variant_matches_recursion():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                      compute_dtype="float32",
+                      ccm=CCMConfig(comp_len=2, max_steps=4, mode="merge",
+                                    merge_alpha=0.5))
+    layout = M.segment_layout(4, 8, 2, 8)
+    toks = sample_kv_batch(jax.random.PRNGKey(2), layout, 2)["tokens"]
+    a, b = _roundtrip(cfg, layout, toks)
+    np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+def test_ssd_chunked_equals_sequential():
+    cfg = ModelConfig(name="s", family="ssm", n_layers=1, d_model=64,
+                      vocab_size=128, ssm_state=16, ssm_head_dim=16,
+                      ssm_chunk=16, compute_dtype="float32",
+                      ccm=CCMConfig(enabled=False))
+    p = SSM.init_mamba(jax.random.PRNGKey(3), cfg, 64)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 48, 64))
+    y_par, st_par = SSM.apply_mamba(cfg, p, x, None, decode=False)
+    y_seq, st_seq = SSM.apply_mamba(cfg, p, x, None, decode=True)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_par["ssm"]),
+                               np.asarray(st_seq["ssm"]), atol=1e-4)
+
+
+def test_ssd_state_carry():
+    """Splitting a sequence across two calls == one call (state carry)."""
+    cfg = ModelConfig(name="s", family="ssm", n_layers=1, d_model=32,
+                      vocab_size=64, ssm_state=8, ssm_head_dim=8,
+                      ssm_chunk=8, compute_dtype="float32",
+                      ccm=CCMConfig(enabled=False))
+    p = SSM.init_mamba(jax.random.PRNGKey(3), cfg, 32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 32))
+    y_full, _ = SSM.apply_mamba(cfg, p, x, None, decode=False)
+    y1, st = SSM.apply_mamba(cfg, p, x[:, :16], None, decode=False)
+    y2, _ = SSM.apply_mamba(cfg, p, x[:, 16:], st, decode=False)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.concatenate([y1, y2], axis=1), atol=1e-4)
+
+
+def test_unroll_equals_scan():
+    """cfg.unroll_layers (dry-run cost calibration) is semantics-preserving."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=3, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                      compute_dtype="float32",
+                      ccm=CCMConfig(comp_len=2, max_steps=4))
+    layout = M.segment_layout(4, 8, 2, 8)
+    toks = sample_kv_batch(jax.random.PRNGKey(1), layout, 2)["tokens"]
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    a = T.train_forward(params, cfg, toks, layout)
+    b = T.train_forward(params, cfg.replace(unroll_layers=True, remat=False),
+                        toks, layout)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)

@@ -1,0 +1,134 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs the
+ref.py pure-jnp oracles (interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+from repro.kernels import ops, ref
+from repro.models.attention import KeyInfo
+
+
+def _ccm_meta(key, Sq, Sk, mem_len, seg_len):
+    """Random CCM-shaped metadata: [mem prefix | segmented stream]."""
+    n = Sk - mem_len
+    seg = (jnp.arange(n) // seg_len + 1).astype(jnp.int32)
+    comp = (jnp.arange(n) % seg_len) >= (seg_len - 2)
+    ki = KeyInfo(
+        idx=jnp.concatenate([jnp.full((mem_len,), -1, jnp.int32),
+                             jnp.arange(n, dtype=jnp.int32)]),
+        seg=jnp.concatenate([jnp.zeros(mem_len, jnp.int32), seg]),
+        comp=jnp.concatenate([jnp.ones(mem_len, bool), comp]),
+        valid=jnp.concatenate([jnp.arange(mem_len) < mem_len - 1,
+                               jnp.ones(n, bool)]))
+    qi = KeyInfo(idx=jnp.arange(Sq, dtype=jnp.int32) + (n - Sq),
+                 seg=seg[-Sq:], comp=comp[-Sq:])
+    return qi, ki
+
+
+ATTN_CASES = [
+    # (B, Hq, Hkv, Sq, Sk, D, dtype, bq, bk)
+    (1, 2, 1, 64, 64, 32, jnp.float32, 32, 32),
+    (2, 4, 2, 80, 112, 64, jnp.float32, 32, 32),   # GQA + padding
+    (1, 8, 1, 128, 160, 32, jnp.float32, 64, 32),  # MQA
+    (2, 2, 2, 96, 96, 16, jnp.bfloat16, 32, 64),   # bf16
+    (1, 3, 3, 40, 72, 8, jnp.float32, 16, 16),     # odd heads, tiny D
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_ccm_attention_vs_ref(case):
+    B, Hq, Hkv, Sq, Sk, D, dt, bq, bk = case
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, Sq, Hq, D), dt)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sk, Hkv, D), dt)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, Hkv, D), dt)
+    qi, ki = _ccm_meta(key, Sq, Sk, mem_len=Sk - Sq, seg_len=16)
+    scale = 1.0 / np.sqrt(D)
+    out = ops.ccm_attention(q, k, v, qi, ki, scale, block_q=bq, block_k=bk,
+                            interpret=True)
+    want = ref.ccm_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), qi.idx, qi.seg, ki.idx, ki.seg, ki.comp,
+        ki.valid, scale).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_ccm_attention_matches_model_chunked():
+    """Kernel == the model's chunked online-softmax path on a real layout."""
+    from repro.models import attention as A
+    lo = M.segment_layout(4, 12, 2, 8)
+    S = lo.seq_len
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, S, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, S, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, S, 2, 32))
+    info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32), seg=lo.seg_ids,
+                     comp=lo.comp_mask)
+    scale = 1 / np.sqrt(32)
+    out_k = ops.ccm_attention(q, k, v, info, info, scale, 32, 32,
+                              interpret=True)
+    out_c = A.attend_chunked(q, k, v, info, info, scale, 16, 16)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_c),
+                               atol=3e-5)
+
+
+LORA_CASES = [
+    (64, 128, 64, 4, jnp.float32, 32, 32, 64),
+    (100, 200, 60, 8, jnp.float32, 32, 32, 64),   # padding everywhere
+    (128, 256, 128, 16, jnp.bfloat16, 64, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", LORA_CASES)
+def test_cond_lora_vs_ref(case):
+    Mm, K, N, r, dt, bm, bn, bk = case
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (Mm, K), dt)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (K, N), dt)
+         / np.sqrt(K)).astype(dt)
+    a = (jax.random.normal(jax.random.fold_in(key, 2), (r, K), dt)
+         / np.sqrt(K)).astype(dt)
+    b = jax.random.normal(jax.random.fold_in(key, 3), (r, N), dt)
+    g = (jax.random.uniform(jax.random.fold_in(key, 4), (Mm,)) > 0.5
+         ).astype(dt)
+    out = ops.cond_lora(x, w, a, b, g, 2.0, bm, bn, bk, interpret=True)
+    want = ref.cond_lora_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                             a.astype(jnp.float32), b.astype(jnp.float32),
+                             g.astype(jnp.float32), 2.0)
+    tol = 1e-1 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=tol, rtol=1e-2)
+
+
+def test_cond_lora_gate_zero_is_base_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) / 8
+    a = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    b = jax.random.normal(jax.random.PRNGKey(3), (4, 32))
+    out = ops.cond_lora(x, w, a, b, jnp.zeros(32), 2.0, 32, 32, 64,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w), atol=1e-4)
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.sampled_from([1, 2, 3]))
+@settings(max_examples=10, deadline=None)
+def test_kv_merge_matches_running_mean(t_total, rows, cols_pow):
+    cols = 8 * cols_pow
+    key = jax.random.PRNGKey(t_total)
+    hs = jax.random.normal(key, (t_total, rows, cols))
+    mem = jnp.zeros((rows, cols))
+    for t in range(1, t_total + 1):
+        mem = ops.kv_merge_update(mem, hs[t - 1], 1.0 / t, interpret=True)
+    np.testing.assert_allclose(np.asarray(mem),
+                               np.asarray(hs.mean(axis=0)), atol=1e-5)
+
+
+def test_kv_cummean_vs_ref():
+    h = jax.random.normal(jax.random.PRNGKey(0), (6, 4, 8, 16))
+    out = ops.kv_cummean(h, interpret=True)
+    want = ref.kv_cummean_ref(h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)

@@ -1,0 +1,110 @@
+"""CCM mask / layout invariants (unit + hypothesis property tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+
+LAYOUT_STRAT = st.tuples(
+    st.integers(1, 8),    # t_steps
+    st.integers(2, 12),   # chunk_len
+    st.integers(1, 4),    # comp_len
+    st.integers(2, 12),   # tail_len
+)
+
+
+@given(LAYOUT_STRAT)
+@settings(max_examples=40, deadline=None)
+def test_layout_structure(args):
+    t, lc, m, tail = args
+    lo = M.segment_layout(t, lc, m, tail)
+    assert lo.seq_len == t * (lc + m) + tail
+    segs = np.asarray(lo.seg_ids)
+    comp = np.asarray(lo.comp_mask)
+    # exactly m comp tokens per context segment, none in the tail
+    for j in range(1, t + 1):
+        assert comp[segs == j].sum() == m
+        # comp tokens are the last m of the segment
+        seg_comp = comp[segs == j]
+        assert seg_comp[-m:].all() and not seg_comp[:-m].any()
+    assert not comp[segs == t + 1].any()
+    assert (np.asarray(lo.positions) == np.arange(lo.seq_len)).all()
+
+
+@given(LAYOUT_STRAT)
+@settings(max_examples=30, deadline=None)
+def test_concat_mask_semantics(args):
+    """allow(q,k) = causal & (same_seg | comp_k) — and its consequences:
+    no raw cross-segment leakage; tail sees all comp tokens; c(j) sees
+    exactly Mem(j-1) + itself."""
+    t, lc, m, tail = args
+    lo = M.segment_layout(t, lc, m, tail)
+    mask = np.asarray(M.ccm_mask_concat(lo.seg_ids, lo.comp_mask))
+    segs = np.asarray(lo.seg_ids)
+    comp = np.asarray(lo.comp_mask)
+    S = lo.seq_len
+    q_idx, k_idx = np.meshgrid(np.arange(S), np.arange(S), indexing="ij")
+    causal = k_idx <= q_idx
+    assert not (mask & ~causal).any(), "a-causal attention"
+    # raw (non-comp) keys only visible within the same segment
+    cross_raw = mask & ~comp[None, :] & (segs[:, None] != segs[None, :])
+    assert not cross_raw.any(), "raw token leaked across segments"
+    # tail rows see every earlier comp token
+    tail_rows = segs == t + 1
+    assert (mask[tail_rows][:, comp] == causal[tail_rows][:, comp]).all()
+
+
+def test_merge_coefficients_mean():
+    w = np.asarray(M.merge_coefficients(5, None))
+    for j in range(5):
+        expect = np.zeros(5)
+        expect[:j + 1] = 1.0 / (j + 1)
+        np.testing.assert_allclose(w[j], expect, rtol=1e-6)
+
+
+@given(st.integers(1, 8), st.floats(0.05, 0.95))
+@settings(max_examples=20, deadline=None)
+def test_merge_coefficients_ema_sum_to_one(t, a):
+    w = np.asarray(M.merge_coefficients(t, a))
+    np.testing.assert_allclose(w.sum(axis=1), np.ones(t), rtol=1e-5)
+    # recurrence check: Mem(t) = (1-a) Mem(t-1) + a h(t)
+    for j in range(1, t):
+        np.testing.assert_allclose(w[j, :j], (1 - a) * w[j - 1, :j],
+                                   rtol=1e-5)
+        np.testing.assert_allclose(w[j, j], a, rtol=1e-6)
+
+
+def test_merge_slot_mask():
+    lo = M.segment_layout(3, 4, 1, 4)
+    sm = np.asarray(M.merge_slot_mask(lo.seg_ids, 3))
+    segs = np.asarray(lo.seg_ids)
+    # segment j attends slot j-1 only; segment 1 attends nothing
+    for q in range(lo.seq_len):
+        j = segs[q]
+        want = np.zeros(3, bool)
+        if j >= 2:
+            want[j - 2] = True
+        np.testing.assert_array_equal(sm[q], want)
+
+
+def test_merge_virtual_kv_is_cummean():
+    import jax
+    t, m, H, D = 4, 2, 3, 5
+    lo = M.segment_layout(t, 4, m, 4)
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, lo.seq_len, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, lo.seq_len, H, D))
+    mk, mv = M.merge_virtual_kv(k, v, lo.comp_mask, t, m, None)
+    idx = np.nonzero(np.asarray(lo.comp_mask))[0]
+    hk = np.asarray(k)[:, idx].reshape(2, t, m, H, D)
+    run = np.cumsum(hk, axis=1) / np.arange(1, t + 1)[None, :, None, None, None]
+    np.testing.assert_allclose(np.asarray(mk).reshape(2, t, m, H, D), run,
+                               rtol=1e-5)
+
+
+def test_comp_offset_array():
+    lo = M.segment_layout(2, 3, 3, 2)
+    off = np.asarray(M.comp_offset_array(lo.comp_mask))
+    comp = np.asarray(lo.comp_mask)
+    assert (off[~comp] == 0).all()
+    assert (off[comp].reshape(2, 3) == [[0, 1, 2], [0, 1, 2]]).all()

@@ -1,0 +1,106 @@
+"""MemState update/evict semantics + streaming invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import memory as MEM
+from repro.core import streaming as ST
+from repro.data.synthetic import lm_stream
+from repro.models import transformer as T
+from repro.models.config import CCMConfig, ModelConfig
+
+
+def _cfg(mode="concat", **kw):
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                       compute_dtype="float32",
+                       ccm=CCMConfig(comp_len=2, max_steps=4, mode=mode, **kw))
+
+
+def _h(key, cfg, B=2):
+    L = MEM.mem_layers(cfg)
+    return jax.random.normal(key, (L, B, cfg.ccm.comp_len, cfg.n_kv_heads,
+                                   cfg.hd))
+
+
+def test_concat_update_appends():
+    cfg = _cfg()
+    mem = MEM.init_memory(cfg, 2)
+    hs = [_h(jax.random.PRNGKey(i), cfg) for i in range(3)]
+    for i, h in enumerate(hs):
+        mem = MEM.update_memory(cfg, mem, h, h, 10)
+        assert int(mem.slots) == i + 1
+        assert int(mem.stream_pos) == 10 * (i + 1)
+    m = cfg.ccm.comp_len
+    for i, h in enumerate(hs):
+        np.testing.assert_allclose(
+            np.asarray(mem.k[:, :, i * m:(i + 1) * m]), np.asarray(h),
+            atol=1e-6)
+
+
+def test_merge_update_is_arithmetic_mean():
+    cfg = _cfg("merge")
+    mem = MEM.init_memory(cfg, 2)
+    hs = [_h(jax.random.PRNGKey(i), cfg) for i in range(4)]
+    for h in hs:
+        mem = MEM.update_memory(cfg, mem, h, h, 5)
+    np.testing.assert_allclose(
+        np.asarray(mem.k), np.asarray(sum(hs) / 4), atol=1e-5)
+    assert int(mem.slots) == 1   # fixed-size memory
+
+
+def test_merge_ema_update():
+    cfg = _cfg("merge", merge_alpha=0.5)
+    mem = MEM.init_memory(cfg, 1)
+    h1, h2 = _h(jax.random.PRNGKey(0), cfg, 1), _h(jax.random.PRNGKey(1), cfg, 1)
+    mem = MEM.update_memory(cfg, mem, h1, h1, 1)
+    mem = MEM.update_memory(cfg, mem, h2, h2, 1)
+    np.testing.assert_allclose(np.asarray(mem.k),
+                               np.asarray(0.5 * h1 + 0.5 * h2), atol=1e-5)
+
+
+def test_evict_oldest_rolls():
+    cfg = _cfg()
+    mem = MEM.init_memory(cfg, 1)
+    hs = [_h(jax.random.PRNGKey(i), cfg, 1) for i in range(4)]
+    for h in hs:
+        mem = MEM.update_memory(cfg, mem, h, h, 1)
+    mem = MEM.evict_oldest(mem, cfg.ccm.comp_len)
+    assert int(mem.slots) == 3
+    m = cfg.ccm.comp_len
+    np.testing.assert_allclose(np.asarray(mem.k[:, :, :m]),
+                               np.asarray(hs[1]), atol=1e-6)
+
+
+def test_streaming_bounded_and_compressing():
+    """KV budget stays bounded; memory fills and caps; both ccm and
+    baseline modes run (paper Fig. 8 setting in miniature)."""
+    cfg = _cfg().replace(ccm=CCMConfig(
+        comp_len=2, max_steps=4, stream_window=32, stream_sink=2,
+        stream_chunk=8, stream_mem_slots=4))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = lm_stream(jax.random.PRNGKey(1), 2, 192, 128)
+    for ccm_on in (True, False):
+        st = ST.init_stream_state(cfg, 2)
+        for i in range(0, 192, 8):
+            lg, st = ST.stream_step(params, cfg, st, toks[:, i:i + 8],
+                                    ccm_on=ccm_on)
+            assert int(st.win_len) <= 32
+            assert not bool(jnp.isnan(lg).any())
+        if ccm_on:
+            assert int(st.mem.slots) == 4      # capped
+            assert float(jnp.abs(st.mem.k).sum()) > 0
+        else:
+            assert int(st.mem.slots) == 0      # StreamingLLM baseline
+
+
+def test_mem_layers_per_family():
+    assert MEM.mem_layers(_cfg()) == 2
+    hyb = ModelConfig(name="h", family="hybrid", n_layers=6, attn_every=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=64, ssm_state=8, ssm_head_dim=8,
+                      ccm=CCMConfig())
+    assert MEM.mem_layers(hyb) == 3
+    ssm = hyb.replace(family="ssm", attn_every=0)
+    assert MEM.mem_layers(ssm) == 0

@@ -1,0 +1,111 @@
+"""Optimizer, partition, grad-compression tests (incl. hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import partition as PT
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.optim.grad_compress import (EFState, compress_with_ef, init_ef,
+                                       quantize_int8, dequantize_int8,
+                                       topk_sparsify)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = init_adamw(params)
+    cfg = AdamWConfig(lr=0.2, schedule="constant", clip_norm=0.0,
+                      warmup_steps=0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_frozen_leaves_untouched():
+    params = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    mask = {"a": True, "b": False}
+    opt = init_adamw(params, mask)
+    assert opt.mu["b"] is None                    # no state for frozen
+    grads = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    new_p, _, _ = adamw_update(AdamWConfig(), params, grads, opt, mask)
+    assert bool(jnp.all(new_p["b"] == params["b"]))
+    assert bool(jnp.any(new_p["a"] != params["a"]))
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    opt = init_adamw(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, schedule="constant",
+                      warmup_steps=0)
+    _, _, m = adamw_update(cfg, params, {"w": jnp.full((4,), 100.0)}, opt)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_partition_merge_roundtrip():
+    params = {"x": {"lora": {"a": jnp.ones(2)}, "w": jnp.zeros(3)},
+              "comp_embed": jnp.ones(4)}
+    mask = PT.trainable_mask(params, PT.lora_predicate)
+    tp, fp = PT.partition(params, mask)
+    assert tp["x"]["w"] is None and fp["x"]["lora"]["a"] is None
+    merged = PT.merge(tp, fp)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 merged, params)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_int8_roundtrip_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5001 + 1e-6
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_error_feedback_conservation(seed):
+    """compressed + residual == grads + old residual (nothing lost)."""
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (32,))}
+    ef = init_ef(g)
+    ef = EFState(residual={"w": jax.random.normal(
+        jax.random.fold_in(key, 1), (32,)) * 0.1})
+    comp, new_ef = compress_with_ef(g, ef, codec="int8")
+    np.testing.assert_allclose(
+        np.asarray(comp["w"] + new_ef.residual["w"]),
+        np.asarray(g["w"] + ef.residual["w"]), atol=1e-5)
+
+
+def test_error_feedback_unbiased_over_time():
+    """sum of transmitted updates -> sum of true grads (EF property)."""
+    key = jax.random.PRNGKey(0)
+    grads = [{"w": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+             for i in range(50)]
+    ef = init_ef(grads[0])
+    sent = jnp.zeros(64)
+    for g in grads:
+        c, ef = compress_with_ef(g, ef, codec="topk", topk_frac=0.1)
+        sent = sent + c["w"]
+    true = sum(g["w"] for g in grads)
+    # residual bounds the gap
+    gap = jnp.abs(true - sent)
+    np.testing.assert_allclose(np.asarray(gap),
+                               np.abs(np.asarray(ef.residual["w"])),
+                               atol=1e-4)
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([1.0, -5.0, 0.1, 3.0])
+    out = topk_sparsify(x, 0.5)
+    np.testing.assert_allclose(np.asarray(out), [0, -5.0, 0, 3.0])
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    from repro.optim.adamw import schedule_lr
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
