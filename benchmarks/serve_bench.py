@@ -1,0 +1,174 @@
+"""Multi-tenant serving benchmark: continuous batching vs naive loop.
+
+Measures what the serve subsystem buys over the obvious baseline on the
+same workload — N independent user sessions, each ingesting ``turns``
+context chunks then issuing one query:
+
+  naive   — per-session loop over the single-session jitted steps
+            (one B=1 dispatch per op, as examples/serve_online.py would
+            do per user)
+  engine  — repro.serve.ServeEngine: continuous batching over the
+            session arena, one vmapped dispatch per bucketed batch
+
+Also checks the LRU offload path end-to-end: a session offloaded to host
+and restored must reproduce its query logits EXACTLY (allclose) vs a
+never-offloaded run.
+
+Weights are random — throughput and state-exactness don't need a trained
+adapter (accuracy benchmarks live in benchmarks/tables.py).
+
+    PYTHONPATH=src python benchmarks/serve_bench.py
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, ".")
+sys.path.insert(0, "benchmarks")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import inference as I
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+
+
+def _workload(n_sessions, turns, chunk, qlen, vocab, seed=0):
+    rng = np.random.RandomState(seed)
+    return [
+        {"chunks": [rng.randint(0, vocab, size=chunk).astype(np.int32)
+                    for _ in range(turns)],
+         "query": rng.randint(0, vocab, size=qlen).astype(np.int32)}
+        for _ in range(n_sessions)
+    ]
+
+
+def run_naive(params, cfg, work, cache_len, repeats=3):
+    ingest = jax.jit(lambda s, c: I.ingest_context(params, cfg, s, c))
+    query = jax.jit(lambda s, q: I.prefill(params, cfg, s, q,
+                                           full_logits=True))
+    def one(w):
+        st = I.init_online_state(cfg, 1, max_cache_len=cache_len)
+        for c in w["chunks"]:
+            st = ingest(st, c[None])
+        lg, _ = query(st, w["query"][None])
+        return lg
+    jax.block_until_ready(one(work[0]))        # compile outside the clock
+    best, outs = None, None
+    for _ in range(repeats):                   # best-of-N: 2-core container
+        t0 = time.perf_counter()               # timing is noisy
+        o = [one(w) for w in work]
+        jax.block_until_ready(o)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best, outs = dt, o
+    return best, [np.asarray(o[0]) for o in outs]
+
+
+def run_engine(params, cfg, work, cache_len, warm=True):
+    eng = ServeEngine(params, cfg, n_slots=len(work) + 1,
+                      cache_len=cache_len)
+    if warm:
+        # two throwaway waves compile everything outside the clock: the
+        # fused steps (wave 1) and the recycled-slot zeroing scatter
+        # (wave 2 reuses wave 1's dirtied slots)
+        for wave in range(2):
+            wwork = _workload(len(work), len(work[0]["chunks"]),
+                              work[0]["chunks"][0].size,
+                              work[0]["query"].size,
+                              cfg.vocab_size, seed=123 + wave)
+            for s, w in enumerate(wwork):
+                eng.create_session(f"warm{wave}_{s}")
+            for t in range(len(work[0]["chunks"])):
+                for s, w in enumerate(wwork):
+                    eng.ingest(f"warm{wave}_{s}", w["chunks"][t])
+                eng.run()
+            for s, w in enumerate(wwork):
+                eng.query(f"warm{wave}_{s}", w["query"])
+            eng.run()
+            for s in range(len(wwork)):
+                eng.close_session(f"warm{wave}_{s}")
+    best, reqs = None, None
+    for rep in range(3):                       # best-of-N, fresh sessions
+        t0 = time.perf_counter()               # each rep (same shapes)
+        for s, w in enumerate(work):
+            eng.create_session(f"u{rep}_{s}")
+        for t in range(len(work[0]["chunks"])):
+            for s, w in enumerate(work):
+                eng.ingest(f"u{rep}_{s}", w["chunks"][t])
+        rr = [eng.query(f"u{rep}_{s}", w["query"])
+              for s, w in enumerate(work)]
+        eng.run()
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best, reqs = dt, rr
+        for s in range(len(work)):
+            eng.close_session(f"u{rep}_{s}")
+    return best, [np.asarray(r.result) for r in reqs], eng
+
+
+def offload_roundtrip_check(params, cfg, work, cache_len):
+    """Logits after offload->restore == logits never offloaded."""
+    w = work[0]
+    outs = []
+    for do_offload in (False, True):
+        eng = ServeEngine(params, cfg, n_slots=2, cache_len=cache_len)
+        eng.create_session("u")
+        for c in w["chunks"]:
+            eng.ingest("u", c)
+        eng.run()
+        if do_offload:
+            eng.offload_session("u")
+        r = eng.query("u", w["query"])
+        eng.run()
+        outs.append(np.asarray(r.result))
+    return np.allclose(outs[0], outs[1], atol=0.0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=96)
+    ap.add_argument("--turns", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--qlen", type=int, default=4)
+    args = ap.parse_args()
+
+    # serve-bench config: half-width bench model so the per-op dispatch
+    # floor (what continuous batching amortizes) is visible on a 2-core
+    # CPU container; trends/ratios are the target, not absolute numbers
+    cfg = C.bench_cfg(d_model=64, d_ff=128, n_heads=4, n_kv_heads=2)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    cache_len = 4 * args.qlen
+    work = _workload(args.sessions, args.turns, args.chunk, args.qlen,
+                     cfg.vocab_size)
+    tok_total = args.sessions * (args.turns * args.chunk + args.qlen)
+
+    t_naive, out_naive = run_naive(params, cfg, work, cache_len)
+    t_eng, out_eng, eng = run_engine(params, cfg, work, cache_len)
+
+    ok = all(np.allclose(a, b, atol=1e-5)
+             for a, b in zip(out_naive, out_eng))
+    exact = offload_roundtrip_check(params, cfg, work, cache_len)
+
+    print(f"\nsessions={args.sessions} turns={args.turns} "
+          f"chunk={args.chunk} qlen={args.qlen} "
+          f"({tok_total} tokens total)")
+    print(f"naive per-session loop : {t_naive:7.3f} s  "
+          f"{tok_total / t_naive:9.0f} tok/s")
+    print(f"continuous batching    : {t_eng:7.3f} s  "
+          f"{tok_total / t_eng:9.0f} tok/s")
+    print(f"speedup                : {t_naive / t_eng:7.2f}x")
+    print(f"engine == naive logits : {ok}")
+    print(f"offload->restore exact : {exact}")
+    print(f"compiled programs      : {eng.compile_stats()}")
+    if t_naive / t_eng < 3.0:
+        print("WARNING: speedup below the 3x acceptance bar")
+    C.csv_row("serve_naive", t_naive * 1e6, f"{tok_total / t_naive:.0f} tok/s")
+    C.csv_row("serve_batched", t_eng * 1e6, f"{tok_total / t_eng:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -123,6 +123,20 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
     cc = cfg.ccm.stream_chunk
     sink = cfg.ccm.stream_sink
     W = cfg.ccm.stream_window
+    # Only ONE eviction (of cc tokens) fires per step, and the
+    # dynamic_update_slice window write clamps silently — a chunk larger
+    # than the eviction quantum (or an eviction block that doesn't fit
+    # behind the sink) would overflow the window and corrupt the newest
+    # KV rows.  Reject at trace time.
+    if c > cc:
+        raise ValueError(
+            f"stream_step chunk ({c} tokens) exceeds stream_chunk ({cc}): "
+            "one eviction per step cannot keep the window bounded; split "
+            "the input into chunks of at most cfg.ccm.stream_chunk")
+    if sink + cc > W:
+        raise ValueError(
+            f"stream_sink ({sink}) + stream_chunk ({cc}) exceeds "
+            f"stream_window ({W}): the eviction block does not fit")
 
     def do_evict(s: StreamState) -> StreamState:
         if ccm_on:

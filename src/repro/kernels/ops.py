@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from repro.kernels import ccm_attention as _attn
 from repro.kernels import cond_lora as _lora
 from repro.kernels import kv_merge as _merge
+from repro.kernels import ref as _ref
+from repro.kernels import session_gather as _sess
 
 
 def _use_interpret() -> bool:
@@ -75,6 +77,38 @@ def cond_lora(x, w, a, b, gate, scale: float, block_m: int = 128,
                                  block_m=block_m, block_n=block_n,
                                  block_k=block_k, interpret=interpret)
     return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def session_gather(slab, ids, interpret: Optional[bool] = None):
+    """Arena pack: slab (S, ...), ids (B,) int32 -> (B, ...) rows.
+
+    TPU -> compiled Pallas DMA gather; elsewhere the pure-jnp ref (unless
+    ``interpret=True`` forces the Pallas interpreter for validation).
+    """
+    if interpret is None and not _use_interpret():
+        interpret = False
+    if interpret is None:
+        return _ref.session_gather_ref(slab, ids)
+    S = slab.shape[0]
+    flat = slab.reshape(S, -1)
+    out = _sess.session_gather(flat, ids, interpret=interpret)
+    return out.reshape((ids.shape[0],) + slab.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def session_scatter(slab, ids, rows, interpret: Optional[bool] = None):
+    """Arena unpack: slab (S, ...) with slab[ids] = rows (B, ...), in place
+    (the slab argument is donated on both backends)."""
+    if interpret is None and not _use_interpret():
+        interpret = False
+    if interpret is None:
+        return _ref.session_scatter_ref(slab, ids, rows)
+    S = slab.shape[0]
+    out = _sess.session_scatter(slab.reshape(S, -1), ids,
+                                rows.reshape(rows.shape[0], -1),
+                                interpret=interpret)
+    return out.reshape(slab.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -57,3 +57,13 @@ def kv_cummean_ref(h):
     denom = jnp.arange(1, h.shape[0] + 1, dtype=jnp.float32)
     denom = denom.reshape((-1,) + (1,) * (h.ndim - 1))
     return (csum / denom).astype(h.dtype)
+
+
+def session_gather_ref(slab, ids):
+    """Arena pack: slab (S, R), ids (B,) -> (B, R)."""
+    return jnp.take(slab, ids, axis=0)
+
+
+def session_scatter_ref(slab, ids, rows):
+    """Arena unpack: slab with slab[ids] = rows (last write wins on dups)."""
+    return slab.at[ids].set(rows)

@@ -1,0 +1,82 @@
+"""Session-arena pack/unpack kernels — Pallas TPU.
+
+The serving arena stores per-session state as slabs with a leading slot
+axis (S, R).  Building a scheduler batch is a row gather (pack) and the
+post-step writeback is a row scatter (unpack).  Both are pure DMA: the
+scalar-prefetched slot ids drive the BlockSpec index maps, so each grid
+step copies one (1, block_cols) tile HBM->VMEM->HBM with no compute.
+
+  session_gather  — rows = slab[ids]          (B, R) out of (S, R)
+  session_scatter — slab[ids] = rows, in place via input/output aliasing
+                    (donated slab buffer; untouched rows are not copied)
+
+Duplicate ids in ``session_scatter`` (the scheduler's padding rows all
+point at the arena's scratch slot) write the same row more than once;
+any serialization order is acceptable since pad rows carry scratch data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(ids_ref, src_ref, dst_ref):
+    del ids_ref
+    dst_ref[...] = src_ref[...]
+
+
+def session_gather(slab, ids, block_cols: int = 1024,
+                   interpret: bool = True):
+    """slab (S, R), ids (B,) int32 -> (B, R) packed rows."""
+    S, R = slab.shape
+    B = ids.shape[0]
+    bc = min(block_cols, R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, pl.cdiv(R, bc)),
+        in_specs=[pl.BlockSpec((1, bc), lambda b, c, ids_ref:
+                               (ids_ref[b], c))],
+        out_specs=pl.BlockSpec((1, bc), lambda b, c, ids_ref: (b, c)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R), slab.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), slab)
+
+
+def _scatter_kernel(ids_ref, rows_ref, slab_ref, out_ref):
+    del ids_ref, slab_ref
+    out_ref[...] = rows_ref[...]
+
+
+def session_scatter(slab, ids, rows, block_cols: int = 1024,
+                    interpret: bool = True):
+    """slab (S, R), ids (B,), rows (B, R) -> slab with slab[ids] = rows.
+
+    The slab operand is aliased to the output, so only the B touched rows
+    move; everything else stays in the donated buffer.
+    """
+    S, R = slab.shape
+    B = ids.shape[0]
+    bc = min(block_cols, R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, pl.cdiv(R, bc)),
+        in_specs=[
+            pl.BlockSpec((1, bc), lambda b, c, ids_ref: (b, c)),
+            pl.BlockSpec((1, bc), lambda b, c, ids_ref: (ids_ref[b], c)),
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda b, c, ids_ref:
+                               (ids_ref[b], c)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, R), slab.dtype),
+        input_output_aliases={2: 0},   # slab (after the prefetched ids) -> out
+        interpret=interpret,
+    )(ids.astype(jnp.int32), rows, slab)

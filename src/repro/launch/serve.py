@@ -90,6 +90,71 @@ def make_stream_step(cfg: ModelConfig, params_shapes,
         donate_argnums=(1,))
 
 
+# ---------------------------------------------------------------------------
+# multi-tenant session steps (repro.serve engine)
+#
+# The batched steps above share one scalar counter (pos/steps/length) per
+# batch — fine when one batch IS one user stream, wrong for a batch packed
+# from many independent sessions at different timeline points.  The
+# session steps vmap the single-session op instead: every state leaf gains
+# a leading session axis (arena pack layout) and each lane carries its own
+# counters.  `make_arena_step` fuses arena gather -> vmapped op -> scatter
+# into one jit per op kind; distinct (B, token_len) shapes each compile
+# once, so `fn._cache_size()` is the recompile-churn metric the serve
+# engine reports.  Single-host only for now (dist sharding of the session
+# axis is an open ROADMAP item).
+# ---------------------------------------------------------------------------
+
+def session_vmap(cfg: ModelConfig, op: str) -> Callable:
+    """Unjitted vmapped session op: (params, state(B,...), tokens (B,1,l)).
+
+    'ingest' -> state; 'query'/'stream' -> (logits (B,1,l,V), state).
+    Query = prefill of I(t) over [Mem, self] with full per-token logits.
+    For 'stream', vmap turns the eviction `cond` into a `select`, so the
+    compression pass runs every step on every lane."""
+    core = {
+        "ingest": lambda p, st, tk: I.ingest_context(p, cfg, st, tk),
+        "query": lambda p, st, tk: I.prefill(p, cfg, st, tk,
+                                             full_logits=True),
+        "stream": lambda p, st, tk: STR.stream_step(p, cfg, st, tk),
+    }[op]
+
+    def fn(params, state, tokens):
+        return jax.vmap(lambda st, tk: core(params, st, tk))(state, tokens)
+    return fn
+
+
+def make_arena_step(cfg: ModelConfig, op: str) -> Callable:
+    """Fused arena step: (params, slabs, ids (B,), tokens (B,1,l)) ->
+    (logits-or-None, slabs).
+
+    Gather of the batch's slot rows, the vmapped op, and the scatter of
+    updated rows run as ONE jitted program over the donated slabs — the
+    serve engine's hot path (no intermediate batch materialization, no
+    extra dispatch boundaries)."""
+    from repro.kernels import ops as KOPS
+    vf = session_vmap(cfg, op)
+
+    def fn(params, slabs, ids, tokens):
+        state = jax.tree.map(lambda s: KOPS.session_gather(s, ids), slabs)
+        # barrier: without it the remat'd layer scan recomputes the
+        # gather every layer (measured ~2x step time on CPU)
+        state = jax.lax.optimization_barrier(state)
+        if op == "ingest":
+            out, new = None, vf(params, state, tokens)
+        else:
+            out, new = vf(params, state, tokens)
+        # leaves the op left untouched come back as the SAME tracer
+        # (ingest never writes the KV cache, query never writes the
+        # memory) — skip their scatter entirely
+        slabs = jax.tree.map(
+            lambda s, old, r: s if r is old
+            else KOPS.session_scatter(s, ids, r),
+            slabs, state, new)
+        return out, slabs
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 def _jit_with_specs(fn, cfg: ModelConfig, dist: DistContext,
                     ingest: bool = False, batch_sharded: bool = True,
                     shard_cache_seq: bool = False,

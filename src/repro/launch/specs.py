@@ -57,6 +57,18 @@ SHAPES: Dict[str, ShapeSpec] = {
     "long_500k": ShapeSpec("long", 524288, 1),
 }
 
+# Serve-engine batch-size buckets: a short continuous-batching batch is
+# padded up to the next bucket so only these batch dims ever compile.
+SERVE_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def batch_bucket(n: int, buckets=SERVE_BATCH_BUCKETS) -> int:
+    """Smallest bucket >= n (largest bucket if n exceeds them all)."""
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    return max(buckets)
+
 
 def sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)

@@ -1,0 +1,20 @@
+"""Multi-tenant session serving over compressed context memory.
+
+The paper's premise — per-user context compressed into a tiny bounded
+memory — is what makes packing thousands of user sessions onto one
+device feasible.  This package is that serving layer:
+
+  arena.py     — fixed-shape device slabs of per-session state with a
+                 free-list and jitted pack/unpack (gather/scatter)
+  scheduler.py — continuous batching: queue per-session requests, group
+                 by op kind + shape, pad to bucketed batch sizes
+  session.py   — session lifecycle + LRU host offload of cold sessions
+  engine.py    — the driver loop wiring scheduler -> jitted steps
+"""
+from repro.serve.arena import ArenaFull, SessionArena
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
+from repro.serve.session import SessionManager
+
+__all__ = ["ArenaFull", "SessionArena", "ServeEngine", "Request",
+           "ScheduledBatch", "Scheduler", "SessionManager"]

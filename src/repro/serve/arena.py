@@ -1,0 +1,158 @@
+"""Fixed-shape device memory arena for per-session serving state.
+
+Every session's state (``OnlineState`` for ingest/query sessions,
+``StreamState`` for streaming ones) is one *row* of a set of preallocated
+slabs: each pytree leaf of the single-session template (inner batch dim
+1) becomes a slab with a leading ``(n_slots + 1,)`` axis.  Slot ids are
+handed out from a free-list; nothing is ever reallocated per session.
+
+``pack`` gathers any set of active slot ids into a contiguous batch for
+the vmapped session ops (`launch.serve.session_vmap`), and ``unpack``
+scatters the updated batch back — both one jitted gather/scatter over
+donated buffers (`kernels.ops.session_gather` / `session_scatter`,
+Pallas DMA on TPU).  The engine's hot path fuses all three into one
+program via `launch.serve.make_arena_step`; pack/unpack here serve the
+offload/restore and single-slot paths.
+
+Row ``n_slots`` is a reserved *scratch* slot: the scheduler pads a
+short batch up to its bucket size with ``pad_slot`` ids, so padding
+lanes gather scratch, compute garbage, and scatter the garbage back to
+scratch — shapes stay bucketed with no semantic effect.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import inference as I
+from repro.core import streaming as STR
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+
+
+class ArenaFull(RuntimeError):
+    """No free session slots (caller should offload or shed load)."""
+
+
+def online_template(cfg: ModelConfig, cache_len: int,
+                    mem_slots: Optional[int] = None):
+    """Single-session (inner batch 1) OnlineState shape tree."""
+    return jax.eval_shape(
+        functools.partial(I.init_online_state, cfg, 1, cache_len, mem_slots))
+
+
+def stream_template(cfg: ModelConfig):
+    """Single-session (inner batch 1) StreamState shape tree."""
+    return jax.eval_shape(functools.partial(STR.init_stream_state, cfg, 1))
+
+
+class SessionArena:
+    """Slab allocator + jitted pack/unpack for one state template."""
+
+    def __init__(self, template: Any, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("arena needs at least one slot")
+        self.template = template
+        self.n_slots = n_slots
+        self.pad_slot = n_slots          # reserved scratch row
+        self.slabs = jax.tree.map(
+            lambda s: jnp.zeros((n_slots + 1,) + s.shape, s.dtype), template)
+        self._free = deque(range(n_slots))
+        self._live = set()
+        self._dirty = set()           # slots that have ever been written
+        self._pack = jax.jit(self._pack_fn)
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+
+    # -- allocation ----------------------------------------------------
+    @classmethod
+    def for_online(cls, cfg: ModelConfig, n_slots: int, cache_len: int,
+                   mem_slots: Optional[int] = None) -> "SessionArena":
+        return cls(online_template(cfg, cache_len, mem_slots), n_slots)
+
+    @classmethod
+    def for_stream(cls, cfg: ModelConfig, n_slots: int) -> "SessionArena":
+        return cls(stream_template(cfg), n_slots)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.n_slots
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise ArenaFull(f"all {self.n_slots} slots in use")
+        slot = self._free.popleft()
+        self._live.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._live:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._live.remove(slot)
+        self._free.append(slot)
+
+    # -- batched pack/unpack -------------------------------------------
+    @staticmethod
+    def _pack_fn(slabs, ids):
+        return jax.tree.map(lambda slab: ops.session_gather(slab, ids), slabs)
+
+    @staticmethod
+    def _scatter_fn(slabs, ids, state):
+        return jax.tree.map(
+            lambda slab, rows: ops.session_scatter(slab, ids, rows),
+            slabs, state)
+
+    def pack(self, slot_ids: Sequence[int]):
+        """Gather slots into a batch: leaves (B,) + template shape."""
+        ids = jnp.asarray(slot_ids, jnp.int32)
+        return self._pack(self.slabs, ids)
+
+    def unpack(self, slot_ids: Sequence[int], state) -> None:
+        """Scatter an updated batch back (donates slabs + batch)."""
+        ids = jnp.asarray(slot_ids, jnp.int32)
+        self._dirty.update(int(i) for i in slot_ids)
+        self.slabs = self._scatter(self.slabs, ids, state)
+
+    def mark_dirty(self, slot_ids: Sequence[int]) -> None:
+        """Record external writes (the engine's fused step updates
+        ``slabs`` directly without going through ``unpack``)."""
+        self._dirty.update(int(i) for i in slot_ids)
+
+    # -- single-slot access (offload/restore path) ---------------------
+    def read_slot(self, slot: int):
+        """One session's state (template shape, no batch axis)."""
+        return jax.tree.map(lambda slab: slab[slot], self.slabs)
+
+    def write_slot(self, slot: int, state) -> None:
+        """Write one session's state (template shape) into a slot."""
+        batched = jax.tree.map(lambda x: jnp.asarray(x)[None], state)
+        self.unpack([slot], batched)
+
+    def reset_slots(self, slot_ids: Sequence[int]) -> None:
+        """Zero slots (fresh sessions) — never-written slots are already
+        zero from construction and are skipped; the rest are cleared with
+        one batched scatter, padded to a bucketed size (extra lanes hit
+        the scratch row) so the scatter only ever compiles per bucket."""
+        from repro.launch.specs import batch_bucket
+        stale = [s for s in slot_ids if s in self._dirty]
+        if not stale:
+            return
+        # bucket for the common case; fall back to the exact count when
+        # it exceeds the largest bucket (pad_slot may repeat — harmless)
+        n = max(batch_bucket(len(stale)), len(stale))
+        ids = stale + [self.pad_slot] * (n - len(stale))
+        zeros = jax.tree.map(
+            lambda s: jnp.zeros((n,) + s.shape, s.dtype), self.template)
+        self.unpack(ids, zeros)
+        self._dirty.difference_update(stale)
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero a slot (fresh session without a host-side init tree)."""
+        self.reset_slots([slot])

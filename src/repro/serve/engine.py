@@ -1,0 +1,209 @@
+"""Multi-tenant serve engine: scheduler -> arena -> jitted session steps.
+
+Drives the whole subsystem: requests queue in the `Scheduler`, `run`
+drains them batch by batch — activate the batch's sessions (LRU
+restore/offload via `SessionManager`), then one fused jitted program
+per batch (`launch.serve.make_arena_step`) gathers their arena rows,
+runs the vmapped op, and scatters the updated rows back, fulfilling the
+requests.  Per-op stats (tokens/s, batches, padding waste),
+arena occupancy and compile counts are tracked for the benchmark
+harness.
+
+Online sessions (ingest/query over ``OnlineState``) and streaming
+sessions (``stream`` over ``StreamState``) live in separate arenas since
+their state templates differ; ``stream_slots=0`` skips the second arena.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import serve as SRV
+from repro.launch.specs import SERVE_BATCH_BUCKETS
+from repro.models.config import ModelConfig
+from repro.serve.arena import SessionArena
+from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
+from repro.serve.session import SessionManager
+
+_OP_STATE = {"ingest": "online", "query": "online", "stream": "stream"}
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 64,
+                 cache_len: int = 256, mem_slots: Optional[int] = None,
+                 max_resident: Optional[int] = None, stream_slots: int = 0,
+                 stream_max_resident: Optional[int] = None,
+                 batch_buckets: Sequence[int] = SERVE_BATCH_BUCKETS):
+        self.params = params
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self._mgr: Dict[str, SessionManager] = {
+            "online": SessionManager(
+                SessionArena.for_online(cfg, n_slots, cache_len, mem_slots),
+                max_resident),
+        }
+        if stream_slots:
+            c = cfg.ccm
+            if c.stream_sink + c.stream_chunk > c.stream_window:
+                # stream_step raises this at trace time — mid-drain,
+                # after batches were popped; fail at construction instead
+                raise ValueError(
+                    f"stream_sink ({c.stream_sink}) + stream_chunk "
+                    f"({c.stream_chunk}) exceeds stream_window "
+                    f"({c.stream_window})")
+            self._mgr["stream"] = SessionManager(
+                SessionArena.for_stream(cfg, stream_slots),
+                stream_max_resident)
+        caps = {op: self._mgr[kind].max_resident
+                for op, kind in _OP_STATE.items() if kind in self._mgr}
+        self.scheduler = Scheduler(batch_buckets, max_batch=caps)
+        self._steps = {}               # op kind -> jitted fn
+        self._kind: Dict[str, str] = {}   # sid -> 'online' | 'stream'
+        self._cached: Dict[str, int] = {}  # sid -> KV-cache tokens used
+        self._undelivered = []         # [(requests, device out)] per batch
+        self.stats_wall = 0.0
+        self.stats = {k: {"requests": 0, "tokens": 0, "pad_lanes": 0,
+                          "batches": 0, "seconds": 0.0}
+                      for k in ("ingest", "query", "stream")}
+
+    # -- session lifecycle --------------------------------------------
+    def create_session(self, sid: str, kind: str = "online") -> None:
+        if kind not in self._mgr:
+            raise ValueError(
+                f"no arena for session kind {kind!r} "
+                "(construct the engine with stream_slots > 0?)")
+        self._mgr[kind].create(sid)
+        self._kind[sid] = kind
+
+    def close_session(self, sid: str) -> None:
+        self.scheduler.cancel(sid)      # flags the requests `cancelled`
+        self._cached.pop(sid, None)
+        self._mgr[self._kind.pop(sid)].close(sid)
+
+    def offload_session(self, sid: str) -> None:
+        """Explicitly push a session's state to host (tests/benchmarks)."""
+        self._mgr[self._kind[sid]].offload(sid)
+
+    # -- request submission -------------------------------------------
+    def _submit(self, sid: str, op: str, tokens, priority: int) -> Request:
+        kind = self._kind[sid]
+        if _OP_STATE[op] != kind:
+            raise ValueError(f"op {op!r} invalid for {kind!r} session {sid!r}")
+        n = int(np.asarray(tokens).size)
+        if op == "stream" and n > self.cfg.ccm.stream_chunk:
+            # mirror the stream_step trace-time guard HERE, before the
+            # request enters the queue — a trace error mid-drain would
+            # abort run() after the batch was already popped
+            raise ValueError(
+                f"stream chunk ({n} tokens) exceeds "
+                f"cfg.ccm.stream_chunk ({self.cfg.ccm.stream_chunk}); "
+                "split the input")
+        if op == "query":
+            # queries append their tokens to the session's KV cache; the
+            # cache write clamps silently past cache_len, corrupting
+            # earlier rows — admit only what fits (counts queued work)
+            used = self._cached.get(sid, 0)
+            if used + n > self.cache_len:
+                raise ValueError(
+                    f"session {sid!r} KV cache exhausted: {used} tokens "
+                    f"cached + {n} requested > cache_len "
+                    f"{self.cache_len}; close the session or build the "
+                    "engine with a larger cache_len")
+            self._cached[sid] = used + n
+        return self.scheduler.submit(sid, op, tokens, priority)
+
+    def ingest(self, sid, tokens, priority: int = 0) -> Request:
+        return self._submit(sid, "ingest", tokens, priority)
+
+    def query(self, sid, tokens, priority: int = 0) -> Request:
+        return self._submit(sid, "query", tokens, priority)
+
+    def stream(self, sid, tokens, priority: int = 0) -> Request:
+        return self._submit(sid, "stream", tokens, priority)
+
+    # -- execution -----------------------------------------------------
+    def _step(self, op: str):
+        if op not in self._steps:
+            self._steps[op] = SRV.make_arena_step(self.cfg, op)
+        return self._steps[op]
+
+    def _run_batch(self, batch: ScheduledBatch) -> None:
+        mgr = self._mgr[_OP_STATE[batch.kind]]
+        arena = mgr.arena
+        pinned = {r.sid for r in batch.requests}
+        t0 = time.perf_counter()
+        slots = mgr.activate_batch([r.sid for r in batch.requests], pinned)
+        ids = slots + [arena.pad_slot] * batch.pad
+        toks = np.concatenate(
+            [r.tokens[None] for r in batch.requests]
+            + [np.zeros((batch.pad, 1, batch.token_len), np.int32)], axis=0)
+        # one fused jitted program: gather rows -> vmapped op -> scatter
+        # rows back into the donated slabs.  No block here: batches chain
+        # through the slab dependency and overlap Python scheduling;
+        # run() syncs once at the end of the drain.
+        step = self._step(batch.kind)
+        out, arena.slabs = step(self.params, arena.slabs,
+                                jnp.asarray(ids, jnp.int32), toks)
+        arena.mark_dirty(ids)
+        dt = time.perf_counter() - t0
+        # results are NOT materialized here — np.asarray(out) would
+        # block on this batch's compute and serialize the drain; run()
+        # converts all outs after the last dispatch (one transfer per
+        # batch, per-request results become zero-copy numpy views)
+        self._undelivered.append((batch.requests, out))
+        for r in batch.requests:
+            mgr.sessions[r.sid].n_ops += 1
+        s = self.stats[batch.kind]
+        s["requests"] += len(batch.requests)
+        s["tokens"] += len(batch.requests) * batch.token_len
+        s["pad_lanes"] += batch.pad
+        s["batches"] += 1
+        s["seconds"] += dt
+
+    def run(self, max_batches: Optional[int] = None) -> int:
+        """Drain the queue (or up to ``max_batches``); returns batches
+        run.  Synchronizes once at the end, so per-kind ``seconds`` are
+        dispatch times and the drain's wall clock is the true cost."""
+        n = 0
+        t0 = time.perf_counter()
+        while max_batches is None or n < max_batches:
+            batch = self.scheduler.next_batch()
+            if batch is None:
+                break
+            self._run_batch(batch)
+            n += 1
+        if n:
+            for reqs, out in self._undelivered:
+                out_np = np.asarray(out) if out is not None else None
+                for i, r in enumerate(reqs):
+                    r.result = out_np[i, 0] if out_np is not None else None
+                    r.done = True
+            self._undelivered.clear()
+            for m in self._mgr.values():
+                jax.block_until_ready(jax.tree.leaves(m.arena.slabs)[0])
+            self.stats_wall += time.perf_counter() - t0
+        return n
+
+    # -- introspection -------------------------------------------------
+    def compile_stats(self) -> Dict[str, int]:
+        """Compiled-program count per op kind (recompile-churn metric)."""
+        out = {}
+        for op, fn in self._steps.items():
+            out[op] = fn._cache_size() if hasattr(fn, "_cache_size") else -1
+        return out
+
+    def occupancy(self) -> Dict[str, float]:
+        return {k: m.arena.occupancy for k, m in self._mgr.items()}
+
+    def resident(self) -> Dict[str, int]:
+        return {k: m.n_resident for k, m in self._mgr.items()}
+
+    def throughput(self) -> float:
+        """Overall tokens/s across all drains (synced wall clock).
+        Per-kind ``stats[kind]['seconds']`` are dispatch times only."""
+        total = sum(s["tokens"] for s in self.stats.values())
+        return total / self.stats_wall if self.stats_wall else 0.0

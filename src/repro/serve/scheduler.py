@@ -1,0 +1,136 @@
+"""Continuous-batching scheduler for session requests.
+
+Requests (``ingest`` / ``query`` / ``stream``) queue per session and are
+drained as ``ScheduledBatch``es: all requests in a batch share an op kind
+and an exact token length (one jitted program per (kind, bucket, len)),
+and the batch is padded up to a bucketed batch size
+(`launch.specs.SERVE_BATCH_BUCKETS`, capped by the op kind's arena
+capacity — the cap acts as one final bucket) so a handful of compiled
+shapes covers any arrival pattern — no recompile churn as traffic
+fluctuates.
+
+Admission is FIFO-with-priority: lower ``priority`` drains first,
+submission order breaks ties.  Two invariants keep batching safe:
+
+  * program order per session — a request is only eligible once it is
+    its session's earliest pending request (priority never reorders one
+    session's own ops);
+  * one request per session per batch — a session's state row is read
+    once and written once per step, so a second op on the same session
+    must wait for the next batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch.specs import SERVE_BATCH_BUCKETS, batch_bucket
+
+
+@dataclasses.dataclass
+class Request:
+    sid: str
+    kind: str                      # 'ingest' | 'query' | 'stream'
+    tokens: np.ndarray             # (1, token_len) int32
+    priority: int = 0              # lower drains first
+    seq: int = -1                  # submission order (set by Scheduler)
+    result: Any = None             # logits for query/stream; None for ingest
+    done: bool = False
+    cancelled: bool = False        # dropped by close_session, never ran
+
+    @property
+    def token_len(self) -> int:
+        return self.tokens.shape[-1]
+
+
+@dataclasses.dataclass
+class ScheduledBatch:
+    kind: str
+    token_len: int
+    bucket: int                    # padded batch size
+    requests: List[Request]
+
+    @property
+    def pad(self) -> int:
+        return self.bucket - len(self.requests)
+
+
+class Scheduler:
+    def __init__(self, batch_buckets: Sequence[int] = SERVE_BATCH_BUCKETS,
+                 max_batch=None):
+        """``max_batch``: int cap for every op kind, or a dict
+        ``{kind: cap}`` (a kind's batch must fit its arena)."""
+        self.batch_buckets = tuple(sorted(batch_buckets))
+        cap = self.batch_buckets[-1]
+        if max_batch is None:
+            max_batch = cap
+        if isinstance(max_batch, int):
+            max_batch = {k: max_batch
+                         for k in ("ingest", "query", "stream")}
+        self.max_batch = {k: min(v, cap) for k, v in max_batch.items()}
+        self._queue: List[Request] = []
+        self._seq = itertools.count()
+
+    def submit(self, sid: str, kind: str, tokens, priority: int = 0
+               ) -> Request:
+        if kind not in ("ingest", "query", "stream"):
+            raise ValueError(f"unknown op kind {kind!r}")
+        arr = np.asarray(tokens)
+        if arr.ndim > 2 or (arr.ndim == 2 and arr.shape[0] != 1):
+            # a (B, L) batch passed by mistake would silently become one
+            # concatenated request
+            raise ValueError(
+                f"tokens must be one sequence (1-D or (1, L)); "
+                f"got shape {arr.shape}")
+        # copy: the queue holds tokens until run(); a no-copy view of a
+        # caller buffer would alias later writes
+        toks = np.array(arr, np.int32, copy=True).reshape(1, -1)
+        req = Request(sid=sid, kind=kind, tokens=toks, priority=priority,
+                      seq=next(self._seq))
+        self._queue.append(req)
+        return req
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def cancel(self, sid: str) -> List[Request]:
+        """Drop every queued request for a session (closed sessions must
+        not reach a batch).  Dropped requests are flagged ``cancelled``
+        (with ``done=True``) so waiters observe the outcome; returns
+        them."""
+        dropped = [r for r in self._queue if r.sid == sid]
+        self._queue = [r for r in self._queue if r.sid != sid]
+        for r in dropped:
+            r.cancelled = True
+            r.done = True
+        return dropped
+
+    def _eligible(self) -> List[Request]:
+        """Pending requests that are their session's earliest, ordered by
+        (priority, submission)."""
+        earliest = {}
+        for r in self._queue:
+            if r.sid not in earliest or r.seq < earliest[r.sid].seq:
+                earliest[r.sid] = r
+        return sorted(earliest.values(), key=lambda r: (r.priority, r.seq))
+
+    def next_batch(self) -> Optional[ScheduledBatch]:
+        """Pop the next batch: head of the eligible order defines the
+        (kind, token_len) key; fill with matching eligible requests."""
+        elig = self._eligible()
+        if not elig:
+            return None
+        head = elig[0]
+        key: Tuple[str, int] = (head.kind, head.token_len)
+        cap = self.max_batch.get(head.kind, self.batch_buckets[-1])
+        taken = [r for r in elig if (r.kind, r.token_len) == key][:cap]
+        taken_set = set(id(r) for r in taken)
+        self._queue = [r for r in self._queue if id(r) not in taken_set]
+        bucket = min(batch_bucket(len(taken), self.batch_buckets), cap)
+        bucket = max(bucket, len(taken))
+        return ScheduledBatch(kind=head.kind, token_len=head.token_len,
+                              bucket=bucket, requests=taken)

@@ -1,0 +1,126 @@
+"""Session lifecycle + LRU host offload.
+
+A session is a named user stream whose state lives in one arena slot
+while *resident*.  When the arena (or the ``max_resident`` budget) is
+exhausted, the least-recently-used resident session is offloaded to host
+memory (`jax.device_put` to the CPU device) and its slot freed; the next
+request on that session transparently restores it.  Offload -> restore
+is a pure device transfer of the state pytree, so a restored session's
+next logits are bit-identical to never having been offloaded — total
+sessions can exceed device HBM with no semantic effect, only latency.
+
+Fresh sessions carry no host tree: their slot is zero-initialised on
+first activation (all state inits are zeros + zero counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Collection, Dict, Optional
+
+import jax
+
+from repro.serve.arena import ArenaFull, SessionArena
+
+
+@dataclasses.dataclass
+class Session:
+    sid: str
+    slot: Optional[int] = None     # arena slot while resident
+    host_state: Any = None         # CPU pytree while offloaded (None = zero)
+    fresh: bool = True             # never activated yet
+    last_used: int = 0             # logical LRU clock
+    n_ops: int = 0
+    n_offloads: int = 0
+
+    @property
+    def resident(self) -> bool:
+        return self.slot is not None
+
+
+class SessionManager:
+    def __init__(self, arena: SessionArena,
+                 max_resident: Optional[int] = None):
+        self.arena = arena
+        self.max_resident = min(max_resident or arena.n_slots,
+                                arena.n_slots)
+        self.sessions: Dict[str, Session] = {}
+        self._clock = 0
+        self._host = jax.devices("cpu")[0]
+        self._device = jax.local_devices()[0]
+
+    # -- lifecycle -----------------------------------------------------
+    def create(self, sid: str) -> Session:
+        if sid in self.sessions:
+            raise ValueError(f"session {sid!r} already exists")
+        sess = Session(sid=sid)
+        self.sessions[sid] = sess
+        return sess
+
+    def close(self, sid: str) -> None:
+        sess = self.sessions.pop(sid)
+        if sess.resident:
+            self.arena.free(sess.slot)
+
+    @property
+    def n_resident(self) -> int:
+        return sum(1 for s in self.sessions.values() if s.resident)
+
+    # -- residency -----------------------------------------------------
+    def activate(self, sid: str, pinned: Collection[str] = ()) -> int:
+        """Ensure ``sid`` is resident (restoring / evicting as needed)
+        and return its slot.  Sessions in ``pinned`` are never evicted —
+        pass the current batch's sids so co-scheduled sessions survive."""
+        return self.activate_batch([sid], pinned)[0]
+
+    def activate_batch(self, sids, pinned: Collection[str] = ()) -> list:
+        """Make every session in ``sids`` resident and return their slots.
+
+        Fresh sessions are zeroed with ONE batched scatter (and skipped
+        entirely when their slot was never dirtied) — the per-batch hot
+        path does no per-session device work unless a restore is due."""
+        fresh_slots = []
+        slots = []
+        for sid in sids:
+            sess = self.sessions[sid]
+            self._clock += 1
+            sess.last_used = self._clock
+            if sess.resident:
+                slots.append(sess.slot)
+                continue
+            while (self.n_resident >= self.max_resident
+                   or self.arena.n_free == 0):
+                self._evict_lru(pinned)
+            slot = self.arena.alloc()
+            if sess.fresh and sess.host_state is None:
+                fresh_slots.append(slot)
+            else:
+                self.arena.write_slot(
+                    slot, jax.device_put(sess.host_state, self._device))
+                sess.host_state = None
+            sess.slot = slot
+            sess.fresh = False
+            slots.append(slot)
+        if fresh_slots:
+            self.arena.reset_slots(fresh_slots)
+        return slots
+
+    def offload(self, sid: str) -> None:
+        """Move a resident session's state to host and free its slot."""
+        sess = self.sessions[sid]
+        if not sess.resident:
+            return
+        state = self.arena.read_slot(sess.slot)
+        sess.host_state = jax.block_until_ready(
+            jax.device_put(state, self._host))
+        self.arena.free(sess.slot)
+        sess.slot = None
+        sess.n_offloads += 1
+
+    def _evict_lru(self, pinned: Collection[str]) -> None:
+        candidates = [s for s in self.sessions.values()
+                      if s.resident and s.sid not in pinned]
+        if not candidates:
+            raise ArenaFull(
+                "no evictable session: batch size exceeds arena capacity")
+        victim = min(candidates, key=lambda s: s.last_used)
+        self.offload(victim.sid)

@@ -95,6 +95,73 @@ def test_streaming_bounded_and_compressing():
             assert int(st.mem.slots) == 0      # StreamingLLM baseline
 
 
+def test_merge_mean_matches_over_t_steps_distinct_kv():
+    """merge_alpha=None is the TRUE arithmetic mean over t steps — checked
+    per-tensor with distinct k/v updates and t not a power of two."""
+    cfg = _cfg("merge")
+    mem = MEM.init_memory(cfg, 2)
+    ks = [_h(jax.random.PRNGKey(i), cfg) for i in range(7)]
+    vs = [_h(jax.random.PRNGKey(100 + i), cfg) for i in range(7)]
+    for t, (hk, hv) in enumerate(zip(ks, vs), start=1):
+        mem = MEM.update_memory(cfg, mem, hk, hv, 3)
+        np.testing.assert_allclose(np.asarray(mem.k),
+                                   np.asarray(sum(ks[:t]) / t), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(mem.v),
+                                   np.asarray(sum(vs[:t]) / t), atol=1e-5)
+        assert int(mem.steps) == t
+    assert int(mem.stream_pos) == 21
+
+
+def test_evict_oldest_preserves_survivor_order():
+    """After eviction every surviving <COMP> group sits one slot earlier,
+    in original order, for both k and v."""
+    cfg = _cfg()
+    mem = MEM.init_memory(cfg, 1)
+    ks = [_h(jax.random.PRNGKey(i), cfg, 1) for i in range(4)]
+    vs = [_h(jax.random.PRNGKey(50 + i), cfg, 1) for i in range(4)]
+    for hk, hv in zip(ks, vs):
+        mem = MEM.update_memory(cfg, mem, hk, hv, 1)
+    m = cfg.ccm.comp_len
+    mem = MEM.evict_oldest(mem, m)
+    assert int(mem.slots) == 3
+    for i, (hk, hv) in enumerate(zip(ks[1:], vs[1:])):
+        np.testing.assert_allclose(
+            np.asarray(mem.k[:, :, i * m:(i + 1) * m]), np.asarray(hk),
+            atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(mem.v[:, :, i * m:(i + 1) * m]), np.asarray(hv),
+            atol=1e-6)
+    # a second eviction keeps shifting in order
+    mem = MEM.evict_oldest(mem, m)
+    assert int(mem.slots) == 2
+    np.testing.assert_allclose(np.asarray(mem.k[:, :, :m]),
+                               np.asarray(ks[2]), atol=1e-6)
+
+
+def test_stream_step_rejects_oversized_chunk():
+    """Regression: a chunk bigger than the eviction quantum used to
+    overflow the window silently (one eviction per step + clamped
+    dynamic_update_slice corrupting the newest KV rows)."""
+    cfg = _cfg().replace(ccm=CCMConfig(
+        comp_len=2, max_steps=4, stream_window=32, stream_sink=2,
+        stream_chunk=8, stream_mem_slots=4))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    st = ST.init_stream_state(cfg, 1)
+    toks = lm_stream(jax.random.PRNGKey(1), 1, 64, 128)
+    with pytest.raises(ValueError, match="stream_chunk"):
+        ST.stream_step(params, cfg, st, toks[:, :16])   # c=16 > cc=8
+    # sink + stream_chunk must fit inside the window
+    bad = cfg.replace(ccm=CCMConfig(comp_len=2, max_steps=4,
+                                    stream_window=8, stream_sink=4,
+                                    stream_chunk=6, stream_mem_slots=4))
+    with pytest.raises(ValueError, match="stream_window"):
+        ST.stream_step(params, bad, ST.init_stream_state(bad, 1),
+                       toks[:, :4])
+    # boundary case c == stream_chunk still runs
+    lg, _ = ST.stream_step(params, cfg, st, toks[:, :8])
+    assert not bool(jnp.isnan(lg).any())
+
+
 def test_mem_layers_per_family():
     assert MEM.mem_layers(_cfg()) == 2
     hyb = ModelConfig(name="h", family="hybrid", n_layers=6, attn_every=2,

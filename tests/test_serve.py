@@ -1,0 +1,314 @@
+"""Multi-tenant serve subsystem: arena, scheduler, engine, LRU offload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inference as I
+from repro.kernels import ops, ref
+from repro.models import transformer as T
+from repro.serve.arena import ArenaFull, SessionArena
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Scheduler
+from repro.serve.session import SessionManager
+
+
+@pytest.fixture(scope="module")
+def params(tiny_cfg):
+    return T.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _tokens(key, n, vocab=128):
+    return jax.random.randint(jax.random.PRNGKey(key), (n,), 0, vocab)
+
+
+# ---------------------------------------------------------------------------
+# arena
+# ---------------------------------------------------------------------------
+
+def test_arena_alloc_free(tiny_cfg):
+    arena = SessionArena.for_online(tiny_cfg, n_slots=3, cache_len=16)
+    slots = [arena.alloc() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2]
+    assert arena.pad_slot == 3 and arena.pad_slot not in slots
+    with pytest.raises(ArenaFull):
+        arena.alloc()
+    arena.free(slots[1])
+    assert arena.n_free == 1 and arena.alloc() == slots[1]
+    with pytest.raises(ValueError):
+        arena.free(99)
+
+
+def test_arena_pack_unpack_roundtrip(tiny_cfg):
+    arena = SessionArena.for_online(tiny_cfg, n_slots=4, cache_len=8)
+    for slot in (arena.alloc(), arena.alloc(), arena.alloc()):
+        state = jax.tree.map(
+            lambda s: jnp.full(s.shape, float(slot + 1), s.dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating)
+            else jnp.full(s.shape, slot + 1, s.dtype),
+            arena.template)
+        arena.write_slot(slot, state)
+    packed = arena.pack([2, 0, arena.pad_slot])
+    assert packed.mem.k.shape[0] == 3
+    np.testing.assert_array_equal(np.asarray(packed.mem.k[0]), 3.0)
+    np.testing.assert_array_equal(np.asarray(packed.mem.k[1]), 1.0)
+    np.testing.assert_array_equal(np.asarray(packed.mem.k[2]), 0.0)  # scratch
+    assert int(packed.pos[0]) == 3 and int(packed.pos[1]) == 1
+    # mutate and scatter back; untouched slots must be unaffected
+    bumped = jax.tree.map(lambda x: x + 1, packed)
+    arena.unpack([2, 0, arena.pad_slot], bumped)
+    assert float(arena.read_slot(2).mem.k[0, 0, 0, 0, 0]) == 4.0
+    assert float(arena.read_slot(0).mem.k[0, 0, 0, 0, 0]) == 2.0
+    assert float(arena.read_slot(1).mem.k[0, 0, 0, 0, 0]) == 2.0  # untouched
+
+
+def test_session_gather_scatter_kernel_matches_ref():
+    """Pallas kernel (interpret mode) vs pure-jnp oracle, dup ids incl."""
+    key = jax.random.PRNGKey(7)
+    slab = jax.random.normal(key, (6, 40))
+    ids = jnp.array([5, 0, 5, 3], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ops.session_gather(slab, ids, interpret=True)),
+        np.asarray(ref.session_gather_ref(slab, ids)), atol=0)
+    rows = jax.random.normal(jax.random.PRNGKey(8), (2, 40))
+    ids2 = jnp.array([1, 4], jnp.int32)
+    # ops.session_scatter donates the slab — take the oracle first
+    expect = np.asarray(ref.session_scatter_ref(slab, ids2, rows))
+    got = np.asarray(ops.session_scatter(slab, ids2, rows, interpret=True))
+    np.testing.assert_allclose(got, expect, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_groups_by_kind_and_shape():
+    sch = Scheduler(batch_buckets=(1, 2, 4))
+    for s in range(3):
+        sch.submit(f"s{s}", "ingest", np.zeros(8, np.int32))
+    sch.submit("s0", "query", np.zeros(4, np.int32))
+    sch.submit("s3", "ingest", np.zeros(16, np.int32))  # different shape
+    b1 = sch.next_batch()
+    assert (b1.kind, b1.token_len, b1.bucket) == ("ingest", 8, 4)
+    assert [r.sid for r in b1.requests] == ["s0", "s1", "s2"] and b1.pad == 1
+    b2 = sch.next_batch()
+    assert (b2.kind, b2.token_len) == ("query", 4) and b2.bucket == 1
+    b3 = sch.next_batch()
+    assert (b3.kind, b3.token_len) == ("ingest", 16)
+    assert sch.next_batch() is None
+
+
+def test_scheduler_session_program_order():
+    """A session's ops never reorder (even across priorities) and never
+    co-batch."""
+    sch = Scheduler(batch_buckets=(1, 2, 4))
+    sch.submit("a", "ingest", np.zeros(8, np.int32), priority=1)
+    sch.submit("a", "query", np.zeros(8, np.int32), priority=0)
+    sch.submit("a", "ingest", np.zeros(8, np.int32), priority=0)
+    kinds = []
+    while (b := sch.next_batch()) is not None:
+        assert len(b.requests) == 1
+        kinds.append(b.kind)
+    assert kinds == ["ingest", "query", "ingest"]
+
+
+def test_scheduler_priority_fifo():
+    sch = Scheduler(batch_buckets=(1, 2))
+    sch.submit("a", "ingest", np.zeros(8, np.int32), priority=5)
+    sch.submit("b", "ingest", np.zeros(8, np.int32), priority=0)
+    sch.submit("c", "ingest", np.zeros(8, np.int32), priority=0)
+    b1 = sch.next_batch()
+    assert [r.sid for r in b1.requests] == ["b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# engine: correctness, compile churn, offload
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_single_session(tiny_cfg, params):
+    """Batched multi-tenant execution == direct per-session ops."""
+    chunks = [np.asarray(_tokens(i, 8)) for i in range(3)]
+    query = np.asarray(_tokens(9, 4))
+    eng = ServeEngine(params, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4))
+    for s in range(3):
+        eng.create_session(f"s{s}")
+        eng.ingest(f"s{s}", chunks[s])
+    reqs = [eng.query(f"s{s}", query) for s in range(3)]
+    eng.run()
+    for s in range(3):
+        st = I.init_online_state(tiny_cfg, 1, max_cache_len=32)
+        st = I.ingest_context(params, tiny_cfg, st, chunks[s][None])
+        lg, _ = I.prefill(params, tiny_cfg, st, query[None],
+                          full_logits=True)
+        np.testing.assert_allclose(np.asarray(reqs[s].result),
+                                   np.asarray(lg[0]), atol=1e-5)
+
+
+def test_engine_no_recompile_churn(tiny_cfg, params):
+    """Mixed op kinds over bucketed shapes: compile count stays at one
+    program per (kind, bucket, token_len) combination."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=8, cache_len=64,
+                      batch_buckets=(1, 2, 4))
+    for s in range(4):
+        eng.create_session(f"s{s}")
+    for wave in range(3):
+        for s in range(4):
+            eng.ingest(f"s{s}", np.asarray(_tokens(10 * wave + s, 8)))
+        for s in range(wave + 1):   # 1, 2, 3 queries -> buckets 1, 2, 4
+            eng.query(f"s{s}", np.asarray(_tokens(99 + s, 4)))
+        eng.run()
+    stats = eng.compile_stats()
+    # ingest: always 4 sessions -> single (B=4, len=8) program
+    assert stats["ingest"] == 1
+    # query: batches of 1, 2, 3 -> buckets 1, 2, 4 -> three programs
+    assert stats["query"] == 3
+    assert eng.stats["ingest"]["batches"] == 3
+    # re-run same shapes: no new programs
+    for s in range(4):
+        eng.ingest(f"s{s}", np.asarray(_tokens(500 + s, 8)))
+    eng.run()
+    assert eng.compile_stats() == stats
+
+
+def test_lru_offload_restore(tiny_cfg):
+    arena = SessionArena.for_online(tiny_cfg, n_slots=2, cache_len=8)
+    mgr = SessionManager(arena, max_resident=2)
+    for s in ("a", "b", "c"):
+        mgr.create(s)
+    mgr.activate("a"), mgr.activate("b")
+    marked = jax.tree.map(
+        lambda s: jnp.full(s.shape, 7, s.dtype), arena.template)
+    arena.write_slot(mgr.sessions["a"].slot, marked)
+    mgr.activate("c")                       # evicts LRU = "a"
+    assert not mgr.sessions["a"].resident
+    assert mgr.sessions["a"].n_offloads == 1
+    assert mgr.sessions["b"].resident and mgr.sessions["c"].resident
+    mgr.activate("a")                       # evicts LRU = "b", restores "a"
+    assert not mgr.sessions["b"].resident
+    got = arena.read_slot(mgr.sessions["a"].slot)
+    for leaf, exp in zip(jax.tree.leaves(got), jax.tree.leaves(marked)):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(exp))
+    # pinned sessions are never evicted
+    with pytest.raises(ArenaFull):
+        mgr.activate("b", pinned={"a", "c"})
+
+
+def test_engine_offload_preserves_logits(tiny_cfg, params):
+    """offload -> restore roundtrip reproduces query logits exactly."""
+    chunk, query = np.asarray(_tokens(1, 8)), np.asarray(_tokens(2, 4))
+
+    def run(offload):
+        eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=32,
+                          batch_buckets=(1, 2))
+        eng.create_session("u")
+        eng.ingest("u", chunk)
+        eng.run()
+        if offload:
+            eng.offload_session("u")
+            assert not eng._mgr["online"].sessions["u"].resident
+        req = eng.query("u", query)
+        eng.run()
+        return np.asarray(req.result)
+
+    np.testing.assert_array_equal(run(offload=False), run(offload=True))
+
+
+def test_engine_stream_sessions(tiny_cfg, params):
+    """Streaming sessions run through their own arena and match the
+    direct stream_step path."""
+    from repro.core import streaming as ST
+    cfg = tiny_cfg.replace(ccm=tiny_cfg.ccm.__class__(
+        comp_len=2, max_steps=4, stream_window=16, stream_sink=2,
+        stream_chunk=4, stream_mem_slots=4))
+    params2 = T.init_lm(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(params2, cfg, n_slots=1, cache_len=8,
+                      stream_slots=2, batch_buckets=(1, 2))
+    eng.create_session("u", kind="stream")
+    toks = [np.asarray(_tokens(40 + i, 4)) for i in range(6)]
+    reqs = [eng.stream("u", t) for t in toks]
+    eng.run()
+    st = ST.init_stream_state(cfg, 1)
+    for t, req in zip(toks, reqs):
+        lg, st = ST.stream_step(params2, cfg, st, t[None])
+        np.testing.assert_allclose(np.asarray(req.result),
+                                   np.asarray(lg[0]), atol=1e-5)
+    with pytest.raises(ValueError):
+        eng.ingest("u", toks[0])   # wrong op kind for a stream session
+
+
+def test_stream_batches_capped_by_stream_arena(tiny_cfg, params):
+    """A stream batch must fit the (smaller) stream arena even when the
+    online arena is larger — regression for the shared max_batch cap."""
+    cfg = tiny_cfg.replace(ccm=tiny_cfg.ccm.__class__(
+        comp_len=2, max_steps=4, stream_window=16, stream_sink=2,
+        stream_chunk=4, stream_mem_slots=4))
+    params2 = T.init_lm(jax.random.PRNGKey(2), cfg)
+    eng = ServeEngine(params2, cfg, n_slots=8, cache_len=8,
+                      stream_slots=2, batch_buckets=(1, 2, 4, 8))
+    reqs = []
+    for s in range(3):
+        eng.create_session(f"t{s}", kind="stream")
+        reqs.append(eng.stream(f"t{s}", np.asarray(_tokens(60 + s, 4))))
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.stats["stream"]["requests"] == 3
+    assert eng.stats["stream"]["batches"] == 2   # 2 + 1, capped at 2
+    # oversized stream chunks are rejected at SUBMIT time, not mid-drain
+    with pytest.raises(ValueError, match="stream_chunk"):
+        eng.stream("t0", np.asarray(_tokens(70, 8)))   # 8 > stream_chunk 4
+
+
+def test_close_session_cancels_queued_requests(tiny_cfg, params):
+    """Closing a session drops its queued work (flagged cancelled);
+    run() must not crash."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=4, cache_len=16,
+                      batch_buckets=(1, 2, 4))
+    eng.create_session("a")
+    eng.create_session("b")
+    ra = eng.ingest("a", np.asarray(_tokens(0, 8)))
+    rb = eng.ingest("b", np.asarray(_tokens(1, 8)))
+    eng.close_session("a")
+    assert ra.cancelled and ra.done and ra.result is None
+    assert eng.scheduler.pending == 1
+    eng.run()
+    assert rb.done and not rb.cancelled
+
+
+def test_submit_validation_and_buffer_copy():
+    """submit() rejects batched token arrays and copies caller buffers."""
+    sch = Scheduler(batch_buckets=(1, 2))
+    with pytest.raises(ValueError, match="one sequence"):
+        sch.submit("a", "ingest", np.zeros((2, 8), np.int32))
+    buf = np.arange(8, dtype=np.int32)
+    req = sch.submit("a", "ingest", buf)
+    buf[:] = -1                      # caller reuses the buffer pre-run
+    np.testing.assert_array_equal(req.tokens[0], np.arange(8))
+
+
+def test_engine_admission_guards(tiny_cfg, params):
+    """KV-cache exhaustion and bad stream configs fail fast, not
+    mid-drain."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=8,
+                      batch_buckets=(1, 2))
+    eng.create_session("u")
+    eng.query("u", np.asarray(_tokens(0, 6)))
+    with pytest.raises(ValueError, match="cache exhausted"):
+        eng.query("u", np.asarray(_tokens(1, 6)))   # 6 + 6 > 8
+    bad = tiny_cfg.replace(ccm=tiny_cfg.ccm.__class__(
+        comp_len=2, max_steps=4, stream_window=8, stream_sink=4,
+        stream_chunk=6))
+    with pytest.raises(ValueError, match="stream_window"):
+        ServeEngine(params, bad, n_slots=2, cache_len=8, stream_slots=1)
+
+
+def test_reset_slots_beyond_largest_bucket(tiny_cfg):
+    """reset_slots handles more stale slots than the largest batch
+    bucket (regression: bucket < n crashed the zeroing scatter)."""
+    from repro.launch.specs import SERVE_BATCH_BUCKETS
+    n = max(SERVE_BATCH_BUCKETS) + 22
+    arena = SessionArena.for_online(tiny_cfg, n_slots=n, cache_len=4)
+    slots = [arena.alloc() for _ in range(n)]
+    arena.mark_dirty(slots)
+    arena.reset_slots(slots)     # must not raise
+    assert float(jax.tree.leaves(arena.read_slot(slots[-1]))[0].sum()) == 0
