@@ -10,6 +10,13 @@ context chunks then issuing one query:
   engine  — repro.serve.ServeEngine: continuous batching over the
             session arena, one vmapped dispatch per bucketed batch
 
+A second scenario drives MIXED-LENGTH arrivals (each session's chunks
+and query draw random lengths) through the engine twice — exact
+token-length grouping vs ragged token-bucket batching (masked lanes) —
+and reports compile-cache churn and mean batch occupancy for both; the
+ragged scheduler must compile strictly fewer programs at higher
+occupancy on identical traffic.
+
 Also checks the LRU offload path end-to-end: a session offloaded to host
 and restored must reproduce its query logits EXACTLY (allclose) vs a
 never-offloaded run.
@@ -110,6 +117,48 @@ def run_engine(params, cfg, work, cache_len, warm=True):
     return best, [np.asarray(r.result) for r in reqs], eng
 
 
+def _mixed_workload(n_sessions, turns, vocab, seed=7,
+                    chunk_lens=(3, 5, 8, 11), q_lens=(2, 4, 7)):
+    """Sessions whose chunk/query lengths vary — realistic traffic that
+    fragments an exact-length scheduler into tiny per-length batches."""
+    rng = np.random.RandomState(seed)
+    return [
+        {"chunks": [rng.randint(0, vocab,
+                                size=chunk_lens[rng.randint(len(chunk_lens))]
+                                ).astype(np.int32)
+                    for _ in range(turns)],
+         "query": rng.randint(0, vocab,
+                              size=q_lens[rng.randint(len(q_lens))]
+                              ).astype(np.int32)}
+        for _ in range(n_sessions)
+    ]
+
+
+def run_mixed(params, cfg, work, cache_len, token_buckets):
+    """One engine pass over the mixed-length workload; returns
+    (wall seconds, results, engine) — engine carries compile/occupancy
+    stats."""
+    eng = ServeEngine(params, cfg, n_slots=len(work) + 1,
+                      cache_len=cache_len, token_buckets=token_buckets)
+    t0 = time.perf_counter()
+    for s, w in enumerate(work):
+        eng.create_session(f"m{s}")
+    for t in range(len(work[0]["chunks"])):
+        for s, w in enumerate(work):
+            eng.ingest(f"m{s}", w["chunks"][t])
+        eng.run()
+    reqs = [eng.query(f"m{s}", w["query"]) for s, w in enumerate(work)]
+    eng.run()
+    dt = time.perf_counter() - t0
+    return dt, [np.asarray(r.result) for r in reqs], eng
+
+
+def _overall_occupancy(eng):
+    lanes = sum(s["lanes"] for s in eng.stats.values())
+    reqs = sum(s["requests"] for s in eng.stats.values())
+    return reqs / lanes if lanes else 0.0
+
+
 def offload_roundtrip_check(params, cfg, work, cache_len):
     """Logits after offload->restore == logits never offloaded."""
     w = work[0]
@@ -134,6 +183,8 @@ def main():
     ap.add_argument("--turns", type=int, default=3)
     ap.add_argument("--chunk", type=int, default=4)
     ap.add_argument("--qlen", type=int, default=4)
+    ap.add_argument("--mixed-sessions", type=int, default=24,
+                    help="sessions in the mixed-length ragged scenario")
     args = ap.parse_args()
 
     # serve-bench config: half-width bench model so the per-op dispatch
@@ -168,6 +219,37 @@ def main():
         print("WARNING: speedup below the 3x acceptance bar")
     C.csv_row("serve_naive", t_naive * 1e6, f"{tok_total / t_naive:.0f} tok/s")
     C.csv_row("serve_batched", t_eng * 1e6, f"{tok_total / t_eng:.0f} tok/s")
+
+    # -- mixed-length arrivals: exact-length vs ragged token buckets ----
+    mixed = _mixed_workload(args.mixed_sessions, args.turns, cfg.vocab_size)
+    t_exact, out_exact, eng_exact = run_mixed(params, cfg, mixed,
+                                              cache_len=32,
+                                              token_buckets=None)
+    t_ragged, out_ragged, eng_ragged = run_mixed(params, cfg, mixed,
+                                                 cache_len=32,
+                                                 token_buckets="auto")
+    same = all(np.allclose(a, b, atol=1e-5)
+               for a, b in zip(out_exact, out_ragged))
+    occ_e, occ_r = _overall_occupancy(eng_exact), _overall_occupancy(eng_ragged)
+    prog_e, prog_r = eng_exact.compiled_programs(), eng_ragged.compiled_programs()
+    bat_e = sum(s["batches"] for s in eng_exact.stats.values())
+    bat_r = sum(s["batches"] for s in eng_ragged.stats.values())
+    print(f"\nmixed-length arrivals ({args.mixed_sessions} sessions, "
+          f"{args.turns} turns, chunk lens 3/5/8/11, query lens 2/4/7)")
+    print(f"exact-length grouping  : {bat_e:3d} batches  "
+          f"{prog_e:3d} compiled programs  occupancy {occ_e:.2f}  "
+          f"({t_exact:.3f} s incl. compile)")
+    print(f"ragged token buckets   : {bat_r:3d} batches  "
+          f"{prog_r:3d} compiled programs  occupancy {occ_r:.2f}  "
+          f"({t_ragged:.3f} s incl. compile)")
+    print(f"ragged == exact logits : {same}")
+    if not (prog_r < prog_e and occ_r > occ_e):
+        print("WARNING: ragged batching must compile fewer programs at "
+              "higher occupancy than exact-length grouping")
+    C.csv_row("serve_mixed_exact", t_exact * 1e6,
+              f"{prog_e} programs, occ {occ_e:.2f}")
+    C.csv_row("serve_mixed_ragged", t_ragged * 1e6,
+              f"{prog_r} programs, occ {occ_r:.2f}")
 
 
 if __name__ == "__main__":

@@ -87,7 +87,13 @@ def main():
     print(f"\nserved {args.users} users over {rnd} rounds in "
           f"{wall:.2f} s ({toks_done} tokens, "
           f"{toks_done / wall:.0f} tok/s incl. compile)")
-    print(f"compiled programs: {eng.compile_stats()}")
+    print(f"compiled programs: {eng.compile_stats()} "
+          f"({eng.compiled_programs()} total)")
+    occ = eng.batch_occupancy()
+    print(f"batch occupancy: ingest {occ['ingest']:.2f}, "
+          f"query {occ['query']:.2f} "
+          "(ragged token buckets pad mixed-length requests into shared "
+          "batches; pad lanes are masked)")
     print(f"accuracy from compressed memory: {hits / tot:.3f}")
 
 

@@ -146,7 +146,14 @@ def _attend_online(cfg, q, k_new, v_new, self_info: A.KeyInfo,
     return A.attend(cfg, q, k, v, q_info, info, impl=impl)
 
 
-def _write_cache(ck, cv, k_new, v_new, at):
+def _write_cache(ck, cv, k_new, v_new, at, valid_len=None):
+    """Append this block's KV at ``at``.  With ``valid_len`` (ragged lane)
+    only the first ``valid_len`` tokens are written — pad positions of the
+    cache stay bit-identical to an unpadded run."""
+    if valid_len is not None:
+        ck = M.ragged_block_write(ck, k_new, at, valid_len, axis=1)
+        cv = M.ragged_block_write(cv, v_new, at, valid_len, axis=1)
+        return ck, cv
     ck = jax.lax.dynamic_update_slice_in_dim(ck, k_new.astype(ck.dtype), at, 1)
     cv = jax.lax.dynamic_update_slice_in_dim(cv, v_new.astype(cv.dtype), at, 1)
     return ck, cv
@@ -159,11 +166,15 @@ def _write_cache(ck, cv, k_new, v_new, at):
 def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
                      comp_gate, q_info, self_info, state: OnlineState,
                      write_to_cache: bool, collect_comp: Optional[jnp.ndarray],
-                     dist: Optional[DistContext], impl=None):
+                     dist: Optional[DistContext], impl=None, valid_len=None):
     """Runs the layer stack for dense/moe/vlm/encdec families.
 
     Returns (x, new_cache, comp_kv) where comp_kv is (L, B, m, Hkv, hd)
     pairs when ``collect_comp`` (bool (S,) selector) is given.
+
+    ``valid_len`` (ragged lane): only that many leading tokens of the
+    block are real; cache writes past them are frozen and the length
+    counter advances by ``valid_len`` instead of the padded block length.
     """
     cache, mem = state.cache, state.mem
     mem_valid = mem.valid_len(cfg.ccm.comp_len) if mem is not None else None
@@ -205,14 +216,22 @@ def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
             if quant:
                 qk, sk = quantize_kv(k_new)
                 qv, sv = quantize_kv(v_new)
-                nk, nv = _write_cache(ck, cv, qk, qv, cache.length)
-                nks = jax.lax.dynamic_update_slice_in_dim(
-                    xs["ks"], sk.astype(xs["ks"].dtype), cache.length, 1)
-                nvs = jax.lax.dynamic_update_slice_in_dim(
-                    xs["vs"], sv.astype(xs["vs"].dtype), cache.length, 1)
+                nk, nv = _write_cache(ck, cv, qk, qv, cache.length,
+                                      valid_len)
+                if valid_len is not None:
+                    nks = M.ragged_block_write(xs["ks"], sk, cache.length,
+                                               valid_len, axis=1)
+                    nvs = M.ragged_block_write(xs["vs"], sv, cache.length,
+                                               valid_len, axis=1)
+                else:
+                    nks = jax.lax.dynamic_update_slice_in_dim(
+                        xs["ks"], sk.astype(xs["ks"].dtype), cache.length, 1)
+                    nvs = jax.lax.dynamic_update_slice_in_dim(
+                        xs["vs"], sv.astype(xs["vs"].dtype), cache.length, 1)
                 outs["cache"] = (nk, nv, nks, nvs)
             else:
-                nk, nv = _write_cache(ck, cv, k_new, v_new, cache.length)
+                nk, nv = _write_cache(ck, cv, k_new, v_new, cache.length,
+                                      valid_len)
                 outs["cache"] = (nk, nv)
         if collect_comp is not None:
             idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0]
@@ -237,14 +256,15 @@ def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
 
     new_cache = cache
     if write_to_cache and cache is not None:
+        adv = x.shape[1] if valid_len is None else valid_len
         if quant:
             nk, nv, nks, nvs = outs["cache"]
-            new_cache = KVCache(k=nk, v=nv, length=cache.length + x.shape[1],
+            new_cache = KVCache(k=nk, v=nv, length=cache.length + adv,
                                 k_scale=nks, v_scale=nvs)
         else:
             nk, nv = outs["cache"]
             new_cache = KVCache(k=nk, v=nv,
-                                length=cache.length + x.shape[1])
+                                length=cache.length + adv)
     comp_kv = outs.get("comp") if collect_comp is not None else None
     return x, new_cache, comp_kv
 
@@ -346,11 +366,24 @@ def _embed_block(cfg, params, tokens, positions, comp_mask=None,
 
 def ingest_context(params, cfg: ModelConfig, state: OnlineState,
                    chunk_tokens: jnp.ndarray,
-                   dist: Optional[DistContext] = None) -> OnlineState:
+                   dist: Optional[DistContext] = None,
+                   valid_len=None) -> OnlineState:
     """Online step for a new context c(t): compress into memory (attention
-    archs), update recurrent states (SSM/hybrid). Raw KV is NOT cached."""
+    archs), update recurrent states (SSM/hybrid). Raw KV is NOT cached.
+
+    ``valid_len`` (ragged lane, attention archs only): the chunk is padded
+    up to a token bucket and only the first ``valid_len`` tokens are real.
+    Pad tokens are masked out of attention, the <COMP> group keeps the
+    RoPE positions of the *unpadded* layout, and the stream-position /
+    memory counters advance by ``valid_len`` — the resulting state is
+    bit-identical to ingesting the unpadded chunk.
+    """
     B, lc = chunk_tokens.shape
     m = cfg.ccm.comp_len
+    if cfg.family in ("ssm", "hybrid") and valid_len is not None:
+        raise ValueError(
+            f"ragged ingest (valid_len) unsupported for {cfg.family!r}: "
+            "recurrent state updates cannot skip pad tokens")
     if cfg.family == "ssm":
         x = _embed_block(cfg, params, chunk_tokens,
                          state.pos + jnp.arange(lc))
@@ -358,15 +391,27 @@ def ingest_context(params, cfg: ModelConfig, state: OnlineState,
         return state._replace(ssm=new_ssm, pos=state.pos + lc)
 
     S = lc + m
-    comp_mask = jnp.arange(S) >= lc
-    comp_off = jnp.maximum(jnp.arange(S) - lc, 0)
+    ar = jnp.arange(S)
+    comp_mask = ar >= lc
+    comp_off = jnp.maximum(ar - lc, 0)
     tokens = jnp.concatenate(
         [chunk_tokens, jnp.zeros((B, m), chunk_tokens.dtype)], axis=1)
-    positions = state.pos + jnp.arange(S)
+    if valid_len is None:
+        positions = state.pos + ar
+        k_valid = None
+        consumed = S
+    else:
+        vl = jnp.asarray(valid_len, jnp.int32)
+        # <COMP> tokens sit at padded indices [lc, S) but must carry the
+        # unpadded stream positions [vl, vl + m) for train-consistent RoPE
+        positions = state.pos + jnp.where(comp_mask, vl + (ar - lc), ar)
+        k_valid = M.lane_valid(S, vl, tail_start=lc)
+        consumed = vl + m
     x = _embed_block(cfg, params, tokens, positions, comp_mask, comp_off)
     comp_gate = jnp.broadcast_to(comp_mask.astype(cfg.cdtype)[None], (B, S))
     self_info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32),
-                          seg=jnp.ones((S,), jnp.int32), comp=comp_mask)
+                          seg=jnp.ones((S,), jnp.int32), comp=comp_mask,
+                          valid=k_valid)
     q_info = self_info
 
     if cfg.family == "hybrid":
@@ -383,18 +428,35 @@ def ingest_context(params, cfg: ModelConfig, state: OnlineState,
         self_info=self_info, state=state, write_to_cache=False,
         collect_comp=comp_mask, dist=dist)
     h_k, h_v = comp_kv
-    new_mem = update_memory(cfg, state.mem, h_k, h_v, S)
-    return state._replace(mem=new_mem, pos=state.pos + S)
+    new_mem = update_memory(cfg, state.mem, h_k, h_v, consumed)
+    return state._replace(mem=new_mem, pos=state.pos + consumed)
 
 
 def prefill(params, cfg: ModelConfig, state: OnlineState,
             tokens: jnp.ndarray, dist: Optional[DistContext] = None,
             patches: Optional[jnp.ndarray] = None,
-            impl: Optional[str] = None, full_logits: bool = False):
+            impl: Optional[str] = None, full_logits: bool = False,
+            valid_len=None):
     """Process input I(t) attending [Mem(t), self-causal]; KV cached.
 
-    Returns (logits, new_state) — last position only unless full_logits."""
+    Returns (logits, new_state) — last position only unless full_logits.
+
+    ``valid_len`` (ragged lane, attention archs only): tokens beyond it
+    are bucket padding — masked out of attention, frozen out of the KV
+    cache, and excluded from the pos/length counters.  Logits at pad
+    positions are garbage; callers slice by their valid length.
+    """
     B, S = tokens.shape
+    if cfg.family in ("ssm", "hybrid") and valid_len is not None:
+        raise ValueError(
+            f"ragged prefill (valid_len) unsupported for {cfg.family!r}: "
+            "recurrent state updates cannot skip pad tokens")
+    if valid_len is not None and not full_logits:
+        # last-position logits would come from a masked pad token —
+        # garbage with no error; ragged callers must slice full logits
+        raise ValueError(
+            "ragged prefill (valid_len) requires full_logits=True: the "
+            "last padded position is masked; slice logits[:, :valid_len]")
     positions = state.pos + jnp.arange(S)
     x = _embed_block(cfg, params, tokens, positions)
     if patches is not None:
@@ -405,9 +467,15 @@ def prefill(params, cfg: ModelConfig, state: OnlineState,
         logits = T.lm_logits(params, cfg, x if full_logits else x[:, -1:])
         return logits, state._replace(ssm=new_ssm, pos=state.pos + S)
 
+    if valid_len is None:
+        k_valid, adv = None, S
+    else:
+        adv = jnp.asarray(valid_len, jnp.int32)
+        k_valid = M.lane_valid(S, adv)
     self_info = A.KeyInfo(idx=jnp.arange(S, dtype=jnp.int32),
                           seg=jnp.ones((S,), jnp.int32),
-                          comp=jnp.zeros((S,), bool))
+                          comp=jnp.zeros((S,), bool),
+                          valid=k_valid)
     q_info = self_info
     if cfg.family == "hybrid":
         x, new_cache, new_ssm, _ = _hybrid_pass(
@@ -420,9 +488,9 @@ def prefill(params, cfg: ModelConfig, state: OnlineState,
     x, new_cache, _ = _attn_stack_pass(
         params, cfg, x, positions, comp_gate=None, q_info=q_info,
         self_info=self_info, state=state, write_to_cache=True,
-        collect_comp=None, dist=dist, impl=impl)
+        collect_comp=None, dist=dist, impl=impl, valid_len=valid_len)
     logits = T.lm_logits(params, cfg, x if full_logits else x[:, -1:])
-    return logits, state._replace(cache=new_cache, pos=state.pos + S)
+    return logits, state._replace(cache=new_cache, pos=state.pos + adv)
 
 
 def decode_step(params, cfg: ModelConfig, state: OnlineState,

@@ -190,3 +190,45 @@ def expand_slot_mask(slot_mask: jnp.ndarray, comp_len: int) -> jnp.ndarray:
 def apply_mask(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Additive -inf masking; mask broadcastable to logits."""
     return jnp.where(mask, logits, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# ragged token lanes (serve-engine token-bucket padding)
+# ---------------------------------------------------------------------------
+
+def lane_valid(length: int, valid_len: jnp.ndarray,
+               tail_start: Optional[int] = None) -> jnp.ndarray:
+    """(length,) key-validity mask for one ragged lane.
+
+    True at positions ``< valid_len`` (the real tokens of a request padded
+    up to a token bucket) and, when ``tail_start`` is given, at positions
+    ``>= tail_start`` (a block that is always real regardless of padding —
+    e.g. the <COMP> group appended after a padded context chunk).
+    """
+    ar = jnp.arange(length)
+    v = ar < valid_len
+    if tail_start is not None:
+        v = v | (ar >= tail_start)
+    return v
+
+
+def ragged_block_write(buf: jnp.ndarray, blk: jnp.ndarray,
+                       start: jnp.ndarray, valid_len: jnp.ndarray,
+                       axis: int) -> jnp.ndarray:
+    """Write ``blk``'s first ``valid_len`` rows into ``buf`` at ``start``
+    along ``axis``; every other position of ``buf`` is frozen bit-exactly.
+
+    The masked-lane analogue of ``dynamic_update_slice_in_dim``: pad rows
+    of an over-long block are never written, and (unlike d_u_s) the write
+    cannot clamp-shift when ``start + blk_len`` overhangs the buffer —
+    so a lane padded into a larger token bucket leaves state bit-identical
+    to running the request unpadded.
+    """
+    n, s = buf.shape[axis], blk.shape[axis]
+    pos = jnp.arange(n)
+    src = jnp.clip(pos - start, 0, s - 1)
+    moved = jnp.take(blk.astype(buf.dtype), src, axis=axis)
+    keep = (pos >= start) & (pos < start + valid_len)
+    shape = [1] * buf.ndim
+    shape[axis] = n
+    return jnp.where(keep.reshape(shape), moved, buf)

@@ -112,17 +112,25 @@ def compress_from_kv(params, cfg: ModelConfig, mem: MemState,
 
 def stream_step(params, cfg: ModelConfig, st: StreamState,
                 chunk_tokens: jnp.ndarray,
-                ccm_on: bool = True) -> Tuple[jnp.ndarray, StreamState]:
+                ccm_on: bool = True,
+                valid_len=None) -> Tuple[jnp.ndarray, StreamState]:
     """Process ``c`` new tokens: maybe compress+evict, then prefill into the
     window attending [Mem, sink+window, self]. Returns per-token logits.
 
     ccm_on=False reproduces the StreamingLLM baseline (evict = drop), with
     an identical KV budget for fair comparison (paper Fig. 8).
+
+    ``valid_len`` (ragged lane): the chunk is padded up to a token bucket
+    and only the first ``valid_len`` tokens are real.  Pad tokens are
+    masked out of attention, frozen out of the window write, and excluded
+    from the win_len/pos counters *and the eviction trigger* — the padded
+    step is bit-identical (incl. eviction boundaries) to the unpadded one.
     """
     B, c = chunk_tokens.shape
     cc = cfg.ccm.stream_chunk
     sink = cfg.ccm.stream_sink
     W = cfg.ccm.stream_window
+    vl = c if valid_len is None else jnp.asarray(valid_len, jnp.int32)
     # Only ONE eviction (of cc tokens) fires per step, and the
     # dynamic_update_slice window write clamps silently — a chunk larger
     # than the eviction quantum (or an eviction block that doesn't fit
@@ -156,7 +164,7 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
                            win_len=s.win_len - cc, mem=new_mem,
                            pos=s.pos + (cfg.ccm.comp_len if ccm_on else 0))
 
-    st = jax.lax.cond(st.win_len + c > W, do_evict, lambda s: s, st)
+    st = jax.lax.cond(st.win_len + vl > W, do_evict, lambda s: s, st)
 
     positions = st.pos + jnp.arange(c)
     x = T.embed_tokens(cfg, params, chunk_tokens)
@@ -164,7 +172,9 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
         x = T._add_learned_pos(cfg, params["pos_embed"], x, positions)
     self_info = A.KeyInfo(idx=jnp.arange(c, dtype=jnp.int32),
                           seg=jnp.ones((c,), jnp.int32),
-                          comp=jnp.zeros((c,), bool))
+                          comp=jnp.zeros((c,), bool),
+                          valid=None if valid_len is None
+                          else M.lane_valid(c, vl))
     mem_valid = st.mem.valid_len(cfg.ccm.comp_len)
 
     def body(h, xs):
@@ -189,16 +199,20 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
             h = h + MOE.apply_moe(cfg, lp["moe"], hn, None)
         else:
             h = h + L.apply_mlp(cfg, lp["mlp"], hn)
-        nwk = jax.lax.dynamic_update_slice_in_dim(
-            wk, k_new.astype(wk.dtype), st.win_len, axis=1)
-        nwv = jax.lax.dynamic_update_slice_in_dim(
-            wv, v_new.astype(wv.dtype), st.win_len, axis=1)
+        if valid_len is None:
+            nwk = jax.lax.dynamic_update_slice_in_dim(
+                wk, k_new.astype(wk.dtype), st.win_len, axis=1)
+            nwv = jax.lax.dynamic_update_slice_in_dim(
+                wv, v_new.astype(wv.dtype), st.win_len, axis=1)
+        else:
+            nwk = M.ragged_block_write(wk, k_new, st.win_len, vl, axis=1)
+            nwv = M.ragged_block_write(wv, v_new, st.win_len, vl, axis=1)
         return h, (nwk, nwv)
 
     x, (nk, nv) = scan_layers(
         cfg.unroll_layers, body, x,
         (params["layers"], st.win_k, st.win_v, st.mem.k, st.mem.v))
     logits = T.lm_logits(params, cfg, x)
-    st = StreamState(win_k=nk, win_v=nv, win_len=st.win_len + c,
-                     mem=st.mem, pos=st.pos + c)
+    st = StreamState(win_k=nk, win_v=nv, win_len=st.win_len + vl,
+                     mem=st.mem, pos=st.pos + vl)
     return logits, st

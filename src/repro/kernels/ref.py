@@ -67,3 +67,19 @@ def session_gather_ref(slab, ids):
 def session_scatter_ref(slab, ids, rows):
     """Arena unpack: slab with slab[ids] = rows (last write wins on dups)."""
     return slab.at[ids].set(rows)
+
+
+def ragged_block_write_ref(buf, blk, start, valid_len, axis: int):
+    """Oracle for core.masks.ragged_block_write: copy ``blk``'s first
+    ``valid_len`` rows into ``buf`` at ``start`` along ``axis``; every
+    other position is frozen (no dynamic_update_slice clamp-shift).
+    A write overhanging the buffer end keeps only the rows that fit."""
+    buf = jnp.asarray(buf)
+    # clamp like the implementation's `pos < n` bound: an overhanging
+    # valid_len writes only the rows that fit, never shifts earlier ones
+    n = max(0, min(int(valid_len), buf.shape[axis] - int(start)))
+    idx = [slice(None)] * buf.ndim
+    idx[axis] = slice(int(start), int(start) + n)
+    src = [slice(None)] * buf.ndim
+    src[axis] = slice(0, n)
+    return buf.at[tuple(idx)].set(jnp.asarray(blk)[tuple(src)].astype(buf.dtype))

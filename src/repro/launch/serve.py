@@ -105,27 +105,58 @@ def make_stream_step(cfg: ModelConfig, params_shapes,
 # axis is an open ROADMAP item).
 # ---------------------------------------------------------------------------
 
-def session_vmap(cfg: ModelConfig, op: str) -> Callable:
-    """Unjitted vmapped session op: (params, state(B,...), tokens (B,1,l)).
+def ragged_family(cfg: ModelConfig) -> bool:
+    """Whether masked token lanes are supported: attention archs only —
+    SSM/hybrid recurrent scans cannot skip pad tokens, so their batches
+    keep exact token-length grouping."""
+    return cfg.family not in ("ssm", "hybrid")
+
+
+def session_vmap(cfg: ModelConfig, op: str, ragged: bool = False) -> Callable:
+    """Unjitted vmapped session op:
+    (params, state(B,...), tokens (B,1,l), lengths (B,)).
 
     'ingest' -> state; 'query'/'stream' -> (logits (B,1,l,V), state).
     Query = prefill of I(t) over [Mem, self] with full per-token logits.
     For 'stream', vmap turns the eviction `cond` into a `select`, so the
-    compression pass runs every step on every lane."""
-    core = {
-        "ingest": lambda p, st, tk: I.ingest_context(p, cfg, st, tk),
-        "query": lambda p, st, tk: I.prefill(p, cfg, st, tk,
-                                             full_logits=True),
-        "stream": lambda p, st, tk: STR.stream_step(p, cfg, st, tk),
-    }[op]
+    compression pass runs every step on every lane.
 
-    def fn(params, state, tokens):
-        return jax.vmap(lambda st, tk: core(params, st, tk))(state, tokens)
+    ``ragged``: each lane's tokens are padded up to a shared token bucket
+    and ``lengths`` carries the per-request valid length — pad tokens are
+    masked out of attention and frozen out of every state write, so a
+    padded lane is bit-identical to running the request unpadded.  With
+    ``ragged=False`` lengths are accepted but ignored (exact-length
+    batches; the only mode for SSM/hybrid)."""
+    if ragged and not ragged_family(cfg):
+        raise ValueError(
+            f"ragged session batching unsupported for family {cfg.family!r}")
+    if ragged:
+        core = {
+            "ingest": lambda p, st, tk, vl: I.ingest_context(
+                p, cfg, st, tk, valid_len=vl),
+            "query": lambda p, st, tk, vl: I.prefill(
+                p, cfg, st, tk, full_logits=True, valid_len=vl),
+            "stream": lambda p, st, tk, vl: STR.stream_step(
+                p, cfg, st, tk, valid_len=vl),
+        }[op]
+    else:
+        core = {
+            "ingest": lambda p, st, tk, vl: I.ingest_context(p, cfg, st, tk),
+            "query": lambda p, st, tk, vl: I.prefill(p, cfg, st, tk,
+                                                     full_logits=True),
+            "stream": lambda p, st, tk, vl: STR.stream_step(p, cfg, st, tk),
+        }[op]
+
+    def fn(params, state, tokens, lengths):
+        return jax.vmap(lambda st, tk, vl: core(params, st, tk, vl))(
+            state, tokens, lengths)
     return fn
 
 
-def make_arena_step(cfg: ModelConfig, op: str) -> Callable:
-    """Fused arena step: (params, slabs, ids (B,), tokens (B,1,l)) ->
+def make_arena_step(cfg: ModelConfig, op: str,
+                    ragged: bool = False) -> Callable:
+    """Fused arena step:
+    (params, slabs, ids (B,), tokens (B,1,l), lengths (B,)) ->
     (logits-or-None, slabs).
 
     Gather of the batch's slot rows, the vmapped op, and the scatter of
@@ -133,17 +164,17 @@ def make_arena_step(cfg: ModelConfig, op: str) -> Callable:
     serve engine's hot path (no intermediate batch materialization, no
     extra dispatch boundaries)."""
     from repro.kernels import ops as KOPS
-    vf = session_vmap(cfg, op)
+    vf = session_vmap(cfg, op, ragged)
 
-    def fn(params, slabs, ids, tokens):
+    def fn(params, slabs, ids, tokens, lengths):
         state = jax.tree.map(lambda s: KOPS.session_gather(s, ids), slabs)
         # barrier: without it the remat'd layer scan recomputes the
         # gather every layer (measured ~2x step time on CPU)
         state = jax.lax.optimization_barrier(state)
         if op == "ingest":
-            out, new = None, vf(params, state, tokens)
+            out, new = None, vf(params, state, tokens, lengths)
         else:
-            out, new = vf(params, state, tokens)
+            out, new = vf(params, state, tokens, lengths)
         # leaves the op left untouched come back as the SAME tracer
         # (ingest never writes the KV cache, query never writes the
         # memory) — skip their scatter entirely

@@ -61,6 +61,12 @@ SHAPES: Dict[str, ShapeSpec] = {
 # padded up to the next bucket so only these batch dims ever compile.
 SERVE_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
 
+# Serve-engine token-length buckets: a request shorter than its batch
+# head's bucket is padded up to it (pad tokens masked out of attention,
+# state writes frozen — see core.inference valid_len), so mixed-length
+# traffic shares batches and only these token dims ever compile.
+SERVE_TOKEN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
 
 def batch_bucket(n: int, buckets=SERVE_BATCH_BUCKETS) -> int:
     """Smallest bucket >= n (largest bucket if n exceeds them all)."""
@@ -68,6 +74,15 @@ def batch_bucket(n: int, buckets=SERVE_BATCH_BUCKETS) -> int:
         if n <= b:
             return b
     return max(buckets)
+
+
+def token_bucket(n: int, buckets=SERVE_TOKEN_BUCKETS) -> int:
+    """Smallest token bucket >= n; ``n`` itself beyond the largest bucket
+    (a too-long request runs at its exact length rather than truncating)."""
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    return n
 
 
 def sds(shape, dtype):

@@ -7,7 +7,9 @@ device feasible.  This package is that serving layer:
   arena.py     — fixed-shape device slabs of per-session state with a
                  free-list and jitted pack/unpack (gather/scatter)
   scheduler.py — continuous batching: queue per-session requests, group
-                 by op kind + shape, pad to bucketed batch sizes
+                 by op kind + token bucket (ragged lanes carry a
+                 valid_len; priorities age to prevent starvation), pad
+                 to bucketed batch sizes
   session.py   — session lifecycle + LRU host offload of cold sessions
   engine.py    — the driver loop wiring scheduler -> jitted steps
 """

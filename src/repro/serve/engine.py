@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import serve as SRV
-from repro.launch.specs import SERVE_BATCH_BUCKETS
+from repro.launch.specs import SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS
 from repro.models.config import ModelConfig
 from repro.serve.arena import SessionArena
 from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
@@ -37,10 +37,24 @@ class ServeEngine:
                  cache_len: int = 256, mem_slots: Optional[int] = None,
                  max_resident: Optional[int] = None, stream_slots: int = 0,
                  stream_max_resident: Optional[int] = None,
-                 batch_buckets: Sequence[int] = SERVE_BATCH_BUCKETS):
+                 batch_buckets: Sequence[int] = SERVE_BATCH_BUCKETS,
+                 token_buckets="auto", aging: Optional[int] = 32):
+        """``token_buckets``: ragged-batching token buckets ("auto" picks
+        `launch.specs.SERVE_TOKEN_BUCKETS` for attention archs and exact-
+        length grouping for SSM/hybrid; None forces exact lengths).
+        ``aging``: scheduler starvation knob — a waiting request's
+        effective priority improves by one per ``aging`` popped batches."""
         self.params = params
         self.cfg = cfg
         self.cache_len = cache_len
+        if token_buckets == "auto":
+            token_buckets = SERVE_TOKEN_BUCKETS if SRV.ragged_family(cfg) \
+                else None
+        elif token_buckets is not None and not SRV.ragged_family(cfg):
+            raise ValueError(
+                f"token buckets need masked lanes, unsupported for "
+                f"family {cfg.family!r}")
+        self.ragged = token_buckets is not None
         self._mgr: Dict[str, SessionManager] = {
             "online": SessionManager(
                 SessionArena.for_online(cfg, n_slots, cache_len, mem_slots),
@@ -60,13 +74,18 @@ class ServeEngine:
                 stream_max_resident)
         caps = {op: self._mgr[kind].max_resident
                 for op, kind in _OP_STATE.items() if kind in self._mgr}
-        self.scheduler = Scheduler(batch_buckets, max_batch=caps)
+        # a stream op must never pad past the eviction quantum — one
+        # eviction per step keeps the window bounded (stream_step guard)
+        self.scheduler = Scheduler(
+            batch_buckets, max_batch=caps, token_buckets=token_buckets,
+            max_token_len={"stream": cfg.ccm.stream_chunk}, aging=aging)
         self._steps = {}               # op kind -> jitted fn
         self._kind: Dict[str, str] = {}   # sid -> 'online' | 'stream'
         self._cached: Dict[str, int] = {}  # sid -> KV-cache tokens used
         self._undelivered = []         # [(requests, device out)] per batch
         self.stats_wall = 0.0
         self.stats = {k: {"requests": 0, "tokens": 0, "pad_lanes": 0,
+                          "pad_tokens": 0, "lanes": 0,
                           "batches": 0, "seconds": 0.0}
                       for k in ("ingest", "query", "stream")}
 
@@ -126,10 +145,15 @@ class ServeEngine:
         return self._submit(sid, "stream", tokens, priority)
 
     # -- execution -----------------------------------------------------
-    def _step(self, op: str):
-        if op not in self._steps:
-            self._steps[op] = SRV.make_arena_step(self.cfg, op)
-        return self._steps[op]
+    def _step(self, op: str, masked: bool):
+        """Jitted fused step per (op, masked).  Full-length batches take
+        the unmasked program — masking costs ~10% per step (valid-mask
+        attention + take-based frozen writes), so uniform traffic pays
+        nothing; only genuinely ragged batches run the masked variant."""
+        key = (op, masked)
+        if key not in self._steps:
+            self._steps[key] = SRV.make_arena_step(self.cfg, op, masked)
+        return self._steps[key]
 
     def _run_batch(self, batch: ScheduledBatch) -> None:
         mgr = self._mgr[_OP_STATE[batch.kind]]
@@ -138,16 +162,23 @@ class ServeEngine:
         t0 = time.perf_counter()
         slots = mgr.activate_batch([r.sid for r in batch.requests], pinned)
         ids = slots + [arena.pad_slot] * batch.pad
-        toks = np.concatenate(
-            [r.tokens[None] for r in batch.requests]
-            + [np.zeros((batch.pad, 1, batch.token_len), np.int32)], axis=0)
+        # lanes padded up to the batch's token bucket; per-lane valid
+        # lengths drive the masked ops (pad lanes claim the full bucket —
+        # they gather/scatter the scratch row, semantics don't matter)
+        toks = np.zeros((batch.bucket, 1, batch.token_len), np.int32)
+        for i, r in enumerate(batch.requests):
+            toks[i, 0, :r.token_len] = r.tokens[0]
+        lengths = np.asarray(batch.valid_lens
+                             + [batch.token_len] * batch.pad, np.int32)
         # one fused jitted program: gather rows -> vmapped op -> scatter
         # rows back into the donated slabs.  No block here: batches chain
         # through the slab dependency and overlap Python scheduling;
         # run() syncs once at the end of the drain.
-        step = self._step(batch.kind)
+        masked = self.ragged and any(vl != batch.token_len
+                                     for vl in batch.valid_lens)
+        step = self._step(batch.kind, masked)
         out, arena.slabs = step(self.params, arena.slabs,
-                                jnp.asarray(ids, jnp.int32), toks)
+                                jnp.asarray(ids, jnp.int32), toks, lengths)
         arena.mark_dirty(ids)
         dt = time.perf_counter() - t0
         # results are NOT materialized here — np.asarray(out) would
@@ -159,8 +190,11 @@ class ServeEngine:
             mgr.sessions[r.sid].n_ops += 1
         s = self.stats[batch.kind]
         s["requests"] += len(batch.requests)
-        s["tokens"] += len(batch.requests) * batch.token_len
+        s["tokens"] += sum(batch.valid_lens)
         s["pad_lanes"] += batch.pad
+        s["pad_tokens"] += (len(batch.requests) * batch.token_len
+                            - sum(batch.valid_lens))
+        s["lanes"] += batch.bucket
         s["batches"] += 1
         s["seconds"] += dt
 
@@ -180,7 +214,11 @@ class ServeEngine:
             for reqs, out in self._undelivered:
                 out_np = np.asarray(out) if out is not None else None
                 for i, r in enumerate(reqs):
-                    r.result = out_np[i, 0] if out_np is not None else None
+                    # slice off bucket padding: a request padded into a
+                    # larger token lane only owns its first valid_len
+                    # logit rows (the rest are masked-lane garbage)
+                    r.result = out_np[i, 0, :r.token_len] \
+                        if out_np is not None else None
                     r.done = True
             self._undelivered.clear()
             for m in self._mgr.values():
@@ -190,11 +228,27 @@ class ServeEngine:
 
     # -- introspection -------------------------------------------------
     def compile_stats(self) -> Dict[str, int]:
-        """Compiled-program count per op kind (recompile-churn metric)."""
-        out = {}
-        for op, fn in self._steps.items():
-            out[op] = fn._cache_size() if hasattr(fn, "_cache_size") else -1
+        """Compiled-program count per op kind (recompile-churn metric),
+        summed over the masked/unmasked step variants; -1 when the jit
+        cache size is unavailable (private API) — unmeasured, not zero."""
+        out: Dict[str, int] = {}
+        for (op, _), fn in self._steps.items():
+            n = fn._cache_size() if hasattr(fn, "_cache_size") else -1
+            prev = out.get(op, 0)
+            out[op] = -1 if (n < 0 or prev < 0) else prev + n
         return out
+
+    def compiled_programs(self) -> int:
+        """Total compiled programs across op kinds (compile-cache churn:
+        compare exact-length vs token-bucketed scheduling on the same
+        traffic)."""
+        return sum(max(v, 0) for v in self.compile_stats().values())
+
+    def batch_occupancy(self) -> Dict[str, float]:
+        """Mean fraction of batch lanes holding a real request, per op
+        kind (1.0 = no pad lanes; higher is better batch sharing)."""
+        return {k: (s["requests"] / s["lanes"] if s["lanes"] else 0.0)
+                for k, s in self.stats.items()}
 
     def occupancy(self) -> Dict[str, float]:
         return {k: m.arena.occupancy for k, m in self._mgr.items()}

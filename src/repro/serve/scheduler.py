@@ -1,16 +1,24 @@
 """Continuous-batching scheduler for session requests.
 
 Requests (``ingest`` / ``query`` / ``stream``) queue per session and are
-drained as ``ScheduledBatch``es: all requests in a batch share an op kind
-and an exact token length (one jitted program per (kind, bucket, len)),
-and the batch is padded up to a bucketed batch size
+drained as ``ScheduledBatch``es.  All requests in a batch share an op
+kind and a *token bucket* (`launch.specs.SERVE_TOKEN_BUCKETS`): the batch
+head's token length picks the bucket, and any eligible request whose
+length fits is padded up to it (carrying its ``valid_len`` so the masked
+session ops can freeze the pad lanes — see `core.inference`).  The batch
+itself is padded up to a bucketed batch size
 (`launch.specs.SERVE_BATCH_BUCKETS`, capped by the op kind's arena
-capacity — the cap acts as one final bucket) so a handful of compiled
-shapes covers any arrival pattern — no recompile churn as traffic
-fluctuates.
+capacity — the cap acts as one final bucket), so a handful of compiled
+shapes covers any mixed-length arrival pattern — no recompile churn as
+traffic fluctuates.  ``token_buckets=None`` restores exact token-length
+grouping (required for SSM/hybrid archs, whose recurrent scans cannot
+mask pad tokens).
 
-Admission is FIFO-with-priority: lower ``priority`` drains first,
-submission order breaks ties.  Two invariants keep batching safe:
+Admission is priority-with-aging: lower *effective* priority drains
+first, where a request's effective priority decreases by one for every
+``aging`` batches popped since it was submitted — a starved low-priority
+session always drains eventually under sustained high-priority load.
+Submission order breaks ties.  Two invariants keep batching safe:
 
   * program order per session — a request is only eligible once it is
     its session's earliest pending request (priority never reorders one
@@ -23,11 +31,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.launch.specs import SERVE_BATCH_BUCKETS, batch_bucket
+from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
+                                batch_bucket, token_bucket)
+
+_KINDS = ("ingest", "query", "stream")
 
 
 @dataclasses.dataclass
@@ -37,19 +48,22 @@ class Request:
     tokens: np.ndarray             # (1, token_len) int32
     priority: int = 0              # lower drains first
     seq: int = -1                  # submission order (set by Scheduler)
+    round: int = 0                 # scheduler round at submit (aging clock)
     result: Any = None             # logits for query/stream; None for ingest
     done: bool = False
     cancelled: bool = False        # dropped by close_session, never ran
 
     @property
     def token_len(self) -> int:
+        """The request's true (valid) token length — unchanged by any
+        bucket padding applied at batch time."""
         return self.tokens.shape[-1]
 
 
 @dataclasses.dataclass
 class ScheduledBatch:
     kind: str
-    token_len: int
+    token_len: int                 # padded (bucketed) token length
     bucket: int                    # padded batch size
     requests: List[Request]
 
@@ -57,26 +71,51 @@ class ScheduledBatch:
     def pad(self) -> int:
         return self.bucket - len(self.requests)
 
+    @property
+    def valid_lens(self) -> List[int]:
+        """Per-request valid token lengths (<= ``token_len``)."""
+        return [r.token_len for r in self.requests]
+
 
 class Scheduler:
     def __init__(self, batch_buckets: Sequence[int] = SERVE_BATCH_BUCKETS,
-                 max_batch=None):
+                 max_batch=None,
+                 token_buckets: Optional[Sequence[int]] = SERVE_TOKEN_BUCKETS,
+                 max_token_len: Union[int, Dict[str, int], None] = None,
+                 aging: Optional[int] = 32):
         """``max_batch``: int cap for every op kind, or a dict
-        ``{kind: cap}`` (a kind's batch must fit its arena)."""
+        ``{kind: cap}`` (a kind's batch must fit its arena).
+
+        ``token_buckets``: padded token lengths for ragged batching; None
+        disables padding (batches group by exact token length).
+        ``max_token_len``: int or ``{kind: cap}`` upper bound on the
+        padded length (e.g. a stream op must never pad past
+        ``cfg.ccm.stream_chunk``); a request's own length is always
+        allowed.  ``aging``: every ``aging`` popped batches a waiting
+        request's effective priority improves by one (None/0 disables —
+        pure FIFO-within-priority, which can starve)."""
         self.batch_buckets = tuple(sorted(batch_buckets))
         cap = self.batch_buckets[-1]
         if max_batch is None:
             max_batch = cap
         if isinstance(max_batch, int):
-            max_batch = {k: max_batch
-                         for k in ("ingest", "query", "stream")}
+            max_batch = {k: max_batch for k in _KINDS}
         self.max_batch = {k: min(v, cap) for k, v in max_batch.items()}
+        self.token_buckets = None if token_buckets is None \
+            else tuple(sorted(token_buckets))
+        if max_token_len is None:
+            max_token_len = {}
+        if isinstance(max_token_len, int):
+            max_token_len = {k: max_token_len for k in _KINDS}
+        self.max_token_len = dict(max_token_len)
+        self.aging = int(aging) if aging else 0
         self._queue: List[Request] = []
         self._seq = itertools.count()
+        self._round = 0
 
     def submit(self, sid: str, kind: str, tokens, priority: int = 0
                ) -> Request:
-        if kind not in ("ingest", "query", "stream"):
+        if kind not in _KINDS:
             raise ValueError(f"unknown op kind {kind!r}")
         arr = np.asarray(tokens)
         if arr.ndim > 2 or (arr.ndim == 2 and arr.shape[0] != 1):
@@ -89,13 +128,24 @@ class Scheduler:
         # caller buffer would alias later writes
         toks = np.array(arr, np.int32, copy=True).reshape(1, -1)
         req = Request(sid=sid, kind=kind, tokens=toks, priority=priority,
-                      seq=next(self._seq))
+                      seq=next(self._seq), round=self._round)
         self._queue.append(req)
         return req
 
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    @property
+    def round(self) -> int:
+        """Logical aging clock: number of batches popped so far."""
+        return self._round
+
+    def effective_priority(self, req: Request) -> int:
+        """Priority after aging: drops by one per ``aging`` rounds waited."""
+        if not self.aging:
+            return req.priority
+        return req.priority - (self._round - req.round) // self.aging
 
     def cancel(self, sid: str) -> List[Request]:
         """Drop every queued request for a session (closed sessions must
@@ -111,26 +161,46 @@ class Scheduler:
 
     def _eligible(self) -> List[Request]:
         """Pending requests that are their session's earliest, ordered by
-        (priority, submission)."""
+        (effective priority, submission)."""
         earliest = {}
         for r in self._queue:
             if r.sid not in earliest or r.seq < earliest[r.sid].seq:
                 earliest[r.sid] = r
-        return sorted(earliest.values(), key=lambda r: (r.priority, r.seq))
+        return sorted(earliest.values(),
+                      key=lambda r: (self.effective_priority(r), r.seq))
+
+    def _head_token_len(self, head: Request) -> int:
+        """Padded token length for a batch led by ``head``: its token
+        bucket, capped per kind — never below the head's own length."""
+        if self.token_buckets is None:
+            return head.token_len
+        tlen = token_bucket(head.token_len, self.token_buckets)
+        cap = self.max_token_len.get(head.kind)
+        if cap is not None:
+            tlen = min(tlen, cap)
+        return max(tlen, head.token_len)
 
     def next_batch(self) -> Optional[ScheduledBatch]:
-        """Pop the next batch: head of the eligible order defines the
-        (kind, token_len) key; fill with matching eligible requests."""
+        """Pop the next batch: head of the eligible order defines the op
+        kind and token bucket; fill with any eligible request of that
+        kind whose token length fits the bucket (padded lanes carry
+        their ``valid_len``)."""
         elig = self._eligible()
         if not elig:
             return None
+        self._round += 1
         head = elig[0]
-        key: Tuple[str, int] = (head.kind, head.token_len)
+        tlen = self._head_token_len(head)
         cap = self.max_batch.get(head.kind, self.batch_buckets[-1])
-        taken = [r for r in elig if (r.kind, r.token_len) == key][:cap]
+        if self.token_buckets is None:
+            taken = [r for r in elig
+                     if r.kind == head.kind and r.token_len == tlen][:cap]
+        else:
+            taken = [r for r in elig
+                     if r.kind == head.kind and r.token_len <= tlen][:cap]
         taken_set = set(id(r) for r in taken)
         self._queue = [r for r in self._queue if id(r) not in taken_set]
         bucket = min(batch_bucket(len(taken), self.batch_buckets), cap)
         bucket = max(bucket, len(taken))
-        return ScheduledBatch(kind=head.kind, token_len=head.token_len,
+        return ScheduledBatch(kind=head.kind, token_len=tlen,
                               bucket=bucket, requests=taken)

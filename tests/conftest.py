@@ -1,11 +1,25 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — unit tests see 1 device;
 multi-device tests run in subprocesses (test_distributed.py)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import masks as M
 from repro.models.config import CCMConfig, ModelConfig
+
+try:
+    from hypothesis import settings as _hyp_settings
+    # "ci" (selected via HYPOTHESIS_PROFILE in .github/workflows/ci.yml):
+    # derandomized — property tests draw a fixed example sequence so CI
+    # is deterministic; the default profile keeps fuzzing locally.
+    _hyp_settings.register_profile(
+        "ci", derandomize=True, max_examples=60, deadline=None)
+    _hyp_settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:          # property tests skip without hypothesis
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,189 @@
+"""Serve-invariant property tests for the continuous-batching scheduler.
+
+Random submit / cancel / drain traces are executed against `Scheduler`
+and a model checker asserts, on every popped batch and at end of trace:
+
+  * program order per session — a session's requests drain in submission
+    order, never reordered by priority or token bucketing;
+  * one request per session per batch — no duplicate sids in a batch;
+  * priority-with-aging monotonicity — the batch head minimizes
+    (effective priority, submission seq) over the eligible set at pop
+    time, where effective priority ages down as rounds pass;
+  * token-bucket membership — every request fits the batch's padded
+    token length, which is the head's bucket (capped per kind);
+  * terminal accounting — every submitted request ends ``done`` exactly
+    once: either cancelled, or delivered in exactly one batch.
+
+The checker is shared between a hypothesis fuzz (CI runs it with the
+fixed "ci" profile, see conftest.py) and a seeded deterministic sweep
+that runs even where hypothesis is not installed.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KINDS = ("ingest", "query", "stream")
+SIDS = tuple(f"s{i}" for i in range(6))
+LENGTHS = (1, 2, 3, 5, 8, 13, 16)
+TOKEN_BUCKETS = (2, 4, 8, 16)
+BATCH_BUCKETS = (1, 2, 4)
+MAX_TOKEN_LEN = {"stream": 8}
+
+
+def check_token_len(sch: Scheduler, batch, head) -> None:
+    """Independent statement of the bucket-choice contract (not a copy
+    of the scheduler's own computation, so a bucketing regression cannot
+    self-certify)."""
+    tb = sch.token_buckets
+    if tb is None:
+        assert batch.token_len == head.token_len
+        return
+    cap = sch.max_token_len.get(batch.kind)
+    # never truncates the head's request
+    assert batch.token_len >= head.token_len
+    # the padded length is a real bucket, unless the head itself exceeds
+    # every admissible bucket (then it runs at its exact length)
+    assert batch.token_len in tb or batch.token_len == head.token_len
+    # per-kind cap respected whenever the head fits under it
+    if cap is not None:
+        assert batch.token_len <= max(cap, head.token_len)
+    # minimality: any smaller bucket that fits the head must have been
+    # inadmissible (over the kind's cap) — no oversized shapes compiled
+    for b in tb:
+        if head.token_len <= b < batch.token_len:
+            assert cap is not None and b > cap
+
+
+def run_trace(ops, aging, token_buckets):
+    """Execute a trace and assert every serve invariant."""
+    sch = Scheduler(batch_buckets=BATCH_BUCKETS, token_buckets=token_buckets,
+                    max_token_len=dict(MAX_TOKEN_LEN), aging=aging)
+    submitted = []            # every Request, in submission order
+    pending = []              # mirror of the scheduler's queue
+    delivered = {}            # id(req) -> number of batches it appeared in
+    drain_log = []            # requests in the order they drained
+
+    def pop_and_check():
+        # eligible set and effective priorities BEFORE the pop (the pop
+        # advances the aging clock)
+        earliest = {}
+        for r in pending:
+            if r.sid not in earliest or r.seq < earliest[r.sid].seq:
+                earliest[r.sid] = r
+        elig = sorted(earliest.values(),
+                      key=lambda r: (sch.effective_priority(r), r.seq))
+        batch = sch.next_batch()
+        if not elig:
+            assert batch is None
+            return None
+        assert batch is not None and batch.requests
+        head = batch.requests[0]
+        # priority-with-aging monotonicity: the head is the minimum of
+        # the eligible order — a starved request whose effective priority
+        # aged below the flood's must win the pop
+        assert head is elig[0]
+        # one request per session per batch
+        sids = [r.sid for r in batch.requests]
+        assert len(set(sids)) == len(sids)
+        # token-bucket membership + uniform kind
+        check_token_len(sch, batch, head)
+        for r in batch.requests:
+            assert r.kind == batch.kind
+            assert r.token_len <= batch.token_len
+            if token_buckets is None:
+                assert r.token_len == batch.token_len
+        assert len(batch.requests) <= batch.bucket <= max(
+            max(BATCH_BUCKETS), len(batch.requests))
+        assert batch.valid_lens == [r.token_len for r in batch.requests]
+        for r in batch.requests:
+            assert not r.cancelled
+            delivered[id(r)] = delivered.get(id(r), 0) + 1
+            pending.remove(r)
+            drain_log.append(r)
+        return batch
+
+    for op in ops:
+        if op[0] == "submit":
+            _, sid, kind, length, priority = op
+            r = sch.submit(sid, kind, np.zeros(length, np.int32),
+                           priority=priority)
+            submitted.append(r)
+            pending.append(r)
+        elif op[0] == "cancel":
+            dropped = sch.cancel(op[1])
+            for r in dropped:
+                assert r.cancelled and r.done
+                pending.remove(r)
+        else:  # drain one batch
+            pop_and_check()
+    while pop_and_check() is not None:
+        pass
+    assert sch.pending == 0 and not pending
+
+    # terminal accounting: every submitted request reaches exactly one
+    # terminal outcome — cancelled (flagged done by cancel()) or handed
+    # to exactly one batch (the engine flags done at delivery)
+    for r in submitted:
+        assert delivered.get(id(r), 0) == (0 if r.cancelled else 1)
+        assert r.done == r.cancelled
+    # program order per session: the DRAIN order of a session's requests
+    # equals its submission order (cancelled ones excluded)
+    drained_per_sid, submitted_per_sid = {}, {}
+    for r in drain_log:
+        drained_per_sid.setdefault(r.sid, []).append(r.seq)
+    for r in submitted:
+        if not r.cancelled:
+            submitted_per_sid.setdefault(r.sid, []).append(r.seq)
+    assert drained_per_sid == submitted_per_sid
+
+
+def _random_ops(rng, n):
+    ops = []
+    for _ in range(n):
+        roll = rng.rand()
+        if roll < 0.6:
+            ops.append(("submit", SIDS[rng.randint(len(SIDS))],
+                        KINDS[rng.randint(len(KINDS))],
+                        int(LENGTHS[rng.randint(len(LENGTHS))]),
+                        int(rng.randint(0, 4))))
+        elif roll < 0.75:
+            ops.append(("cancel", SIDS[rng.randint(len(SIDS))]))
+        else:
+            ops.append(("drain",))
+    return ops
+
+
+@pytest.mark.parametrize("aging", [0, 1, 3])
+@pytest.mark.parametrize("token_buckets", [None, TOKEN_BUCKETS])
+def test_seeded_traces_uphold_invariants(aging, token_buckets):
+    """Deterministic sweep of the same checker (runs without hypothesis)."""
+    rng = np.random.RandomState(1234 + aging)
+    for _ in range(25):
+        run_trace(_random_ops(rng, 40), aging, token_buckets)
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.sampled_from(SIDS),
+                      st.sampled_from(KINDS), st.sampled_from(LENGTHS),
+                      st.integers(0, 3)),
+            st.tuples(st.just("cancel"), st.sampled_from(SIDS)),
+            st.tuples(st.just("drain")),
+        ), max_size=60)
+
+    @given(ops=OPS, aging=st.sampled_from([0, 1, 3]),
+           token_buckets=st.sampled_from([None, TOKEN_BUCKETS]))
+    @settings(max_examples=120, deadline=None)
+    def test_property_traces_uphold_invariants(ops, aging, token_buckets):
+        run_trace(ops, aging, token_buckets)
+else:
+    def test_property_traces_uphold_invariants():
+        pytest.skip("property fuzz needs hypothesis")

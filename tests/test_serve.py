@@ -1,16 +1,31 @@
-"""Multi-tenant serve subsystem: arena, scheduler, engine, LRU offload."""
+"""Multi-tenant serve subsystem: arena, scheduler, engine, LRU offload,
+ragged token-bucket batching (masked lanes)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import inference as I
+from repro.core import masks as M
 from repro.kernels import ops, ref
+from repro.launch import serve as SRV
 from repro.models import transformer as T
 from repro.serve.arena import ArenaFull, SessionArena
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Scheduler
 from repro.serve.session import SessionManager
+
+
+def _assert_state_close(got, want, atol=2e-6):
+    """Leafwise compare two state pytrees: int leaves (counters, lengths)
+    exactly, float leaves to a tight tolerance."""
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.shape == w.shape
+        if np.issubdtype(g.dtype, np.integer):
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_allclose(g, w, atol=atol, rtol=0)
 
 
 @pytest.fixture(scope="module")
@@ -312,3 +327,194 @@ def test_reset_slots_beyond_largest_bucket(tiny_cfg):
     arena.mark_dirty(slots)
     arena.reset_slots(slots)     # must not raise
     assert float(jax.tree.leaves(arena.read_slot(slots[-1]))[0].sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# ragged token-bucket batching (masked lanes)
+# ---------------------------------------------------------------------------
+
+def test_ragged_block_write_matches_ref():
+    """core.masks.ragged_block_write vs the kernels.ref oracle, including
+    a block that overhangs the buffer end (where dynamic_update_slice
+    would clamp-shift and corrupt earlier rows)."""
+    key = jax.random.PRNGKey(3)
+    buf = jax.random.normal(key, (2, 10, 3))
+    blk = jax.random.normal(jax.random.PRNGKey(4), (2, 6, 3))
+    got = M.ragged_block_write(buf, blk, 5, 4, axis=1)
+    want = ref.ragged_block_write_ref(buf, blk, 5, 4, axis=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # full-valid write == dynamic_update_slice bit-for-bit
+    got_full = M.ragged_block_write(buf, blk, 2, 6, axis=1)
+    dus = jax.lax.dynamic_update_slice_in_dim(buf, blk, 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(got_full), np.asarray(dus))
+    # overhang: start+6 > 10 — valid prefix written, rest frozen, no shift
+    got_over = M.ragged_block_write(buf, blk, 8, 2, axis=1)
+    want_over = ref.ragged_block_write_ref(buf, blk, 8, 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(got_over), np.asarray(want_over))
+    np.testing.assert_array_equal(np.asarray(got_over)[:, :8], np.asarray(buf)[:, :8])
+
+
+def test_scheduler_ragged_fill_shares_bucket():
+    """Mixed-length requests of one kind share the head's token bucket;
+    longer requests wait for their own batch."""
+    sch = Scheduler(batch_buckets=(1, 2, 4), token_buckets=(4, 8, 16))
+    sch.submit("a", "ingest", np.zeros(5, np.int32))
+    sch.submit("b", "ingest", np.zeros(8, np.int32))
+    sch.submit("c", "ingest", np.zeros(3, np.int32))
+    sch.submit("d", "ingest", np.zeros(11, np.int32))   # > bucket 8: waits
+    b1 = sch.next_batch()
+    assert b1.token_len == 8 and [r.sid for r in b1.requests] == ["a", "b", "c"]
+    assert b1.valid_lens == [5, 8, 3]
+    b2 = sch.next_batch()
+    assert b2.token_len == 16 and [r.sid for r in b2.requests] == ["d"]
+    assert sch.next_batch() is None
+
+
+def test_aging_prevents_starvation():
+    """A low-priority request that can never share the flood's token
+    bucket drains once its effective priority ages below the flood's —
+    and provably starves with aging disabled (the ROADMAP bug)."""
+    def flood_rounds(aging, rounds=60):
+        sch = Scheduler(batch_buckets=(1, 2), token_buckets=(8, 16),
+                        aging=aging)
+        lo = sch.submit("lo", "ingest", np.zeros(16, np.int32), priority=5)
+        for i in range(rounds):
+            sch.submit(f"hi{2 * i}", "ingest", np.zeros(8, np.int32))
+            sch.submit(f"hi{2 * i + 1}", "ingest", np.zeros(8, np.int32))
+            batch = sch.next_batch()
+            if any(r is lo for r in batch.requests):
+                return i
+        return None
+    assert flood_rounds(aging=None) is None        # starves forever
+    drained_at = flood_rounds(aging=4)
+    # priority gap 5 x aging 4 -> head within ~20 rounds
+    assert drained_at is not None and drained_at <= 24
+
+
+def test_ragged_ingest_query_equivalence(tiny_cfg, params):
+    """Mixed-length requests batched into one token bucket produce
+    logits AND post-state numerically identical to unpadded runs."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4))
+    assert eng.ragged
+    lens, qlens = [5, 8, 3], [4, 2, 3]
+    chunks = [np.asarray(_tokens(i, L)) for i, L in enumerate(lens)]
+    queries = [np.asarray(_tokens(9 + i, L)) for i, L in enumerate(qlens)]
+    for s, c in enumerate(chunks):
+        eng.create_session(f"s{s}")
+        eng.ingest(f"s{s}", c)
+    reqs = [eng.query(f"s{s}", q) for s, q in enumerate(queries)]
+    eng.run()
+    # all three lengths shared ONE batch per op kind (the point of
+    # ragged batching — exact grouping would have taken 3 + 3 batches)
+    assert eng.stats["ingest"]["batches"] == 1
+    assert eng.stats["query"]["batches"] == 1
+    mgr = eng._mgr["online"]
+    for s in range(3):
+        st = I.init_online_state(tiny_cfg, 1, max_cache_len=32)
+        st = I.ingest_context(params, tiny_cfg, st, chunks[s][None])
+        lg, st = I.prefill(params, tiny_cfg, st, queries[s][None],
+                           full_logits=True)
+        assert reqs[s].result.shape[0] == qlens[s]   # sliced by valid_len
+        np.testing.assert_allclose(np.asarray(reqs[s].result),
+                                   np.asarray(lg[0]), atol=2e-6, rtol=0)
+        got = mgr.arena.read_slot(mgr.sessions[f"s{s}"].slot)
+        _assert_state_close(got, st)
+
+
+def test_ragged_stream_equivalence(tiny_cfg, params):
+    """Stream chunks padded up to stream_chunk match the unpadded path
+    bit-for-bit, including across eviction boundaries."""
+    from repro.core import streaming as ST
+    cfg = tiny_cfg.replace(ccm=tiny_cfg.ccm.__class__(
+        comp_len=2, max_steps=4, stream_window=16, stream_sink=2,
+        stream_chunk=4, stream_mem_slots=4))
+    params2 = T.init_lm(jax.random.PRNGKey(5), cfg)
+    eng = ServeEngine(params2, cfg, n_slots=1, cache_len=8,
+                      stream_slots=2, batch_buckets=(1, 2))
+    eng.create_session("u", kind="stream")
+    # 8 chunks of 3 tokens (padded to the stream_chunk-4 bucket) push the
+    # 16-token window through multiple evictions
+    toks = [np.asarray(_tokens(70 + i, 3)) for i in range(8)]
+    reqs = [eng.stream("u", t) for t in toks]
+    eng.run()
+    assert eng.stats["stream"]["pad_tokens"] == 8    # one pad per chunk
+    st = ST.init_stream_state(cfg, 1)
+    for t, req in zip(toks, reqs):
+        lg, st = ST.stream_step(params2, cfg, st, t[None])
+        assert req.result.shape[0] == 3
+        np.testing.assert_allclose(np.asarray(req.result),
+                                   np.asarray(lg[0]), atol=2e-6, rtol=0)
+    assert int(st.mem.slots) > 0                     # evictions compressed
+    mgr = eng._mgr["stream"]
+    got = mgr.arena.read_slot(mgr.sessions["u"].slot)
+    _assert_state_close(got, st)
+
+
+def test_ragged_matches_exact_scheduling(tiny_cfg, params):
+    """The same mixed-length traffic through token-bucketed vs exact-
+    length scheduling yields identical results — padding is semantics-
+    free; only the batching (and compile count) differs."""
+    lens = [3, 5, 8, 5, 3, 8]
+
+    def run(token_buckets):
+        eng = ServeEngine(params, tiny_cfg, n_slots=8, cache_len=32,
+                          batch_buckets=(1, 2, 4, 8),
+                          token_buckets=token_buckets)
+        outs = []
+        for s, L in enumerate(lens):
+            eng.create_session(f"s{s}")
+            eng.ingest(f"s{s}", np.asarray(_tokens(s, L)))
+        reqs = [eng.query(f"s{s}", np.asarray(_tokens(50 + s, L)))
+                for s, L in enumerate(lens)]
+        eng.run()
+        return ([np.asarray(r.result) for r in reqs],
+                sum(s["batches"] for s in eng.stats.values()),
+                eng.compiled_programs())
+
+    ragged_out, ragged_batches, ragged_progs = run("auto")
+    exact_out, exact_batches, exact_progs = run(None)
+    for a, b in zip(ragged_out, exact_out):
+        np.testing.assert_allclose(a, b, atol=2e-6, rtol=0)
+    assert ragged_batches < exact_batches
+    assert ragged_progs < exact_progs
+
+
+def test_make_arena_step_golden_rows(tiny_cfg, params):
+    """Golden regression: gather->op->scatter leaves untouched slab rows
+    bit-identical, and pad lanes only ever land on the scratch row — the
+    silent-corruption class the PR 1 overflow guard fixed."""
+    arena = SessionArena.for_online(tiny_cfg, n_slots=4, cache_len=16)
+    for slot in range(4):
+        arena.alloc()
+        state = jax.tree.map(
+            lambda s: jnp.full(s.shape, float(slot + 1), s.dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating)
+            else jnp.full(s.shape, slot + 1, s.dtype),
+            arena.template)
+        arena.write_slot(slot, state)
+    before = [np.array(leaf) for leaf in jax.tree.leaves(arena.slabs)]
+    step = SRV.make_arena_step(tiny_cfg, "ingest", ragged=True)
+    pad = arena.pad_slot
+    ids = jnp.asarray([1, pad, pad], jnp.int32)      # dup pad lanes
+    toks = np.zeros((3, 1, 8), np.int32)
+    toks[0, 0, :5] = np.asarray(_tokens(30, 5))
+    lengths = np.asarray([5, 8, 8], np.int32)
+    out, slabs = step(params, arena.slabs, ids, toks, lengths)
+    arena.slabs = slabs
+    assert out is None
+    after = [np.asarray(leaf) for leaf in jax.tree.leaves(arena.slabs)]
+    changed = False
+    for b, a in zip(before, after):
+        # rows 0, 2, 3 were NOT in the batch: bit-identical
+        for row in (0, 2, 3):
+            np.testing.assert_array_equal(a[row], b[row])
+        changed = changed or not np.array_equal(a[1], b[1])
+    assert changed                                   # the live row did run
+    # the live row's update equals the direct unpadded op on its state
+    st = jax.tree.map(
+        lambda s: jnp.full(s.shape, 2.0, s.dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else jnp.full(s.shape, 2, s.dtype), arena.template)
+    want = I.ingest_context(params, tiny_cfg, st, jnp.asarray(toks[0, :, :5]))
+    _assert_state_close(arena.read_slot(1), want)
