@@ -1,0 +1,192 @@
+"""Decode hot-path benchmark: segmented attention vs materialized concat.
+
+The paper's premise is that decoding attends [Mem, cache] cheaply because
+Mem(t) stays tiny — but the pre-segmented runtime rebuilt that
+concatenation per layer per token (and fully dequantized int8 caches
+before every attend).  This bench measures what the segmented attend
+(`models.attention.attend_segments`) buys on the decode loop:
+
+  concat    — `impl='concat'`: materialize [mem | cache | self] KV and
+              KeyInfo every layer/step (the pre-PR baseline, kept as an
+              explicit impl for exactly this comparison)
+  segmented — the default in-place path: per-segment running-softmax,
+              k-blocks past cache.length skipped, tile-wise int8 dequant
+
+Scenarios: greedy-decode tokens/s vs occupied cache length at a fixed
+cache capacity (serving arenas allocate Smax up front; decode cost must
+scale with *occupancy*, not capacity), an int8-cache variant (in-kernel
+tile dequant vs full-cache dequant), and the serve engine's batched
+query throughput.  Results are written to BENCH_decode.json (overwriting
+any previous run) — the perf trajectory accumulates as one committed
+snapshot per PR in git history, plus a smoke-run CI artifact per build.
+
+Weights are random — decode throughput does not need a trained adapter.
+
+    PYTHONPATH=src python benchmarks/decode_bench.py [--smoke] \
+        [--out BENCH_decode.json]
+"""
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, ".")
+sys.path.insert(0, "benchmarks")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import inference as I
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+
+
+def _filled_state(cfg, key, batch, smax, cache_len):
+    """Online state with a cache filled to ``cache_len`` and a full
+    memory — decode throughput needs realistic shapes, not a trained
+    transcript, so the KV content is random."""
+    st = I.init_online_state(cfg, batch, max_cache_len=smax)
+    cache = st.cache
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = I.quantize_kv(jax.random.normal(key, cache.k_scale.shape
+                                                 + (cfg.hd,), jnp.float32))
+        vq, vs = I.quantize_kv(jax.random.normal(jax.random.fold_in(key, 1),
+                                                 cache.v_scale.shape
+                                                 + (cfg.hd,), jnp.float32))
+        cache = cache._replace(k=kq, v=vq, k_scale=ks, v_scale=vs)
+    else:
+        cache = cache._replace(
+            k=jax.random.normal(key, cache.k.shape, cache.k.dtype),
+            v=jax.random.normal(jax.random.fold_in(key, 1), cache.v.shape,
+                                cache.v.dtype))
+    cache = cache._replace(length=jnp.asarray(cache_len, jnp.int32))
+    mem = st.mem
+    if mem is not None:
+        mem = mem._replace(
+            k=jax.random.normal(jax.random.fold_in(key, 2), mem.k.shape,
+                                mem.k.dtype),
+            v=jax.random.normal(jax.random.fold_in(key, 3), mem.v.shape,
+                                mem.v.dtype),
+            slots=jnp.asarray(mem.max_slots(cfg.ccm.comp_len), jnp.int32))
+    return st._replace(cache=cache, mem=mem,
+                       pos=jnp.asarray(cache_len, jnp.int32))
+
+
+def make_decode_loop(params, cfg, impl, n_tokens):
+    """Jitted greedy decode scan from a given state (what generate()'s
+    decode phase runs) — the measured hot loop."""
+    def run(state, tok):
+        def step(carry, _):
+            st, t = carry
+            lg, st = I.decode_step(params, cfg, st, t, impl=impl)
+            nt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return (st, nt), ()
+        carry, _ = jax.lax.scan(step, (state, tok), None, length=n_tokens)
+        return carry[0].cache.length, carry[1]
+    return jax.jit(run)
+
+
+def bench_decode(params, cfg, smax, cache_len, n_tokens, batch=1,
+                 repeats=5):
+    state = _filled_state(cfg, jax.random.PRNGKey(7), batch, smax,
+                          cache_len)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    out = {}
+    for impl in ("concat", "segmented"):
+        fn = make_decode_loop(params, cfg,
+                              None if impl == "segmented" else impl,
+                              n_tokens)
+        jax.block_until_ready(fn(state, tok))        # compile off-clock
+        best = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(state, tok))
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        out[impl] = batch * n_tokens / best
+    out["speedup"] = out["segmented"] / out["concat"]
+    return out
+
+
+def bench_engine_query(params, cfg, n_sessions, qlen, cache_len):
+    """Serve-engine batched query throughput (the vmapped prefill path —
+    rides the same segmented attend)."""
+    eng = ServeEngine(params, cfg, n_slots=n_sessions + 1,
+                      cache_len=cache_len)
+    toks = np.zeros(qlen, np.int32)
+    for wave in ("warm", "run"):                      # warm compiles
+        for s in range(n_sessions):
+            eng.create_session(f"{wave}{s}")
+        t0 = time.perf_counter()
+        for s in range(n_sessions):
+            eng.query(f"{wave}{s}", toks)
+        eng.run()
+        dt = time.perf_counter() - t0
+        for s in range(n_sessions):
+            eng.close_session(f"{wave}{s}")
+    return n_sessions * qlen / dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (trajectory artifact only)")
+    ap.add_argument("--smax", type=int, default=4096,
+                    help="allocated cache capacity (serving arena size)")
+    ap.add_argument("--tokens", type=int, default=32,
+                    help="decode tokens per measurement")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args()
+
+    cfg = C.bench_cfg()          # 2 layers, d=128, 4q/2kv heads, f32
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    if args.smoke:
+        smax, lens, n_tok = 512, (128, 256, 512), 8
+    else:
+        smax, lens, n_tok = args.smax, (256, 1024, 2048, args.smax), \
+            args.tokens
+
+    results = {"config": {"smax": smax, "n_tokens": n_tok,
+                          "layers": cfg.n_layers, "d_model": cfg.d_model,
+                          "smoke": bool(args.smoke)},
+               "decode": [], "decode_int8": [], "engine": {}}
+    print(f"\ndecode tokens/s at cache capacity Smax={smax} "
+          f"({n_tok} greedy tokens, best of 5; 2-layer d=128 bench model)")
+    print(f"{'cache_len':>10} {'concat':>10} {'segmented':>10} {'speedup':>8}")
+    for cl in lens:
+        r = bench_decode(params, cfg, smax, cl, n_tok)
+        results["decode"].append({"cache_len": cl, **r})
+        print(f"{cl:>10} {r['concat']:>10.1f} {r['segmented']:>10.1f} "
+              f"{r['speedup']:>7.2f}x")
+        C.csv_row(f"decode_seg_c{cl}", 1e6 / max(r["segmented"], 1e-9),
+                  f"{r['speedup']:.2f}x vs concat")
+        if cl >= 1024 and r["speedup"] < 2.0:
+            print("WARNING: speedup below the 2x acceptance bar")
+
+    cfg8 = cfg.replace(kv_cache_dtype="int8")
+    p8 = T.init_lm(jax.random.PRNGKey(0), cfg8)
+    cl8 = lens[len(lens) // 2]
+    r8 = bench_decode(p8, cfg8, smax, cl8, n_tok)
+    results["decode_int8"].append({"cache_len": cl8, **r8})
+    print(f"\nint8 cache (tile dequant vs full-cache dequant), "
+          f"cache_len={cl8}:")
+    print(f"{cl8:>10} {r8['concat']:>10.1f} {r8['segmented']:>10.1f} "
+          f"{r8['speedup']:>7.2f}x")
+
+    n_sess, qlen = (8, 4) if args.smoke else (32, 8)
+    tps = bench_engine_query(params, cfg, n_sess, qlen,
+                             cache_len=4 * qlen)
+    results["engine"] = {"sessions": n_sess, "qlen": qlen,
+                         "query_tokens_per_s": tps}
+    print(f"\nengine batched query: {n_sess} sessions x {qlen} tokens "
+          f"-> {tps:.0f} tok/s")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -110,40 +110,31 @@ def init_online_state(cfg: ModelConfig, batch: int, max_cache_len: int,
 # attention over [mem | cache | self] for a block of new tokens
 # ---------------------------------------------------------------------------
 
-def _mem_info(mem_k, valid_tokens) -> A.KeyInfo:
-    Mx = mem_k.shape[1]
-    return A.mem_key_info(Mx, valid=jnp.arange(Mx) < valid_tokens)
-
-
-def _cache_info(cache_k, length) -> A.KeyInfo:
-    Smax = cache_k.shape[1]
-    return A.KeyInfo(idx=jnp.full((Smax,), -1, jnp.int32),
-                     seg=jnp.zeros((Smax,), jnp.int32),
-                     comp=jnp.ones((Smax,), bool),
-                     valid=jnp.arange(Smax) < length)
-
-
 def _attend_online(cfg, q, k_new, v_new, self_info: A.KeyInfo,
                    q_info: A.KeyInfo,
                    mem_kv=None, mem_valid=None,
-                   cache_kv=None, cache_len=None, impl=None):
-    """q over [mem?, cache?, self]. k_new/v_new are this block's KV."""
-    ks, vs, infos = [], [], []
+                   cache_kv=None, cache_len=None, cache_scales=None,
+                   cache_layer=None, impl=None):
+    """q over [mem?, cache(:length)?, self] KV segments read IN PLACE.
+
+    k_new/v_new are this block's KV.  No concatenated KV or KeyInfo is
+    materialized (the segmented attend folds a running softmax across the
+    segments); an int8 cache is passed quantized with ``cache_scales``
+    and dequantized tile-wise inside the attend.  With ``cache_layer``,
+    ``cache_kv`` is the STACKED (L, B, Smax, Hkv, hd) cache and blocks
+    are sliced straight out of layer ``cache_layer`` — a scanned layer
+    body never copies its layer's cache slice.
+    """
+    segs = []
     if mem_kv is not None:
-        mk, mv = mem_kv
-        ks.append(mk); vs.append(mv)
-        infos.append(_mem_info(mk, mem_valid))
+        segs.append(A.KVSegment(k=mem_kv[0], v=mem_kv[1], length=mem_valid))
     if cache_kv is not None:
-        ck, cv = cache_kv
-        ks.append(ck); vs.append(cv)
-        infos.append(_cache_info(ck, cache_len))
-    ks.append(k_new); vs.append(v_new); infos.append(self_info)
-    k = jnp.concatenate(ks, axis=1)
-    v = jnp.concatenate(vs, axis=1)
-    info = infos[0]
-    for i in infos[1:]:
-        info = A.concat_info(info, i)
-    return A.attend(cfg, q, k, v, q_info, info, impl=impl)
+        ks, vs = cache_scales if cache_scales is not None else (None, None)
+        segs.append(A.KVSegment(k=cache_kv[0], v=cache_kv[1],
+                                length=cache_len, k_scale=ks, v_scale=vs,
+                                layer=cache_layer))
+    segs.append(A.KVSegment(k=k_new, v=v_new, info=self_info))
+    return A.attend_segments(cfg, q, segs, q_info, impl=impl)
 
 
 def _write_cache(ck, cv, k_new, v_new, at, valid_len=None):
@@ -180,15 +171,18 @@ def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
     mem_valid = mem.valid_len(cfg.ccm.comp_len) if mem is not None else None
     cross = state.cross
     quant = cache is not None and cache.quantized
+    # loop-invariant: the <COMP> gather index is the same every layer —
+    # computed once per step, not inside the scanned body
+    comp_idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0] \
+        if collect_comp is not None else None
 
-    def body(h, xs):
-        lp = xs["lp"]
-        ck, cv = xs["ck"], xs["cv"]
-        if quant:
-            ck_f = dequantize_kv(ck, xs["ks"], cfg.cdtype)
-            cv_f = dequantize_kv(cv, xs["vs"], cfg.cdtype)
-        else:
-            ck_f, cv_f = ck, cv
+    # The stacked cache rides the scan CARRY, not xs/ys: the attend
+    # slices k-blocks straight out of layer li (KVSegment.layer) and the
+    # write touches a block-sized window — no per-layer slice copy in,
+    # no per-layer full-cache stack out.
+    def body(carry, xs):
+        h, cst = carry
+        lp, li = xs["lp"], xs["li"]
         hn = L.apply_norm(cfg, lp["ln1"], h)
         q, k_new, v_new = A.qkv_project(
             cfg, lp["attn"], hn, comp_gate,
@@ -197,8 +191,10 @@ def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
             cfg, q, k_new, v_new, self_info, q_info,
             mem_kv=(xs["mk"], xs["mv"]) if mem is not None else None,
             mem_valid=mem_valid,
-            cache_kv=(ck_f, cv_f) if cache is not None else None,
-            cache_len=cache.length if cache is not None else None, impl=impl)
+            cache_kv=(cst["ck"], cst["cv"]) if cache is not None else None,
+            cache_len=cache.length if cache is not None else None,
+            cache_scales=(cst["ks"], cst["vs"]) if quant else None,
+            cache_layer=li if cache is not None else None, impl=impl)
         h = h + A.out_project(cfg, lp["attn"], o, comp_gate)
         if cross is not None:
             xk, xv = xs["cross"]
@@ -211,60 +207,48 @@ def _attn_stack_pass(params, cfg: ModelConfig, x, positions, *,
             h = h + MOE.apply_moe(cfg, lp["moe"], hn, dist)
         else:
             h = h + L.apply_mlp(cfg, lp["mlp"], hn)
-        outs = {}
         if write_to_cache:
+            at = cache.length
             if quant:
                 qk, sk = quantize_kv(k_new)
                 qv, sv = quantize_kv(v_new)
-                nk, nv = _write_cache(ck, cv, qk, qv, cache.length,
-                                      valid_len)
-                if valid_len is not None:
-                    nks = M.ragged_block_write(xs["ks"], sk, cache.length,
-                                               valid_len, axis=1)
-                    nvs = M.ragged_block_write(xs["vs"], sv, cache.length,
-                                               valid_len, axis=1)
-                else:
-                    nks = jax.lax.dynamic_update_slice_in_dim(
-                        xs["ks"], sk.astype(xs["ks"].dtype), cache.length, 1)
-                    nvs = jax.lax.dynamic_update_slice_in_dim(
-                        xs["vs"], sv.astype(xs["vs"].dtype), cache.length, 1)
-                outs["cache"] = (nk, nv, nks, nvs)
+                cst = {"ck": M.layer_window_write(cst["ck"], qk, li, at,
+                                                 valid_len),
+                       "cv": M.layer_window_write(cst["cv"], qv, li, at,
+                                                 valid_len),
+                       "ks": M.layer_window_write(cst["ks"], sk, li, at,
+                                                 valid_len),
+                       "vs": M.layer_window_write(cst["vs"], sv, li, at,
+                                                 valid_len)}
             else:
-                nk, nv = _write_cache(ck, cv, k_new, v_new, cache.length,
-                                      valid_len)
-                outs["cache"] = (nk, nv)
+                cst = {"ck": M.layer_window_write(cst["ck"], k_new, li, at,
+                                                 valid_len),
+                       "cv": M.layer_window_write(cst["cv"], v_new, li, at,
+                                                 valid_len)}
+        outs = {}
         if collect_comp is not None:
-            idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0]
-            outs["comp"] = (k_new[:, idx], v_new[:, idx])
-        return h, outs
+            outs["comp"] = (k_new[:, comp_idx], v_new[:, comp_idx])
+        return (h, cst), outs
 
-    xs = {"lp": params["layers"]}
+    Ld = jax.tree.leaves(params["layers"])[0].shape[0]
+    xs = {"lp": params["layers"], "li": jnp.arange(Ld, dtype=jnp.int32)}
     if mem is not None:
         xs["mk"], xs["mv"] = mem.k, mem.v
-    if cache is not None:
-        xs["ck"], xs["cv"] = cache.k, cache.v
-        if quant:
-            xs["ks"], xs["vs"] = cache.k_scale, cache.v_scale
-    else:
-        Ld = jax.tree.leaves(params["layers"])[0].shape[0]
-        xs["ck"] = jnp.zeros((Ld, x.shape[0], 0, cfg.n_kv_heads, cfg.hd),
-                             cfg.cdtype)
-        xs["cv"] = xs["ck"]
     if cross is not None:
         xs["cross"] = cross
-    x, outs = scan_layers(cfg.unroll_layers, body, x, xs)
+    cst = {}
+    if cache is not None:
+        cst = {"ck": cache.k, "cv": cache.v}
+        if quant:
+            cst["ks"], cst["vs"] = cache.k_scale, cache.v_scale
+    (x, cst), outs = scan_layers(cfg.unroll_layers, body, (x, cst), xs)
 
     new_cache = cache
     if write_to_cache and cache is not None:
         adv = x.shape[1] if valid_len is None else valid_len
-        if quant:
-            nk, nv, nks, nvs = outs["cache"]
-            new_cache = KVCache(k=nk, v=nv, length=cache.length + adv,
-                                k_scale=nks, v_scale=nvs)
-        else:
-            nk, nv = outs["cache"]
-            new_cache = KVCache(k=nk, v=nv,
-                                length=cache.length + adv)
+        new_cache = KVCache(k=cst["ck"], v=cst["cv"],
+                            length=cache.length + adv,
+                            k_scale=cst.get("ks"), v_scale=cst.get("vs"))
     comp_kv = outs.get("comp") if collect_comp is not None else None
     return x, new_cache, comp_kv
 
@@ -289,7 +273,7 @@ def _ssm_stack_pass(params, cfg: ModelConfig, x, state: SSMState,
 
 def _hybrid_pass(params, cfg: ModelConfig, x, positions, *, comp_gate,
                  q_info, self_info, state: OnlineState, write_to_cache,
-                 collect_comp, dist, decode: bool):
+                 collect_comp, dist, decode: bool, impl=None):
     """Zamba2: grouped mamba scans + shared attention sites with CCM."""
     n_groups, g, rem = T._hybrid_sites(cfg)
     stacked = params["layers"]
@@ -302,6 +286,8 @@ def _hybrid_pass(params, cfg: ModelConfig, x, positions, *, comp_gate,
     sa = params["shared_attn"]
     cache, mem = state.cache, state.mem
     mem_valid = mem.valid_len(cfg.ccm.comp_len) if mem is not None else None
+    comp_idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0] \
+        if collect_comp is not None else None
 
     new_states, new_ck, new_cv, comp_ks, comp_vs = [], [], [], [], []
     for gi in range(n_groups):
@@ -320,7 +306,7 @@ def _hybrid_pass(params, cfg: ModelConfig, x, positions, *, comp_gate,
             mem_kv=(mem.k[gi], mem.v[gi]) if mem is not None else None,
             mem_valid=mem_valid,
             cache_kv=(cache.k[gi], cache.v[gi]) if cache is not None else None,
-            cache_len=cache.length if cache is not None else None)
+            cache_len=cache.length if cache is not None else None, impl=impl)
         x = x + A.out_project(cfg, sa["attn"], o, comp_gate)
         hn = L.apply_norm(cfg, sa["ln2"], x)
         x = x + L.apply_mlp(cfg, sa["mlp"], hn)
@@ -329,8 +315,8 @@ def _hybrid_pass(params, cfg: ModelConfig, x, positions, *, comp_gate,
                                   cache.length)
             new_ck.append(nk); new_cv.append(nv)
         if collect_comp is not None:
-            idx = jnp.nonzero(collect_comp, size=cfg.ccm.comp_len)[0]
-            comp_ks.append(k_new[:, idx]); comp_vs.append(v_new[:, idx])
+            comp_ks.append(k_new[:, comp_idx])
+            comp_vs.append(v_new[:, comp_idx])
     if rem:
         x, nst = _ssm_stack_pass(params={"layers": tail}, cfg=cfg, x=x,
                                  state=SSMState(*st_tail), decode=decode)
@@ -481,7 +467,7 @@ def prefill(params, cfg: ModelConfig, state: OnlineState,
         x, new_cache, new_ssm, _ = _hybrid_pass(
             params, cfg, x, positions, comp_gate=None, q_info=q_info,
             self_info=self_info, state=state, write_to_cache=True,
-            collect_comp=None, dist=dist, decode=False)
+            collect_comp=None, dist=dist, decode=False, impl=impl)
         logits = T.lm_logits(params, cfg, x if full_logits else x[:, -1:])
         return logits, state._replace(cache=new_cache, ssm=new_ssm,
                                       pos=state.pos + S)
@@ -494,8 +480,12 @@ def prefill(params, cfg: ModelConfig, state: OnlineState,
 
 
 def decode_step(params, cfg: ModelConfig, state: OnlineState,
-                tokens: jnp.ndarray, dist: Optional[DistContext] = None):
-    """One-token decode attending [Mem, cache, self]. tokens (B, 1)."""
+                tokens: jnp.ndarray, dist: Optional[DistContext] = None,
+                impl: Optional[str] = None):
+    """One-token decode attending [Mem, cache, self]. tokens (B, 1).
+
+    ``impl`` overrides ``cfg.attn_impl`` for the attend (e.g. 'concat'
+    to benchmark the materialized-concat baseline)."""
     B, S = tokens.shape
     positions = state.pos + jnp.arange(S)
     x = _embed_block(cfg, params, tokens, positions)
@@ -513,14 +503,14 @@ def decode_step(params, cfg: ModelConfig, state: OnlineState,
         x, new_cache, new_ssm, _ = _hybrid_pass(
             params, cfg, x, positions, comp_gate=None, q_info=q_info,
             self_info=self_info, state=state, write_to_cache=True,
-            collect_comp=None, dist=dist, decode=True)
+            collect_comp=None, dist=dist, decode=True, impl=impl)
         logits = T.lm_logits(params, cfg, x)
         return logits, state._replace(cache=new_cache, ssm=new_ssm,
                                       pos=state.pos + S)
     x, new_cache, _ = _attn_stack_pass(
         params, cfg, x, positions, comp_gate=None, q_info=q_info,
         self_info=self_info, state=state, write_to_cache=True,
-        collect_comp=None, dist=dist)
+        collect_comp=None, dist=dist, impl=impl)
     logits = T.lm_logits(params, cfg, x)
     return logits, state._replace(cache=new_cache, pos=state.pos + S)
 
@@ -543,14 +533,15 @@ def encode_cross(params, cfg: ModelConfig, frames: jnp.ndarray):
 def generate(params, cfg: ModelConfig, state: OnlineState,
              prompt: jnp.ndarray, max_new: int,
              dist: Optional[DistContext] = None,
-             temperature: float = 0.0, key: Optional[jax.Array] = None):
+             temperature: float = 0.0, key: Optional[jax.Array] = None,
+             impl: Optional[str] = None):
     """Greedy/temperature sampling loop (lax.scan over decode steps)."""
-    logits, state = prefill(params, cfg, state, prompt, dist)
+    logits, state = prefill(params, cfg, state, prompt, dist, impl=impl)
     first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
     def step(carry, i):
         st, tok, k = carry
-        lg, st = decode_step(params, cfg, st, tok[:, None], dist)
+        lg, st = decode_step(params, cfg, st, tok[:, None], dist, impl=impl)
         lg = lg[:, -1]
         if temperature > 0:
             k, sub = jax.random.split(k)

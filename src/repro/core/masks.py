@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -212,6 +213,53 @@ def lane_valid(length: int, valid_len: jnp.ndarray,
     return v
 
 
+def ragged_window_write(buf: jnp.ndarray, blk: jnp.ndarray,
+                        starts, valid_len: jnp.ndarray,
+                        axis: int) -> jnp.ndarray:
+    """Write ``blk``'s first ``valid_len`` rows (along ``axis``) into
+    ``buf`` at the index tuple ``starts``, touching only a block-sized
+    window — O(block) traffic, never O(buf).
+
+    Semantics match :func:`ragged_block_write`: rows past ``valid_len``
+    are frozen bit-exactly and a write overhanging the buffer end keeps
+    only the rows that fit (no ``dynamic_update_slice`` clamp-shift —
+    the window is clamped, then pre-``start`` rows are re-blended from
+    the buffer).  ``starts`` addresses every ``buf`` dim, e.g.
+    ``(layer, 0, at, 0, 0)`` for a stacked (L, B, S, H, D) cache with
+    ``axis=2`` — the scanned-layer write path of the segmented runtime.
+    """
+    n, s = buf.shape[axis], blk.shape[axis]
+    at = jnp.asarray(starts[axis], jnp.int32)
+    cl = jnp.clip(at, 0, max(n - s, 0))
+    idx = [jnp.asarray(i, jnp.int32) for i in starts]
+    idx[axis] = cl
+    cur = jax.lax.dynamic_slice(buf, idx, blk.shape)
+    pos = cl + jnp.arange(s)                 # global row ids of the window
+    src = jnp.clip(pos - at, 0, s - 1)
+    moved = jnp.take(blk.astype(buf.dtype), src, axis=axis)
+    keep = (pos >= at) & (pos < at + valid_len)
+    shape = [1] * buf.ndim
+    shape[axis] = s
+    blended = jnp.where(keep.reshape(shape), moved, cur)
+    return jax.lax.dynamic_update_slice(buf, blended, idx)
+
+
+def layer_window_write(buf: jnp.ndarray, blk: jnp.ndarray, layer,
+                       at, valid_len=None) -> jnp.ndarray:
+    """Append ``blk`` (B, s, ...) into layer ``layer`` of a stacked state
+    array (L, B, S, ...) at row ``at``, touching only a block-sized
+    window — the scanned layer body neither slices nor re-stacks its
+    layer's full state.  ``valid_len`` freezes pad rows bit-exactly
+    (ragged lanes); without it the write clamps at the buffer end like
+    ``dynamic_update_slice``."""
+    starts = (layer, 0, at) + (0,) * (buf.ndim - 3)
+    blk = blk[None].astype(buf.dtype)
+    if valid_len is not None:
+        return ragged_window_write(buf, blk, starts, valid_len, axis=2)
+    return jax.lax.dynamic_update_slice(
+        buf, blk, [jnp.asarray(i, jnp.int32) for i in starts])
+
+
 def ragged_block_write(buf: jnp.ndarray, blk: jnp.ndarray,
                        start: jnp.ndarray, valid_len: jnp.ndarray,
                        axis: int) -> jnp.ndarray:
@@ -222,13 +270,19 @@ def ragged_block_write(buf: jnp.ndarray, blk: jnp.ndarray,
     of an over-long block are never written, and (unlike d_u_s) the write
     cannot clamp-shift when ``start + blk_len`` overhangs the buffer —
     so a lane padded into a larger token bucket leaves state bit-identical
-    to running the request unpadded.
+    to running the request unpadded.  Touches a block-sized window only
+    (see :func:`ragged_window_write`); a block as large as the buffer
+    falls back to the full-width blend.
     """
     n, s = buf.shape[axis], blk.shape[axis]
-    pos = jnp.arange(n)
-    src = jnp.clip(pos - start, 0, s - 1)
-    moved = jnp.take(blk.astype(buf.dtype), src, axis=axis)
-    keep = (pos >= start) & (pos < start + valid_len)
-    shape = [1] * buf.ndim
-    shape[axis] = n
-    return jnp.where(keep.reshape(shape), moved, buf)
+    if s >= n:
+        pos = jnp.arange(n)
+        src = jnp.clip(pos - start, 0, s - 1)
+        moved = jnp.take(blk.astype(buf.dtype), src, axis=axis)
+        keep = (pos >= start) & (pos < start + valid_len)
+        shape = [1] * buf.ndim
+        shape[axis] = n
+        return jnp.where(keep.reshape(shape), moved, buf)
+    starts = [0] * buf.ndim
+    starts[axis] = start
+    return ragged_window_write(buf, blk, starts, valid_len, axis)

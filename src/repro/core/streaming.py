@@ -57,10 +57,13 @@ def init_stream_state(cfg: ModelConfig, batch: int) -> StreamState:
 
 def compress_from_kv(params, cfg: ModelConfig, mem: MemState,
                      blk_k: jnp.ndarray, blk_v: jnp.ndarray,
-                     pos0: jnp.ndarray) -> MemState:
+                     pos0: jnp.ndarray,
+                     impl: Optional[str] = None) -> MemState:
     """Run m <COMP> tokens through the stack attending [Mem, block KV].
 
     blk_k/blk_v: (L, B, cc, Hkv, hd) — the KV of the tokens being evicted.
+    Memory and block KV are attended as in-place segments (no per-layer
+    concatenation of KV or metadata).
     """
     m = cfg.ccm.comp_len
     B = blk_k.shape[1]
@@ -80,15 +83,10 @@ def compress_from_kv(params, cfg: ModelConfig, mem: MemState,
         q, k_new, v_new = A.qkv_project(
             cfg, lp["attn"], hn, gate,
             positions if cfg.pos_embed == "rope" else None)
-        Mx = mk.shape[1]
-        blk_info = A.KeyInfo(idx=jnp.full((bk.shape[1],), -1, jnp.int32),
-                             seg=jnp.zeros((bk.shape[1],), jnp.int32),
-                             comp=jnp.ones((bk.shape[1],), bool))
-        mem_info = A.mem_key_info(Mx, valid=jnp.arange(Mx) < mem_valid)
-        info = A.concat_info(A.concat_info(mem_info, blk_info), self_info)
-        kk = jnp.concatenate([mk, bk, k_new], axis=1)
-        vv = jnp.concatenate([mv, bv, v_new], axis=1)
-        o = A.attend(cfg, q, kk, vv, self_info, info)
+        segs = [A.KVSegment(k=mk, v=mv, length=mem_valid),
+                A.KVSegment(k=bk, v=bv),            # evicted block: fully valid
+                A.KVSegment(k=k_new, v=v_new, info=self_info)]
+        o = A.attend_segments(cfg, q, segs, self_info, impl=impl)
         h = h + A.out_project(cfg, lp["attn"], o, gate)
         hn = L.apply_norm(cfg, lp["ln2"], h)
         if "moe" in lp:
@@ -113,7 +111,8 @@ def compress_from_kv(params, cfg: ModelConfig, mem: MemState,
 def stream_step(params, cfg: ModelConfig, st: StreamState,
                 chunk_tokens: jnp.ndarray,
                 ccm_on: bool = True,
-                valid_len=None) -> Tuple[jnp.ndarray, StreamState]:
+                valid_len=None,
+                impl: Optional[str] = None) -> Tuple[jnp.ndarray, StreamState]:
     """Process ``c`` new tokens: maybe compress+evict, then prefill into the
     window attending [Mem, sink+window, self]. Returns per-token logits.
 
@@ -151,7 +150,7 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
             blk_k = jax.lax.dynamic_slice_in_dim(s.win_k, sink, cc, axis=2)
             blk_v = jax.lax.dynamic_slice_in_dim(s.win_v, sink, cc, axis=2)
             new_mem = compress_from_kv(params, cfg, s.mem, blk_k, blk_v,
-                                       s.pos)
+                                       s.pos, impl=impl)
         else:
             new_mem = s.mem
         # shift [sink+cc, W) left by cc
@@ -177,41 +176,38 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
                           else M.lane_valid(c, vl))
     mem_valid = st.mem.valid_len(cfg.ccm.comp_len)
 
-    def body(h, xs):
-        lp, wk, wv, mk, mv = xs
+    # The stacked window rides the scan CARRY: the attend slices k-blocks
+    # straight out of layer li (KVSegment.layer) and the write touches a
+    # block-sized window — window work scales with win_len rounded to a
+    # block, not with W, and no per-layer slice/stack copies remain.
+    def body(carry, xs):
+        h, wk, wv = carry
+        lp, li, mk, mv = xs
         hn = L.apply_norm(cfg, lp["ln1"], h)
         q, k_new, v_new = A.qkv_project(
             cfg, lp["attn"], hn, None,
             positions if cfg.pos_embed == "rope" else None)
-        win_info = A.KeyInfo(idx=jnp.full((W,), -1, jnp.int32),
-                             seg=jnp.zeros((W,), jnp.int32),
-                             comp=jnp.ones((W,), bool),
-                             valid=jnp.arange(W) < st.win_len)
-        mem_info = A.mem_key_info(mk.shape[1],
-                                  valid=jnp.arange(mk.shape[1]) < mem_valid)
-        info = A.concat_info(A.concat_info(mem_info, win_info), self_info)
-        kk = jnp.concatenate([mk, wk, k_new], axis=1)
-        vv = jnp.concatenate([mv, wv, v_new], axis=1)
-        o = A.attend(cfg, q, kk, vv, self_info, info)
+        segs = [A.KVSegment(k=mk, v=mv, length=mem_valid),
+                A.KVSegment(k=wk, v=wv, length=st.win_len, layer=li),
+                A.KVSegment(k=k_new, v=v_new, info=self_info)]
+        o = A.attend_segments(cfg, q, segs, self_info, impl=impl)
         h = h + A.out_project(cfg, lp["attn"], o, None)
         hn = L.apply_norm(cfg, lp["ln2"], h)
         if "moe" in lp:
             h = h + MOE.apply_moe(cfg, lp["moe"], hn, None)
         else:
             h = h + L.apply_mlp(cfg, lp["mlp"], hn)
-        if valid_len is None:
-            nwk = jax.lax.dynamic_update_slice_in_dim(
-                wk, k_new.astype(wk.dtype), st.win_len, axis=1)
-            nwv = jax.lax.dynamic_update_slice_in_dim(
-                wv, v_new.astype(wv.dtype), st.win_len, axis=1)
-        else:
-            nwk = M.ragged_block_write(wk, k_new, st.win_len, vl, axis=1)
-            nwv = M.ragged_block_write(wv, v_new, st.win_len, vl, axis=1)
-        return h, (nwk, nwv)
+        nwk = M.layer_window_write(wk, k_new, li, st.win_len,
+                                  None if valid_len is None else vl)
+        nwv = M.layer_window_write(wv, v_new, li, st.win_len,
+                                  None if valid_len is None else vl)
+        return (h, nwk, nwv), None
 
-    x, (nk, nv) = scan_layers(
-        cfg.unroll_layers, body, x,
-        (params["layers"], st.win_k, st.win_v, st.mem.k, st.mem.v))
+    Ld = st.win_k.shape[0]
+    (x, nk, nv), _ = scan_layers(
+        cfg.unroll_layers, body, (x, st.win_k, st.win_v),
+        (params["layers"], jnp.arange(Ld, dtype=jnp.int32),
+         st.mem.k, st.mem.v))
     logits = T.lm_logits(params, cfg, x)
     st = StreamState(win_k=nk, win_v=nv, win_len=st.win_len + vl,
                      mem=st.mem, pos=st.pos + vl)

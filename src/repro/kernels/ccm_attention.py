@@ -18,6 +18,7 @@ running-softmax state in VMEM scratch — the canonical TPU flash pattern.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,11 +85,16 @@ def _kernel(qidx_ref, qseg_ref, kidx_ref, kseg_ref, kcomp_ref, kval_ref,
 
 def ccm_flash_attention(q, k, v, q_idx, q_seg, k_idx, k_seg, k_comp, k_valid,
                         scale: float, block_q: int = 128, block_k: int = 128,
-                        interpret: bool = True):
+                        interpret: Optional[bool] = None):
     """q (B,Hq,Sq,D); k/v (B,Hkv,Sk,D); metadata i32 (Sq,)/(Sk,).
 
     Sq/Sk must be multiples of block_q/block_k (ops.py pads).
+    ``interpret=None`` backend-selects like ops.py: compiled on TPU,
+    Pallas interpreter elsewhere — direct callers no longer silently run
+    the interpreter on TPU.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, Hq, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     G = Hq // Hkv

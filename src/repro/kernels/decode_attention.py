@@ -1,0 +1,265 @@
+"""Fused segmented decode attention — Pallas TPU kernel.
+
+A small q block attends an ordered list of KV *segments* —
+[mem | cache(:length) | self] — each read IN PLACE from its own refs.
+Nothing is ever concatenated: the grid's sequential k dimension walks the
+segments' k-blocks back to back and a running softmax (m, l, acc) in VMEM
+scratch combines them, exactly like flash-decoding's split-softmax merge
+(Infini-attention fuses compressive memory + local attention in the same
+two-segment form; this kernel generalizes to any static segment list).
+
+Per-segment valid-prefix lengths arrive via scalar prefetch and gate a
+tile-level skip: a k-block whose start lies past ``length`` costs nothing,
+so decode work scales with ``cache.length`` rounded up to ``block_k`` —
+not with the cache's allocated capacity.  int8 segments are dequantized
+tile-wise in-kernel from their ``k_scale``/``v_scale`` refs (the fp
+full-cache dequant copy of the concat path disappears).
+
+Layouts are the model's native (B, S, H, D) — segments are consumed where
+they live; no per-step transpose of a large cache.  Block shapes are
+(1, bk, 1, D), i.e. strided row DMA per head; revisit sublane packing if
+a real-TPU profile shows the DMA bound (this container validates via
+interpret).
+
+Mask predicate per (q, k), identical to models.attention.mask_from_info:
+  causal AND (same-segment OR key-is-<COMP>) AND key-valid AND pos<length
+with memory-like segments (no metadata refs) reducing to pos < length.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import pad_axis as _pad_axis
+
+NEG_INF = -1e30
+
+
+class SegDesc(NamedTuple):
+    """Static per-segment layout inside the fused grid."""
+    off: int          # first grid index along the k dimension
+    nk: int           # number of k-blocks
+    bk: int           # k-block width
+    quantized: bool   # int8 k/v with fp32 scale refs
+    has_info: bool    # per-token idx/seg/comp/valid metadata refs follow
+    layered: bool     # k/v carry a leading layer axis, indexed by the
+                      # scalar-prefetched layer id (stacked-state reads)
+    n_refs: int       # tensor+meta refs this segment contributes
+
+
+def _desc(off: int, S: int, bk: int, quantized: bool, has_info: bool,
+          layered: bool) -> SegDesc:
+    nk = pl.cdiv(S, bk)
+    n = 2 + (2 if quantized else 0) + (4 if has_info else 0)
+    return SegDesc(off, nk, bk, quantized, has_info, layered, n)
+
+
+def _kernel(descs, scale, nk_total,
+            lens_ref, qidx_ref, qseg_ref, q_ref, *rest):
+    n_in = sum(d.n_refs for d in descs)
+    o_ref = rest[n_in]
+    m_ref, l_ref, acc_ref = rest[n_in + 1:]
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ptr = 0
+    for si, d in enumerate(descs):
+        refs = rest[ptr:ptr + d.n_refs]
+        ptr += d.n_refs
+        k_ref, v_ref = refs[0], refs[1]
+        ks_ref, vs_ref = (refs[2], refs[3]) if d.quantized else (None, None)
+        meta = refs[2 + (2 if d.quantized else 0):]
+        start = (ik - d.off) * d.bk
+        in_seg = (ik >= d.off) & (ik < d.off + d.nk)
+        seg_len = lens_ref[si]                      # [lens | layer ids]
+        visible = in_seg & (start < seg_len)
+        if d.has_info:
+            # tile-level CCM visibility precheck (block sparsity): skip
+            # tiles that cannot contain a visible key for any q row
+            kidx, kseg, kcomp, kval = (r[0, :] for r in meta)
+            qidx = qidx_ref[0, :]
+            qseg = qseg_ref[0, :]
+            causal_possible = jnp.min(kidx) <= jnp.max(qidx)
+            has_comp = jnp.max(kcomp * kval) > 0
+            seg_overlap = (jnp.min(kseg) <= jnp.max(qseg)) & \
+                          (jnp.max(kseg) >= jnp.min(qseg))
+            visible = visible & causal_possible & (has_comp | seg_overlap)
+
+        @pl.when(visible)
+        def _fold(d=d, k_ref=k_ref, v_ref=v_ref, ks_ref=ks_ref,
+                  vs_ref=vs_ref, meta=meta, start=start, seg_len=seg_len):
+            q = q_ref[0, :, 0, :].astype(jnp.float32)        # (bq, D)
+            if d.layered:
+                k, v = k_ref[0, 0, :, 0, :], v_ref[0, 0, :, 0, :]
+            else:
+                k, v = k_ref[0, :, 0, :], v_ref[0, :, 0, :]
+            if d.quantized:   # tile-wise in-kernel dequant
+                ks = ks_ref[0, 0, :, 0] if d.layered else ks_ref[0, :, 0]
+                vs = vs_ref[0, 0, :, 0] if d.layered else vs_ref[0, :, 0]
+                k = k.astype(jnp.float32) * ks[:, None]
+                v = v.astype(jnp.float32) * vs[:, None]
+            else:
+                k = k.astype(jnp.float32)
+                v = v.astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale  # (bq, bk)
+            pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = pos < seg_len
+            if d.has_info:
+                kidx, kseg, kcomp, kval = (r[0, :] for r in meta)
+                qidx = qidx_ref[0, :]
+                qseg = qseg_ref[0, :]
+                mask = mask & (kidx[None, :] <= qidx[:, None]) \
+                    & ((kseg[None, :] == qseg[:, None])
+                       | (kcomp[None, :] > 0)) \
+                    & (kval[None, :] > 0)
+            s = jnp.where(mask, s, NEG_INF)
+            m_prev = m_ref[:, 0]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+            acc_ref[...] = acc_ref[...] * alpha[:, None] \
+                + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+            m_ref[:, 0] = m_new
+
+    @pl.when(ik == nk_total - 1)
+    def _final():
+        l = jnp.maximum(l_ref[:, 0], 1e-37)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
+                              q_idx, q_seg, scale: float,
+                              block_q: int = 128, block_k: int = 128,
+                              interpret: Optional[bool] = None):
+    """q (B, Sq, Hq, D); each seg a dict of arrays:
+
+      k/v (B, S, Hkv, D) [int8 allowed with k_scale/v_scale (B, S, Hkv)],
+      length () int32 or None (fully valid),
+      idx/seg/comp/valid (S,) metadata or None (memory-like segment),
+      layer () int32 or None — when set, k/v (and scales) carry a
+      leading layer axis (L, B, S, ...) and blocks are DMA'd straight
+      out of that layer of the stacked state (no layer-slice copy).
+
+    Returns (B, Sq, Hq, D).  Sq and every S are padded to block multiples
+    here; hot-path callers keep capacities block-aligned so this is free.
+    The scalar-prefetch vector is [valid lengths | layer ids] — lengths
+    gate the tile-level skip, layer ids drive the layered index maps.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, Hq, D = q.shape
+    Hkv = segs[0]["k"].shape[-2]
+    G = Hq // Hkv
+    big = 2 ** 30
+
+    bq = min(block_q, max(Sq, 8))
+    qp = _pad_axis(q, bq, 1)
+    nq = qp.shape[1] // bq
+    qi = _pad_axis(jnp.asarray(q_idx, jnp.int32), bq, 0, fill=-big)
+    qs = _pad_axis(jnp.asarray(q_seg, jnp.int32), bq, 0, fill=-3)
+
+    descs: List[SegDesc] = []
+    ns = len(segs)
+    lens, layers, inputs, in_specs = [], [], [], []
+    off = 0
+    for si, s in enumerate(segs):
+        layered = s.get("layer") is not None
+        tok_ax = 2 if layered else 1
+        S = s["k"].shape[tok_ax]
+        quant = s.get("k_scale") is not None
+        has_info = s.get("idx") is not None
+        bk = min(block_k, max(S, 8))
+        d = _desc(off, S, bk, quant, has_info, layered)
+        descs.append(d)
+        off += d.nk
+        lens.append(jnp.asarray(S if s.get("length") is None
+                                else s["length"], jnp.int32))
+        layers.append(jnp.zeros((), jnp.int32) if not layered
+                      else jnp.asarray(s["layer"], jnp.int32))
+
+        def im_kv(b, h, iq, ik, lens_ref, d=d, si=si):
+            blk = jnp.clip(ik - d.off, 0, d.nk - 1)
+            if d.layered:
+                return (lens_ref[ns + si], b, blk, h // G, 0)
+            return (b, blk, h // G, 0)
+
+        def im_sc(b, h, iq, ik, lens_ref, d=d, si=si):
+            blk = jnp.clip(ik - d.off, 0, d.nk - 1)
+            if d.layered:
+                return (lens_ref[ns + si], b, blk, h // G)
+            return (b, blk, h // G)
+
+        def im_meta(b, h, iq, ik, lens_ref, d=d):
+            return (0, jnp.clip(ik - d.off, 0, d.nk - 1))
+
+        kv_block = (1, 1, bk, 1, D) if layered else (1, bk, 1, D)
+        sc_block = (1, 1, bk, 1) if layered else (1, bk, 1)
+        inputs += [_pad_axis(s["k"], bk, tok_ax),
+                   _pad_axis(s["v"], bk, tok_ax)]
+        in_specs += [pl.BlockSpec(kv_block, im_kv)] * 2
+        if quant:
+            inputs += [_pad_axis(s["k_scale"], bk, tok_ax),
+                       _pad_axis(s["v_scale"], bk, tok_ax)]
+            in_specs += [pl.BlockSpec(sc_block, im_sc)] * 2
+        if has_info:
+            valid = s.get("valid")
+            if valid is None:
+                valid = jnp.ones((S,), bool)
+            inputs += [
+                _pad_axis(jnp.asarray(s["idx"], jnp.int32), bk, 0,
+                          fill=big)[None],
+                _pad_axis(jnp.asarray(s["seg"], jnp.int32), bk, 0,
+                          fill=-2)[None],
+                _pad_axis(s["comp"].astype(jnp.int32), bk, 0)[None],
+                _pad_axis(valid.astype(jnp.int32), bk, 0)[None]]
+            in_specs += [pl.BlockSpec((1, bk), im_meta)] * 4
+
+    nk_total = off
+
+    def im_q(b, h, iq, ik, lens_ref):
+        return (b, iq, h, 0)
+
+    def im_qmeta(b, h, iq, ik, lens_ref):
+        return (0, iq)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, nq, nk_total),
+        in_specs=[pl.BlockSpec((1, bq), im_qmeta),
+                  pl.BlockSpec((1, bq), im_qmeta),
+                  pl.BlockSpec((1, bq, 1, D), im_q)] + in_specs,
+        out_specs=pl.BlockSpec((1, bq, 1, D), im_q),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)])
+    kernel = functools.partial(_kernel, tuple(descs), scale, nk_total)
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    except AttributeError:  # older jax
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        compiler_params=cparams,
+        interpret=interpret,
+    )(jnp.stack(lens + layers), qi[None], qs[None], qp, *inputs)
+    return out[:, :Sq]

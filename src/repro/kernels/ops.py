@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ccm_attention as _attn
 from repro.kernels import cond_lora as _lora
+from repro.kernels import decode_attention as _dattn
 from repro.kernels import kv_merge as _merge
 from repro.kernels import ref as _ref
 from repro.kernels import session_gather as _sess
@@ -20,14 +21,7 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_axis(x, mult, axis, fill=0):
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=fill)
+_pad_axis = _ref.pad_axis
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_q", "block_k",
@@ -56,6 +50,19 @@ def ccm_attention(q, k, v, q_info, k_info, scale: float,
         qt, kt, vt, q_idx, q_seg, k_idx, k_seg, k_comp, k_val, scale,
         block_q=block_q, block_k=block_k, interpret=interpret)
     return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+def segmented_attention(q, segs, q_idx, q_seg, scale: float,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: Optional[bool] = None):
+    """Drop-in for repro.models.attention.attend_segments (impl='pallas'):
+    q (B,Sq,Hq,D) over in-place KV segments — see
+    decode_attention.segmented_flash_attention for the seg-dict schema.
+    Not jitted here: hot paths call it from inside already-jitted steps
+    and the segment list's None-structure is part of the trace."""
+    return _dattn.segmented_flash_attention(
+        q, segs, q_idx, q_seg, scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",

@@ -9,6 +9,18 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def pad_axis(x, mult, axis, fill=0):
+    """Pad ``x`` up to a multiple of ``mult`` along ``axis`` (shared by
+    the kernel wrappers' block-alignment paths)."""
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
 def ccm_attention_ref(q, k, v, q_idx, q_seg, k_idx, k_seg, k_comp, k_valid,
                       scale: float):
     """Dense-mask flash-attention oracle.
@@ -31,6 +43,56 @@ def ccm_attention_ref(q, k, v, q_idx, q_seg, k_idx, k_seg, k_comp, k_valid,
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(q.dtype), v)
     out = jnp.where(any_valid, out, 0)
     return out.reshape(B, Hq, Sq, D)
+
+
+def segmented_attention_ref(q, segs, q_idx, q_seg, scale: float):
+    """Oracle for decode_attention.segmented_flash_attention: dense attend
+    over the EXPLICIT concatenation of the segments (the very thing the
+    kernel never materializes).
+
+    q (B, Sq, Hq, D); each seg a dict of arrays: k/v (B, S, Hkv, D)
+    [int8 with k_scale/v_scale (B, S, Hkv)], length () or None,
+    idx/seg/comp/valid (S,) metadata or None (memory-like segment:
+    idx=-1, seg=0, comp=True), layer () or None (k/v stacked with a
+    leading layer axis; that layer is attended).
+    """
+    ks, vs, idxs, sgs, cps, vls = [], [], [], [], [], []
+    for s in segs:
+        k, v = s["k"], s["v"]
+        ksc, vsc = s.get("k_scale"), s.get("v_scale")
+        if s.get("layer") is not None:
+            li = s["layer"]
+            k, v = k[li], v[li]
+            ksc = None if ksc is None else ksc[li]
+            vsc = None if vsc is None else vsc[li]
+        if ksc is not None:
+            k = k.astype(jnp.float32) * ksc[..., None]
+            v = v.astype(jnp.float32) * vsc[..., None]
+        S = k.shape[1]
+        ks.append(k.astype(q.dtype))
+        vs.append(v.astype(q.dtype))
+        if s.get("idx") is not None:
+            idxs.append(jnp.asarray(s["idx"], jnp.int32))
+            sgs.append(jnp.asarray(s["seg"], jnp.int32))
+            cps.append(jnp.asarray(s["comp"], bool))
+            valid = s["valid"] if s.get("valid") is not None \
+                else jnp.ones((S,), bool)
+        else:
+            idxs.append(jnp.full((S,), -1, jnp.int32))
+            sgs.append(jnp.zeros((S,), jnp.int32))
+            cps.append(jnp.ones((S,), bool))
+            valid = jnp.ones((S,), bool)
+        if s.get("length") is not None:
+            valid = valid & (jnp.arange(S) < s["length"])
+        vls.append(valid)
+    k = jnp.concatenate(ks, axis=1).transpose(0, 2, 1, 3)
+    v = jnp.concatenate(vs, axis=1).transpose(0, 2, 1, 3)
+    out = ccm_attention_ref(
+        q.transpose(0, 2, 1, 3), k, v,
+        jnp.asarray(q_idx, jnp.int32), jnp.asarray(q_seg, jnp.int32),
+        jnp.concatenate(idxs), jnp.concatenate(sgs),
+        jnp.concatenate(cps), jnp.concatenate(vls), scale)
+    return out.transpose(0, 2, 1, 3)
 
 
 def cond_lora_ref(x, w, a, b, gate, scale: float,

@@ -203,6 +203,279 @@ def attend(cfg: ModelConfig, q, k, v, q_info: KeyInfo, k_info: KeyInfo,
 
 
 # ---------------------------------------------------------------------------
+# segmented attention — the decode / streaming hot path
+#
+# A (usually small) q block attends an ordered list of KV segments —
+# [mem | cache(:length) | self] — each read IN PLACE from its own array.
+# No concatenated KV and no concatenated KeyInfo metadata is ever
+# materialized; a running softmax (m, l, acc) is folded across segments
+# and, inside a segment, across k-blocks.  Work on a length-bounded
+# segment scales with `length` rounded up to `cfg.attn_seg_block`
+# (blocks past the valid prefix are skipped via `lax.cond`), not with the
+# segment's allocated capacity, and int8 segments are dequantized one
+# tile at a time (never as a full-cache fp copy).
+# ---------------------------------------------------------------------------
+
+
+class KVSegment(NamedTuple):
+    """One in-place KV region consumed by :func:`attend_segments`.
+
+    k/v      : (B, S, Hkv, hd) — compute dtype, or int8 with scales.
+               With ``layer`` set, the STACKED per-layer state
+               (L, B, S, Hkv, hd): blocks are sliced straight out of it,
+               so a scanned layer body never materializes its layer's
+               cache slice (the per-layer `xs` copy of the concat era).
+    info     : per-token ``KeyInfo``; None marks a *memory-like* segment
+               whose keys are always visible (idx=-1, seg=0, comp=True).
+    length   : () int32 valid-prefix length (None = fully valid).  Blocked
+               paths skip whole k-blocks past it.
+    k_scale/v_scale : (B, S, Hkv) fp32 when k/v are int8-quantized
+               ((L, B, S, Hkv) when ``layer`` is set).
+    layer    : () int32 index into the leading layer axis, or None.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    info: Optional[KeyInfo] = None
+    length: Optional[jnp.ndarray] = None
+    k_scale: Optional[jnp.ndarray] = None
+    v_scale: Optional[jnp.ndarray] = None
+    layer: Optional[jnp.ndarray] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def n_tokens(self) -> int:
+        return self.k.shape[2 if self.layer is not None else 1]
+
+
+def _dequant(x: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return x.astype(dtype) * scale[..., None].astype(dtype)
+
+
+def _slice_rows(arr, layer, start, width, token_axis: int = 1):
+    """(B, width, ...) window of ``arr`` at ``start`` along the token
+    axis; with ``layer``, ``arr`` carries a leading layer axis and only
+    the window of that layer is ever read (no layer-slice copy)."""
+    if layer is None:
+        return jax.lax.dynamic_slice_in_dim(arr, start, width, token_axis)
+    starts = [jnp.asarray(layer, jnp.int32)] \
+        + [jnp.zeros((), jnp.int32)] * (arr.ndim - 1)
+    starts[token_axis + 1] = jnp.asarray(start, jnp.int32)
+    sizes = list(arr.shape)
+    sizes[0], sizes[token_axis + 1] = 1, width
+    return jax.lax.dynamic_slice(arr, starts, sizes)[0]
+
+
+def _seg_layer_kv(seg: KVSegment):
+    """Materialize the segment's (B, S, ...) layer view (concat baseline /
+    oracle paths only — the segmented paths slice windows instead)."""
+    if seg.layer is None:
+        return seg.k, seg.v, seg.k_scale, seg.v_scale
+    ix = functools.partial(jax.lax.dynamic_index_in_dim, index=seg.layer,
+                          axis=0, keepdims=False)
+    return (ix(seg.k), ix(seg.v),
+            None if seg.k_scale is None else ix(seg.k_scale),
+            None if seg.v_scale is None else ix(seg.v_scale))
+
+
+def segment_key_info(seg: KVSegment) -> KeyInfo:
+    """Explicit KeyInfo for one segment (concat baseline / oracles only —
+    the segmented paths never materialize this)."""
+    S = seg.n_tokens
+    if seg.info is not None:
+        info = seg.info
+    else:
+        info = KeyInfo(idx=jnp.full((S,), -1, jnp.int32),
+                       seg=jnp.zeros((S,), jnp.int32),
+                       comp=jnp.ones((S,), bool))
+    if seg.length is not None:
+        lv = jnp.arange(S) < seg.length
+        info = info._replace(
+            valid=lv if info.valid is None else info.valid & lv)
+    return info
+
+
+def _fold_block(state, qg, kb, vb, mask, scale):
+    """Online-softmax update of (m, l, acc) with one k-block.
+
+    qg (B,Sq,Hkv,G,D); kb/vb (B,bk,Hkv,D); mask (Sq,bk)/(1,bk)/None.
+    Masked columns contribute exactly 0 to l/acc, so padding a segment
+    (or a lane) leaves the statistics bit-identical.
+    """
+    m_i, l_i, acc = state
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m_i, s.max(axis=-1))
+    alpha = jnp.exp(m_i - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    if mask is not None:
+        p = jnp.where(mask[None, None, None], p, 0.0)
+    l_new = l_i * alpha + p.sum(axis=-1)
+    acc = acc * alpha[..., None] \
+        + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qg.dtype), vb
+                     ).astype(jnp.float32)
+    return (m_new, l_new, acc)
+
+
+def _fold_segment(state, qg, qidx, qseg, seg: KVSegment, scale: float,
+                  block: int):
+    """Fold one KV segment into the running softmax, k-block by k-block,
+    skipping blocks entirely past the segment's valid prefix."""
+    S = seg.n_tokens
+    info, L = seg.info, seg.length
+    dt = qg.dtype
+
+    def slice_kv(start, width, dyn):
+        kb = _slice_rows(seg.k, seg.layer, start, width)
+        vb = _slice_rows(seg.v, seg.layer, start, width)
+        if seg.quantized:           # tile-wise dequant — no full-cache copy
+            kb = _dequant(kb, _slice_rows(seg.k_scale, seg.layer, start,
+                                          width), dt)
+            vb = _dequant(vb, _slice_rows(seg.v_scale, seg.layer, start,
+                                          width), dt)
+        return kb.astype(dt), vb.astype(dt)
+
+    def block_mask(start, width, dyn):
+        def sl(a):
+            return jax.lax.dynamic_slice_in_dim(a, start, width, 0) \
+                if dyn else a[start:start + width]
+        mask = None
+        if info is not None:
+            mask = (sl(info.idx)[None, :] <= qidx[:, None]) \
+                & ((sl(info.seg)[None, :] == qseg[:, None])
+                   | sl(info.comp)[None, :])
+            if info.valid is not None:
+                mask = mask & sl(info.valid)[None, :]
+        if L is not None:
+            lv = ((start + jnp.arange(width)) < L)[None, :]
+            mask = lv if mask is None else mask & lv
+        return mask
+
+    def do_block(st, start, width, dyn):
+        kb, vb = slice_kv(start, width, dyn)
+        return _fold_block(st, qg, kb, vb, block_mask(start, width, dyn),
+                           scale)
+
+    bs = min(S, block)
+    nfull, tail = divmod(S, bs)
+    if nfull == 1 and tail == 0:
+        return do_block(state, 0, bs, dyn=False)
+    if nfull:
+        starts = jnp.arange(nfull, dtype=jnp.int32) * bs
+
+        def body(carry, start):
+            if L is None:
+                return do_block(carry, start, bs, dyn=True), None
+            return jax.lax.cond(start < L,
+                                lambda c: do_block(c, start, bs, dyn=True),
+                                lambda c: c, carry), None
+
+        state, _ = jax.lax.scan(body, state, starts)
+    if tail:
+        t0 = nfull * bs
+        if L is None:
+            state = do_block(state, t0, tail, dyn=False)
+        else:
+            state = jax.lax.cond(
+                t0 < L, lambda c: do_block(c, t0, tail, dyn=False),
+                lambda c: c, state)
+    return state
+
+
+def _attend_segments_online(cfg: ModelConfig, q, segments, q_info: KeyInfo,
+                            scale: float) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    Hkv = segments[0].k.shape[-2]
+    G = Hq // Hkv
+
+    def one_q_block(qblk, qidx, qseg):
+        qc = qblk.shape[1]
+        qg = qblk.reshape(B, qc, Hkv, G, D)
+        state = (jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32),
+                 jnp.zeros((B, Hkv, G, qc), jnp.float32),
+                 jnp.zeros((B, Hkv, G, qc, D), jnp.float32))
+        for seg in segments:
+            blk = cfg.attn_seg_block if seg.length is not None \
+                else cfg.attn_chunk
+            state = _fold_segment(state, qg, qidx, qseg, seg, scale, blk)
+        m_f, l_f, acc = state
+        out = acc / jnp.maximum(l_f, 1e-37)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, qc, Hq, D
+                                                    ).astype(qblk.dtype)
+
+    q_chunk = min(cfg.attn_chunk, 512)
+    if Sq <= q_chunk:
+        return one_q_block(q, q_info.idx, q_info.seg)
+    # large-q (prefill) path: fold per q-block so the peak per-step
+    # buffer stays O(q_chunk * k_block), mirroring attend_chunked
+    qp, _ = _pad_to(q, q_chunk, axis=1)
+    qi, _ = _pad_to(q_info.idx, q_chunk, axis=0, fill=-(10 ** 9))
+    qs, _ = _pad_to(q_info.seg, q_chunk, axis=0, fill=-3)
+    nq = qp.shape[1] // q_chunk
+
+    def body(carry, xs):
+        qblk, qidx, qseg = xs
+        return carry, one_q_block(qblk, qidx, qseg)
+
+    _, outs = jax.lax.scan(
+        body, (),
+        (qp.reshape(B, nq, q_chunk, Hq, D).swapaxes(0, 1),
+         qi.reshape(nq, q_chunk), qs.reshape(nq, q_chunk)))
+    return outs.swapaxes(0, 1).reshape(B, nq * q_chunk, Hq, D)[:, :Sq]
+
+
+def attend_segments(cfg: ModelConfig, q, segments, q_info: KeyInfo,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    """q (B,Sq,Hq,D) over ordered KV ``segments`` read in place.
+
+    impl: None -> ``cfg.attn_impl``.  'pallas' -> fused segmented kernel
+    (repro.kernels.decode_attention); 'concat' -> materialize the full
+    [seg|...|seg] concatenation and run :func:`attend` (the pre-segmented
+    baseline, kept for benchmarks/oracles); 'dense'/'chunked' -> the
+    pure-jnp blocked online-softmax above.
+    """
+    scale = 1.0 / (cfg.hd ** 0.5)
+    segments = [s for s in segments if s.n_tokens]
+    impl = impl or cfg.attn_impl
+    if impl == "concat":
+        ks, vs, infos = [], [], []
+        for s in segments:
+            k, v, ksc, vsc = _seg_layer_kv(s)
+            if ksc is not None:
+                k = _dequant(k, ksc, q.dtype)
+                v = _dequant(v, vsc, q.dtype)
+            ks.append(k)
+            vs.append(v)
+            infos.append(segment_key_info(s))
+        info = functools.reduce(concat_info, infos)
+        # impl=None -> cfg.attn_impl, exactly what the pre-segmented
+        # runtime did after materializing the concatenation (attend()
+        # treats an unknown impl like 'concat' itself as dense)
+        return attend(cfg, q, jnp.concatenate(ks, axis=1),
+                      jnp.concatenate(vs, axis=1), q_info, info, impl=None)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.segmented_attention(
+            q, [_raw_segment(s) for s in segments], q_info.idx, q_info.seg,
+            scale)
+    return _attend_segments_online(cfg, q, segments, q_info, scale)
+
+
+def _raw_segment(seg: KVSegment) -> Dict:
+    """KVSegment -> plain-array dict (the kernels/ref layer is model-free)."""
+    return {"k": seg.k, "v": seg.v,
+            "k_scale": seg.k_scale, "v_scale": seg.v_scale,
+            "length": seg.length, "layer": seg.layer,
+            "idx": seg.info.idx if seg.info is not None else None,
+            "seg": seg.info.seg if seg.info is not None else None,
+            "comp": seg.info.comp if seg.info is not None else None,
+            "valid": seg.info.valid if seg.info is not None else None}
+
+
+# ---------------------------------------------------------------------------
 # attention block parameters & projections (with conditional LoRA)
 # ---------------------------------------------------------------------------
 

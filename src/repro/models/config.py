@@ -102,9 +102,16 @@ class ModelConfig:
     # --- serving cache bound: 0 = shape-specified full cache; >0 = CCM
     #     compressed serving (bounded window, paper Eq. 3) ---
     serve_cache_len: int = 0
-    # --- attention impl: dense | chunked | pallas (TPU only) ---
+    # --- attention impl: dense | chunked | pallas (TPU only).  The
+    #     segmented decode/streaming hot path (attend_segments) also
+    #     accepts 'concat' as an explicit baseline: materialize the
+    #     [mem|cache|self] concatenation like the pre-segmented runtime ---
     attn_impl: str = "dense"
     attn_chunk: int = 1024       # k-block for the chunked/online-softmax path
+    attn_seg_block: int = 512    # k-block for length-bounded KV segments
+                                 # (decode work rounds cache.length up to it;
+                                 # 512 balances skip granularity vs per-block
+                                 # loop overhead on CPU — see decode_bench)
 
     # ------------------------------------------------------------------
     @property

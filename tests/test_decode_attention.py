@@ -1,0 +1,265 @@
+"""Segmented attention subsystem: segmented-vs-dense equivalence across
+layouts (mem only / mem+cache / mem+cache+self, ragged lanes, GQA), the
+Pallas kernel vs the concat oracle, in-kernel int8 dequant vs the
+full-dequant path, and the O(block) ragged window write."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inference as I
+from repro.core import masks as M
+from repro.kernels import ops, ref
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.models.config import CCMConfig, ModelConfig
+
+
+def _cfg(Hq=4, Hkv=2, D=16, **kw):
+    return ModelConfig(name="t", d_model=Hq * D, n_heads=Hq, n_kv_heads=Hkv,
+                       head_dim=D, compute_dtype="float32", **kw)
+
+
+def _kv(key, B, S, Hkv, D):
+    return (jax.random.normal(key, (B, S, Hkv, D)),
+            jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D)))
+
+
+def _quantize(k, v):
+    """Production int8 layout (the helper under test, not a re-impl)."""
+    k8, ks = I.quantize_kv(k)
+    v8, vs = I.quantize_kv(v)
+    return k8, v8, ks, vs
+
+
+def _self_info(Sq, valid=None):
+    return A.KeyInfo(idx=jnp.arange(Sq, dtype=jnp.int32),
+                     seg=jnp.ones((Sq,), jnp.int32),
+                     comp=jnp.zeros((Sq,), bool), valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# attend_segments (jnp online-softmax) == materialized-concat baseline
+# ---------------------------------------------------------------------------
+
+LAYOUTS = [
+    # (Hq, Hkv, mem_S, mem_len, cache_S, cache_len, Sq)
+    (4, 2, 0, 0, 0, 0, 9),          # self only
+    (4, 2, 16, 10, 0, 0, 9),        # mem + self, partial mem
+    (4, 2, 16, 16, 96, 40, 9),      # mem + cache + self (GQA)
+    (8, 1, 16, 2, 100, 77, 5),      # MQA, unaligned cache length
+    (4, 4, 16, 0, 64, 0, 7),        # MHA, everything empty but self
+    (4, 2, 16, 16, 64, 64, 1),      # decode shape: 1-token q, full cache
+]
+
+
+@pytest.mark.parametrize("case", LAYOUTS)
+def test_segmented_equals_concat(case):
+    Hq, Hkv, mS, mL, cS, cL, Sq = case
+    D = 16
+    cfg = _cfg(Hq, Hkv, D).replace(attn_seg_block=32)
+    key = jax.random.PRNGKey(sum(case))
+    q = jax.random.normal(key, (2, Sq, Hq, D))
+    segs = []
+    if mS:
+        mk, mv = _kv(jax.random.fold_in(key, 2), 2, mS, Hkv, D)
+        segs.append(A.KVSegment(k=mk, v=mv, length=jnp.asarray(mL)))
+    if cS:
+        ck, cv = _kv(jax.random.fold_in(key, 3), 2, cS, Hkv, D)
+        segs.append(A.KVSegment(k=ck, v=cv, length=jnp.asarray(cL)))
+    sk, sv = _kv(jax.random.fold_in(key, 4), 2, Sq, Hkv, D)
+    info = _self_info(Sq)
+    segs.append(A.KVSegment(k=sk, v=sv, info=info))
+    out = A.attend_segments(cfg, q, segs, info)
+    want = A.attend_segments(cfg, q, segs, info, impl="concat")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_segmented_ragged_lane_and_layered():
+    """Ragged self validity (mid-sequence hole, as ragged ingest produces)
+    plus a stacked-layer cache segment read via KVSegment.layer."""
+    Hq, Hkv, D, Sq, Lyr, cS = 4, 2, 16, 12, 3, 64
+    cfg = _cfg(Hq, Hkv, D).replace(attn_seg_block=32)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, Sq, Hq, D))
+    CK = jax.random.normal(jax.random.fold_in(key, 1), (Lyr, 2, cS, Hkv, D))
+    CV = jax.random.normal(jax.random.fold_in(key, 2), (Lyr, 2, cS, Hkv, D))
+    sk, sv = _kv(jax.random.fold_in(key, 3), 2, Sq, Hkv, D)
+    valid = M.lane_valid(Sq, jnp.asarray(7), tail_start=10)  # hole [7, 10)
+    info = _self_info(Sq, valid=valid)
+    for li in (0, Lyr - 1):
+        segs = [A.KVSegment(k=CK, v=CV, length=jnp.asarray(33),
+                            layer=jnp.asarray(li)),
+                A.KVSegment(k=sk, v=sv, info=info)]
+        out = A.attend_segments(cfg, q, segs, info)
+        want = A.attend_segments(cfg, q, segs, info, impl="concat")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+
+def test_segmented_large_q_chunked_path():
+    """Sq beyond the q-chunk exercises the per-q-block scan (prefill)."""
+    cfg = _cfg(4, 2, 16).replace(attn_chunk=16, attn_seg_block=32)
+    key = jax.random.PRNGKey(5)
+    Sq = 50
+    q = jax.random.normal(key, (1, Sq, 4, 16))
+    mk, mv = _kv(jax.random.fold_in(key, 1), 1, 24, 2, 16)
+    sk, sv = _kv(jax.random.fold_in(key, 2), 1, Sq, 2, 16)
+    info = _self_info(Sq)
+    segs = [A.KVSegment(k=mk, v=mv, length=jnp.asarray(13)),
+            A.KVSegment(k=sk, v=sv, info=info)]
+    out = A.attend_segments(cfg, q, segs, info)
+    want = A.attend_segments(cfg, q, segs, info, impl="concat")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret) vs the concat oracle
+# ---------------------------------------------------------------------------
+
+def test_pallas_segmented_vs_ref():
+    B, Hq, Hkv, D = 2, 4, 2, 32
+    key = jax.random.PRNGKey(0)
+    Sq, mS, cS = 40, 24, 100
+    q = jax.random.normal(key, (B, Sq, Hq, D))
+    mk, mv = _kv(jax.random.fold_in(key, 1), B, mS, Hkv, D)
+    ck, cv = _kv(jax.random.fold_in(key, 2), B, cS, Hkv, D)
+    ck8, cv8, ks, vs = _quantize(ck, cv)
+    sk, sv = _kv(jax.random.fold_in(key, 3), B, Sq, Hkv, D)
+    info = _self_info(Sq, valid=jnp.arange(Sq) < Sq - 3)
+    none4 = dict(idx=None, seg=None, comp=None, valid=None)
+    segs = [dict(k=mk, v=mv, k_scale=None, v_scale=None, layer=None,
+                 length=jnp.asarray(17), **none4),
+            dict(k=ck8, v=cv8, k_scale=ks, v_scale=vs, layer=None,
+                 length=jnp.asarray(70), **none4),
+            dict(k=sk, v=sv, k_scale=None, v_scale=None, layer=None,
+                 length=None, idx=info.idx, seg=info.seg, comp=info.comp,
+                 valid=info.valid)]
+    out = ops.segmented_attention(q, segs, info.idx, info.seg,
+                                  1 / np.sqrt(D), block_q=16, block_k=32,
+                                  interpret=True)
+    want = ref.segmented_attention_ref(q, segs, info.idx, info.seg,
+                                       1 / np.sqrt(D))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_pallas_segmented_layered_cache():
+    """Stacked-state segment: the kernel DMAs blocks of one layer via the
+    scalar-prefetched layer id."""
+    B, Hq, Hkv, D, Lyr, cS, Sq = 1, 4, 2, 32, 3, 64, 8
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (B, Sq, Hq, D))
+    CK = jax.random.normal(jax.random.fold_in(key, 1), (Lyr, B, cS, Hkv, D))
+    CV = jax.random.normal(jax.random.fold_in(key, 2), (Lyr, B, cS, Hkv, D))
+    sk, sv = _kv(jax.random.fold_in(key, 3), B, Sq, Hkv, D)
+    info = _self_info(Sq)
+    none4 = dict(idx=None, seg=None, comp=None, valid=None)
+    for li in (0, 2):
+        segs = [dict(k=CK, v=CV, k_scale=None, v_scale=None,
+                     layer=jnp.asarray(li), length=jnp.asarray(40), **none4),
+                dict(k=sk, v=sv, k_scale=None, v_scale=None, layer=None,
+                     length=None, idx=info.idx, seg=info.seg,
+                     comp=info.comp, valid=info.valid)]
+        out = ops.segmented_attention(q, segs, info.idx, info.seg,
+                                      1 / np.sqrt(D), block_q=8, block_k=16,
+                                      interpret=True)
+        want = ref.segmented_attention_ref(q, segs, info.idx, info.seg,
+                                           1 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+
+def test_pallas_segmented_layered_quantized():
+    """Layered AND int8-quantized — the exact segment the decode path
+    emits with attn_impl='pallas' on an int8 cache (stacked scales are
+    indexed by the prefetched layer id too)."""
+    B, Hq, Hkv, D, Lyr, cS, Sq = 1, 4, 2, 32, 2, 48, 8
+    key = jax.random.PRNGKey(3)
+    CK = jax.random.normal(jax.random.fold_in(key, 1), (Lyr, B, cS, Hkv, D))
+    CV = jax.random.normal(jax.random.fold_in(key, 2), (Lyr, B, cS, Hkv, D))
+    ck8, cv8, ks, vs = _quantize(CK, CV)
+    q = jax.random.normal(key, (B, Sq, Hq, D))
+    sk, sv = _kv(jax.random.fold_in(key, 3), B, Sq, Hkv, D)
+    info = _self_info(Sq)
+    none4 = dict(idx=None, seg=None, comp=None, valid=None)
+    for li in (0, 1):
+        segs = [dict(k=ck8, v=cv8, k_scale=ks, v_scale=vs,
+                     layer=jnp.asarray(li), length=jnp.asarray(30), **none4),
+                dict(k=sk, v=sv, k_scale=None, v_scale=None, layer=None,
+                     length=None, idx=info.idx, seg=info.seg,
+                     comp=info.comp, valid=info.valid)]
+        out = ops.segmented_attention(q, segs, info.idx, info.seg,
+                                      1 / np.sqrt(D), block_q=8, block_k=16,
+                                      interpret=True)
+        want = ref.segmented_attention_ref(q, segs, info.idx, info.seg,
+                                           1 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 cache decode: tile-wise dequant == full-dequant concat path
+# ---------------------------------------------------------------------------
+
+def test_int8_decode_matches_full_dequant():
+    cfg = ModelConfig(name="q8", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=128,
+                      compute_dtype="float32", kv_cache_dtype="int8",
+                      attn_seg_block=16,
+                      ccm=CCMConfig(comp_len=2, max_steps=4))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0, 128)
+    state = I.init_online_state(cfg, 2, max_cache_len=48)
+    _, state = I.prefill(params, cfg, state, toks)
+    assert state.cache.quantized and int(state.cache.length) == 20
+    lg, _ = I.decode_step(params, cfg, state, toks[:, :1])
+    # 'concat' materializes the dequantized full cache before attending —
+    # the pre-segmented int8 path
+    lg_full, _ = I.decode_step(params, cfg, state, toks[:, :1],
+                               impl="concat")
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full),
+                               atol=5e-5)
+
+
+def test_decode_ignores_cache_capacity():
+    """Same prefix in a small and a 4x larger cache decodes identically —
+    the work (and the numerics) depend on length, not capacity."""
+    cfg = ModelConfig(name="cap", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=128,
+                      compute_dtype="float32", attn_seg_block=16,
+                      ccm=CCMConfig(comp_len=2, max_steps=4))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0, 128)
+    outs = []
+    for cap in (32, 128):
+        st = I.init_online_state(cfg, 1, max_cache_len=cap)
+        _, st = I.prefill(params, cfg, st, toks)
+        lg, _ = I.decode_step(params, cfg, st, toks[:, :1])
+        outs.append(np.asarray(lg))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# O(block) ragged window write == whole-buffer oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("start,valid", [(0, 3), (5, 4), (13, 4), (14, 2),
+                                         (10, 0)])
+def test_ragged_window_write_matches_oracle(start, valid):
+    buf = jnp.arange(16 * 3, dtype=jnp.float32).reshape(16, 3)
+    blk = -jnp.ones((4, 3))
+    got = M.ragged_block_write(buf, blk, jnp.asarray(start),
+                               jnp.asarray(valid), axis=0)
+    want = ref.ragged_block_write_ref(buf, blk, start, valid, axis=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ragged_window_write_layered():
+    """The stacked-state form: only layer li's window changes."""
+    buf = jnp.zeros((3, 2, 10, 4))
+    blk = jnp.ones((1, 2, 4, 4))
+    out = M.ragged_window_write(buf, blk, (1, 0, 6, 0), jnp.asarray(2),
+                                axis=2)
+    out = np.asarray(out)
+    assert out[1, :, 6:8].all() and out[1, :, 8:].sum() == 0
+    assert out[0].sum() == 0 and out[2].sum() == 0 and out[1, :, :6].sum() == 0
