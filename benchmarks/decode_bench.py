@@ -15,7 +15,10 @@ before every attend).  This bench measures what the segmented attend
 Scenarios: greedy-decode tokens/s vs occupied cache length at a fixed
 cache capacity (serving arenas allocate Smax up front; decode cost must
 scale with *occupancy*, not capacity), an int8-cache variant (in-kernel
-tile dequant vs full-cache dequant), and the serve engine's batched
+tile dequant vs full-cache dequant), a VMAPPED-LANES scenario (a serve
+batch of sessions at mixed cache occupancies: the lane-batched
+custom_vmap route vs the legacy select-lowered vmap where every lane
+computes capacity-bounded attention), and the serve engine's batched
 query throughput.  Results are written to BENCH_decode.json (overwriting
 any previous run) — the perf trajectory accumulates as one committed
 snapshot per PR in git history, plus a smoke-run CI artifact per build.
@@ -110,6 +113,68 @@ def bench_decode(params, cfg, smax, cache_len, n_tokens, batch=1,
     return out
 
 
+def _stacked_lane_states(cfg, key, smax, lane_lens):
+    """N independent single-session states (inner batch 1) stacked
+    leaf-wise — the arena-gather layout session_vmap consumes — with a
+    different cache occupancy per lane."""
+    sts = [_filled_state(cfg, jax.random.fold_in(key, i), 1, smax, cl)
+           for i, cl in enumerate(lane_lens)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+
+
+def make_lane_decode_loop(params, cfg, n_tokens):
+    """Jitted greedy decode scan over a vmapped serve-style lane batch."""
+    def run(state, tok):
+        def step(carry, _):
+            st, t = carry
+            lg, st = jax.vmap(
+                lambda s, tt: I.decode_step(params, cfg, s, tt))(st, t)
+            nt = jnp.argmax(lg[:, :, -1], axis=-1).astype(jnp.int32)
+            return (st, nt[..., None]), ()
+        carry, _ = jax.lax.scan(step, (state, tok), None, length=n_tokens)
+        return carry[0].cache.length, carry[1]
+    return jax.jit(run)
+
+
+def bench_decode_lanes(params, cfg, smax, lane_lens, n_tokens, repeats=9,
+                       seg_block=None):
+    """Vmapped serve lanes at mixed occupancies: lane-batched tile skip
+    (cfg.attn_lane_batched=True, the default) vs the legacy vmap where
+    the per-block skip `cond` lowers to a capacity-bound `select`.
+
+    ``seg_block`` overrides ``cfg.attn_seg_block`` — the skip
+    granularity.  Serve batches of small per-lane occupancies want finer
+    blocks than the single-stream default (work rounds up to the block);
+    the lane-batched path is insensitive to it (it folds ~1 block either
+    way) while the select baseline's cost tracks capacity / block.
+
+    The two variants are measured INTERLEAVED (one timed run of each per
+    repeat): this container's clock drifts over long runs, and
+    back-to-back variant blocks would credit the drift to whichever ran
+    second."""
+    if seg_block is not None:
+        cfg = cfg.replace(attn_seg_block=seg_block)
+    N = len(lane_lens)
+    tok = jnp.zeros((N, 1, 1), jnp.int32)
+    variants = {"select": cfg.replace(attn_lane_batched=False),
+                "lane_batched": cfg}
+    fns, states, best = {}, {}, {}
+    for name, cfgv in variants.items():
+        states[name] = _stacked_lane_states(cfgv, jax.random.PRNGKey(7),
+                                            smax, lane_lens)
+        fns[name] = make_lane_decode_loop(params, cfgv, n_tokens)
+        jax.block_until_ready(fns[name](states[name], tok))  # compile
+    for _ in range(repeats):
+        for name in variants:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[name](states[name], tok))
+            dt = time.perf_counter() - t0
+            best[name] = min(best.get(name, dt), dt)
+    out = {name: N * n_tokens / best[name] for name in variants}
+    out["speedup"] = out["lane_batched"] / out["select"]
+    return out
+
+
 def bench_engine_query(params, cfg, n_sessions, qlen, cache_len):
     """Serve-engine batched query throughput (the vmapped prefill path —
     rides the same segmented attend)."""
@@ -164,6 +229,43 @@ def main():
                   f"{r['speedup']:.2f}x vs concat")
         if cl >= 1024 and r["speedup"] < 2.0:
             print("WARNING: speedup below the 2x acceptance bar")
+
+    short8 = (128, 256, 384, 256, 128, 512, 256, 128)
+    if args.smoke:
+        # seg_block 64 so even the tiny smoke capacity has blocks to skip
+        lane_scenarios = {"mixed_short": ((64, 128, 64, 128), 64)}
+        lane_tok = 4
+    else:
+        lane_scenarios = {
+            # mostly-short serve batch at serve-tuned skip granularity
+            # (small per-lane occupancies want finer blocks; the
+            # lane-batched path folds ~1 block either way)
+            "mixed_short": (short8, 256),
+            # same batch at the single-stream default granularity
+            "mixed_short_block512": (short8, 512),
+            # one hot lane: lane-batched work is bounded by the batch max
+            # on the jnp path (the Pallas lane grid skips per lane)
+            "one_long": (short8[:-1] + (smax,), 256),
+        }
+        lane_tok = 64
+    results["decode_lanes"] = []
+    print(f"\nvmapped serve lanes at Smax={smax} "
+          f"(lane-batched custom_vmap route vs select-lowered vmap)")
+    print(f"{'scenario':>20} {'blk':>5} {'select':>10} {'lane_batched':>12} "
+          f"{'speedup':>8}")
+    for name, (lane_lens, blk) in lane_scenarios.items():
+        r = bench_decode_lanes(params, cfg, smax, lane_lens, lane_tok,
+                               seg_block=blk)
+        results["decode_lanes"].append(
+            {"scenario": name, "lane_lens": list(lane_lens),
+             "seg_block": blk, **r})
+        print(f"{name:>20} {blk:>5} {r['select']:>10.1f} "
+              f"{r['lane_batched']:>12.1f} {r['speedup']:>7.2f}x")
+        C.csv_row(f"decode_lanes_{name}",
+                  1e6 / max(r["lane_batched"], 1e-9),
+                  f"{r['speedup']:.2f}x vs select-lowered vmap")
+        if name == "mixed_short" and not args.smoke and r["speedup"] < 1.5:
+            print("WARNING: lane-batched speedup below the 1.5x bar")
 
     cfg8 = cfg.replace(kv_cache_dtype="int8")
     p8 = T.init_lm(jax.random.PRNGKey(0), cfg8)

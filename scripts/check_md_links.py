@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Markdown link check (no deps): every relative link/image target in the
+repo's markdown docs must exist, and every in-page anchor must resolve.
+
+    python scripts/check_md_links.py [files-or-dirs ...]
+
+Defaults to README.md, ROADMAP.md and docs/.  External (http/mailto)
+links are not fetched — CI stays hermetic.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def anchors(md: str):
+    """GitHub-style slugs for every heading."""
+    out = set()
+    for h in HEADING.findall(md):
+        slug = re.sub(r"[^\w\- ]", "", h.strip().lower())
+        out.add(re.sub(r"\s+", "-", slug).strip("-"))
+    return out
+
+
+def check_file(path: Path, root: Path) -> list:
+    errs = []
+    md = path.read_text(encoding="utf-8")
+    for target in LINK.findall(md):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, frag = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if not dest.exists():
+            errs.append(f"{path.relative_to(root)}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in anchors(dest.read_text(encoding="utf-8")):
+                errs.append(f"{path.relative_to(root)}: missing anchor "
+                            f"-> {target}")
+    return errs
+
+
+def main(argv) -> int:
+    root = Path(__file__).resolve().parent.parent
+    args = [Path(a) for a in argv] or [root / "README.md", root / "ROADMAP.md",
+                                       root / "docs"]
+    files = []
+    for a in args:
+        files += sorted(a.rglob("*.md")) if a.is_dir() else [a]
+    errs = []
+    for f in files:
+        errs += check_file(f.resolve(), root)
+    for e in errs:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errs else 'ok'} ({len(errs)} broken)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

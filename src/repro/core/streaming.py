@@ -108,11 +108,39 @@ def compress_from_kv(params, cfg: ModelConfig, mem: MemState,
 # streaming step
 # ---------------------------------------------------------------------------
 
+def _evict_once(params, cfg: ModelConfig, s: StreamState, ccm_on: bool,
+                impl: Optional[str]) -> StreamState:
+    """One eviction: compress the block behind the sink into memory
+    (ccm_on) or drop it (StreamingLLM baseline), shift the window left by
+    ``stream_chunk`` and advance the counters."""
+    cc = cfg.ccm.stream_chunk
+    sink = cfg.ccm.stream_sink
+    if ccm_on:
+        blk_k = jax.lax.dynamic_slice_in_dim(s.win_k, sink, cc, axis=2)
+        blk_v = jax.lax.dynamic_slice_in_dim(s.win_v, sink, cc, axis=2)
+        new_mem = compress_from_kv(params, cfg, s.mem, blk_k, blk_v,
+                                   s.pos, impl=impl)
+    else:
+        new_mem = s.mem
+
+    # shift [sink+cc, W) left by cc
+    def shift(a):
+        head = a[:, :, :sink]
+        tail = a[:, :, sink + cc:]
+        pad = jnp.zeros_like(a[:, :, :cc])
+        return jnp.concatenate([head, tail, pad], axis=2)
+
+    return StreamState(win_k=shift(s.win_k), win_v=shift(s.win_v),
+                       win_len=s.win_len - cc, mem=new_mem,
+                       pos=s.pos + (cfg.ccm.comp_len if ccm_on else 0))
+
+
 def stream_step(params, cfg: ModelConfig, st: StreamState,
                 chunk_tokens: jnp.ndarray,
                 ccm_on: bool = True,
                 valid_len=None,
-                impl: Optional[str] = None) -> Tuple[jnp.ndarray, StreamState]:
+                impl: Optional[str] = None,
+                evict: bool = True) -> Tuple[jnp.ndarray, StreamState]:
     """Process ``c`` new tokens: maybe compress+evict, then prefill into the
     window attending [Mem, sink+window, self]. Returns per-token logits.
 
@@ -124,6 +152,12 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
     masked out of attention, frozen out of the window write, and excluded
     from the win_len/pos counters *and the eviction trigger* — the padded
     step is bit-identical (incl. eviction boundaries) to the unpadded one.
+
+    ``evict=False`` skips the in-step eviction `cond` entirely: the caller
+    has already applied (or gated) the eviction, as `stream_step_lanes`
+    does for serve batches where the per-state `cond` would lower to a
+    `select` under vmap and run the compression pass on every lane every
+    step.
     """
     B, c = chunk_tokens.shape
     cc = cfg.ccm.stream_chunk
@@ -145,25 +179,10 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
             f"stream_sink ({sink}) + stream_chunk ({cc}) exceeds "
             f"stream_window ({W}): the eviction block does not fit")
 
-    def do_evict(s: StreamState) -> StreamState:
-        if ccm_on:
-            blk_k = jax.lax.dynamic_slice_in_dim(s.win_k, sink, cc, axis=2)
-            blk_v = jax.lax.dynamic_slice_in_dim(s.win_v, sink, cc, axis=2)
-            new_mem = compress_from_kv(params, cfg, s.mem, blk_k, blk_v,
-                                       s.pos, impl=impl)
-        else:
-            new_mem = s.mem
-        # shift [sink+cc, W) left by cc
-        def shift(a):
-            head = a[:, :, :sink]
-            tail = a[:, :, sink + cc:]
-            pad = jnp.zeros_like(a[:, :, :cc])
-            return jnp.concatenate([head, tail, pad], axis=2)
-        return StreamState(win_k=shift(s.win_k), win_v=shift(s.win_v),
-                           win_len=s.win_len - cc, mem=new_mem,
-                           pos=s.pos + (cfg.ccm.comp_len if ccm_on else 0))
-
-    st = jax.lax.cond(st.win_len + vl > W, do_evict, lambda s: s, st)
+    if evict:
+        st = jax.lax.cond(st.win_len + vl > W,
+                          lambda s: _evict_once(params, cfg, s, ccm_on, impl),
+                          lambda s: s, st)
 
     positions = st.pos + jnp.arange(c)
     x = T.embed_tokens(cfg, params, chunk_tokens)
@@ -212,3 +231,63 @@ def stream_step(params, cfg: ModelConfig, st: StreamState,
     st = StreamState(win_k=nk, win_v=nv, win_len=st.win_len + vl,
                      mem=st.mem, pos=st.pos + vl)
     return logits, st
+
+
+# ---------------------------------------------------------------------------
+# lane-batched streaming step (serve engine)
+# ---------------------------------------------------------------------------
+
+def eviction_pending(cfg: ModelConfig, st: StreamState,
+                     incoming) -> jnp.ndarray:
+    """Per-lane "compression pending" flag: would ingesting ``incoming``
+    real tokens overflow the window?  Matches `stream_step`'s in-step
+    eviction trigger exactly (incl. ragged lanes, where ``incoming`` is
+    the lane's valid length, not the padded bucket width)."""
+    return st.win_len + jnp.asarray(incoming, jnp.int32) \
+        > cfg.ccm.stream_window
+
+
+def stream_step_lanes(params, cfg: ModelConfig, st: StreamState,
+                      chunk_tokens: jnp.ndarray, lengths=None,
+                      ccm_on: bool = True,
+                      impl: Optional[str] = None
+                      ) -> Tuple[jnp.ndarray, StreamState]:
+    """Serve-batch streaming step over N stacked lanes with PER-LANE
+    eviction gating.
+
+    ``st`` holds N independent sessions stacked leaf-wise (leading lane
+    axis, inner batch 1 — the arena-gather layout); ``chunk_tokens`` is
+    (N, 1, c) and ``lengths`` (N,) carries ragged valid lengths (None =
+    every lane's chunk is fully real).
+
+    A plain ``vmap(stream_step)`` turns the eviction `cond` into a
+    `select`: every lane runs the O(comp_len) compression pass every
+    step.  Here the per-lane "compression pending" flags are reduced to
+    ONE scalar predicate — `jax.lax.cond(any(pending), ...)` stays a real
+    branch — so steps where no lane overflows skip compression entirely,
+    and when some lane does overflow, the eviction runs vmapped but each
+    non-pending lane's state is re-selected bit-exactly (`jnp.where` on
+    every leaf: window, memory, win_len/pos counters all frozen).  The
+    per-token prefill then runs with ``evict=False``.  Cost of the
+    compression pass is therefore proportional to how often windows
+    actually overflow, not to steps * lanes.
+    """
+    c = chunk_tokens.shape[-1]
+    vl = jnp.full((chunk_tokens.shape[0],), c, jnp.int32) \
+        if lengths is None else jnp.asarray(lengths, jnp.int32)
+    pending = eviction_pending(cfg, st, vl)          # (N,)
+
+    def evict_masked(s: StreamState) -> StreamState:
+        def one(lane: StreamState, p) -> StreamState:
+            ev = _evict_once(params, cfg, lane, ccm_on, impl)
+            return jax.tree.map(lambda n, o: jnp.where(p, n, o), ev, lane)
+        return jax.vmap(one)(s, pending)
+
+    st = jax.lax.cond(jnp.any(pending), evict_masked, lambda s: s, st)
+
+    def one_step(lane: StreamState, tk, v):
+        return stream_step(params, cfg, lane, tk, ccm_on=ccm_on,
+                           valid_len=None if lengths is None else v,
+                           impl=impl, evict=False)
+
+    return jax.vmap(one_step)(st, chunk_tokens, vl)

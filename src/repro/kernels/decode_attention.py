@@ -15,6 +15,19 @@ not with the cache's allocated capacity.  int8 segments are dequantized
 tile-wise in-kernel from their ``k_scale``/``v_scale`` refs (the fp
 full-cache dequant copy of the concat path disappears).
 
+The leading grid axis is the *lane* axis (a serve batch of independent
+sessions, or a plain batch): the scalar-prefetch table is 2-D,
+``(lanes, 2 * n_segments)`` holding ``[lens | layer ids]`` PER LANE, and
+both the in-kernel skip predicate and the layered index maps read row
+``program_id(0)``.  Each lane therefore skips past its *own* valid
+prefix — under the serve engine's vmapped session steps this is what
+keeps decode cost proportional to per-lane cache occupancy instead of
+lowering to a batch-wide ``select`` (see ``models.attention``'s
+``custom_vmap`` route).  Per-lane layered segments (each lane brings its
+own stacked cache) use the lane-major layout ``(lanes, L, S, H, D)``
+(``lane_major=True``); a layered segment shared across an inner batch
+keeps the model-native layer-major ``(L, B, S, H, D)``.
+
 Layouts are the model's native (B, S, H, D) — segments are consumed where
 they live; no per-step transpose of a large cache.  Block shapes are
 (1, bk, 1, D), i.e. strided row DMA per head; revisit sublane packing if
@@ -47,16 +60,18 @@ class SegDesc(NamedTuple):
     bk: int           # k-block width
     quantized: bool   # int8 k/v with fp32 scale refs
     has_info: bool    # per-token idx/seg/comp/valid metadata refs follow
-    layered: bool     # k/v carry a leading layer axis, indexed by the
-                      # scalar-prefetched layer id (stacked-state reads)
+    layered: bool     # k/v carry a layer axis, indexed by the
+                      # scalar-prefetched per-lane layer id (stacked-state)
+    lane_major: bool  # layered layout is (lanes, L, S, ...) — each lane
+                      # owns its stack — vs layer-major (L, B, S, ...)
     n_refs: int       # tensor+meta refs this segment contributes
 
 
 def _desc(off: int, S: int, bk: int, quantized: bool, has_info: bool,
-          layered: bool) -> SegDesc:
+          layered: bool, lane_major: bool) -> SegDesc:
     nk = pl.cdiv(S, bk)
     n = 2 + (2 if quantized else 0) + (4 if has_info else 0)
-    return SegDesc(off, nk, bk, quantized, has_info, layered, n)
+    return SegDesc(off, nk, bk, quantized, has_info, layered, lane_major, n)
 
 
 def _kernel(descs, scale, nk_total,
@@ -64,6 +79,7 @@ def _kernel(descs, scale, nk_total,
     n_in = sum(d.n_refs for d in descs)
     o_ref = rest[n_in]
     m_ref, l_ref, acc_ref = rest[n_in + 1:]
+    b = pl.program_id(0)
     ik = pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -81,7 +97,7 @@ def _kernel(descs, scale, nk_total,
         meta = refs[2 + (2 if d.quantized else 0):]
         start = (ik - d.off) * d.bk
         in_seg = (ik >= d.off) & (ik < d.off + d.nk)
-        seg_len = lens_ref[si]                      # [lens | layer ids]
+        seg_len = lens_ref[b, si]                   # THIS lane's [lens | ids]
         visible = in_seg & (start < seg_len)
         if d.has_info:
             # tile-level CCM visibility precheck (block sparsity): skip
@@ -145,19 +161,28 @@ def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
                               q_idx, q_seg, scale: float,
                               block_q: int = 128, block_k: int = 128,
                               interpret: Optional[bool] = None):
-    """q (B, Sq, Hq, D); each seg a dict of arrays:
+    """q (B, Sq, Hq, D) — B is the lane axis (independent serve lanes, or
+    a plain batch).  Each seg a dict of arrays:
 
       k/v (B, S, Hkv, D) [int8 allowed with k_scale/v_scale (B, S, Hkv)],
-      length () int32 or None (fully valid),
-      idx/seg/comp/valid (S,) metadata or None (memory-like segment),
-      layer () int32 or None — when set, k/v (and scales) carry a
-      leading layer axis (L, B, S, ...) and blocks are DMA'd straight
-      out of that layer of the stacked state (no layer-slice copy).
+      length () or (B,) int32, or None (fully valid) — PER-LANE valid
+      prefix when (B,): each lane's k-block loop skips past its own,
+      idx/seg/comp/valid (S,) or (B, S) metadata, or None (memory-like
+      segment: always-visible keys),
+      layer () or (B,) int32, or None — when set, k/v (and scales) carry
+      a layer axis and blocks are DMA'd straight out of that layer of
+      the stacked state (no layer-slice copy).  Layout is layer-major
+      (L, B, S, ...) by default; ``lane_major=True`` marks the per-lane
+      stacked form (B, L, S, ...) produced by the serve engine's arena
+      gather (lane axis outermost).
 
     Returns (B, Sq, Hq, D).  Sq and every S are padded to block multiples
     here; hot-path callers keep capacities block-aligned so this is free.
-    The scalar-prefetch vector is [valid lengths | layer ids] — lengths
-    gate the tile-level skip, layer ids drive the layered index maps.
+    The scalar-prefetch table is (B, 2 * n_segments) int32 —
+    ``[valid lengths | layer ids]`` per lane — read by both the in-kernel
+    tile-skip predicate and the layered index maps at row
+    ``program_id(0)``, which is what makes the skip truly per-lane.
+    ``q_idx``/``q_seg`` are (Sq,) shared or (B, Sq) per-lane.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -166,11 +191,18 @@ def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
     G = Hq // Hkv
     big = 2 ** 30
 
+    def lanes(x):
+        """Broadcast shared 1-D metadata to the (B, S) per-lane form."""
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            x = jnp.broadcast_to(x, (B,) + x.shape)
+        return x
+
     bq = min(block_q, max(Sq, 8))
     qp = _pad_axis(q, bq, 1)
     nq = qp.shape[1] // bq
-    qi = _pad_axis(jnp.asarray(q_idx, jnp.int32), bq, 0, fill=-big)
-    qs = _pad_axis(jnp.asarray(q_seg, jnp.int32), bq, 0, fill=-3)
+    qi = _pad_axis(lanes(jnp.asarray(q_idx, jnp.int32)), bq, 1, fill=-big)
+    qs = _pad_axis(lanes(jnp.asarray(q_seg, jnp.int32)), bq, 1, fill=-3)
 
     descs: List[SegDesc] = []
     ns = len(segs)
@@ -178,33 +210,40 @@ def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
     off = 0
     for si, s in enumerate(segs):
         layered = s.get("layer") is not None
+        lane_major = layered and bool(s.get("lane_major"))
         tok_ax = 2 if layered else 1
         S = s["k"].shape[tok_ax]
         quant = s.get("k_scale") is not None
         has_info = s.get("idx") is not None
         bk = min(block_k, max(S, 8))
-        d = _desc(off, S, bk, quant, has_info, layered)
+        d = _desc(off, S, bk, quant, has_info, layered, lane_major)
         descs.append(d)
         off += d.nk
-        lens.append(jnp.asarray(S if s.get("length") is None
-                                else s["length"], jnp.int32))
-        layers.append(jnp.zeros((), jnp.int32) if not layered
-                      else jnp.asarray(s["layer"], jnp.int32))
+        lens.append(jnp.broadcast_to(
+            jnp.asarray(S if s.get("length") is None else s["length"],
+                        jnp.int32), (B,)))
+        layers.append(jnp.broadcast_to(
+            jnp.zeros((), jnp.int32) if not layered
+            else jnp.asarray(s["layer"], jnp.int32), (B,)))
 
         def im_kv(b, h, iq, ik, lens_ref, d=d, si=si):
             blk = jnp.clip(ik - d.off, 0, d.nk - 1)
+            if d.lane_major:
+                return (b, lens_ref[b, ns + si], blk, h // G, 0)
             if d.layered:
-                return (lens_ref[ns + si], b, blk, h // G, 0)
+                return (lens_ref[b, ns + si], b, blk, h // G, 0)
             return (b, blk, h // G, 0)
 
         def im_sc(b, h, iq, ik, lens_ref, d=d, si=si):
             blk = jnp.clip(ik - d.off, 0, d.nk - 1)
+            if d.lane_major:
+                return (b, lens_ref[b, ns + si], blk, h // G)
             if d.layered:
-                return (lens_ref[ns + si], b, blk, h // G)
+                return (lens_ref[b, ns + si], b, blk, h // G)
             return (b, blk, h // G)
 
         def im_meta(b, h, iq, ik, lens_ref, d=d):
-            return (0, jnp.clip(ik - d.off, 0, d.nk - 1))
+            return (b, jnp.clip(ik - d.off, 0, d.nk - 1))
 
         kv_block = (1, 1, bk, 1, D) if layered else (1, bk, 1, D)
         sc_block = (1, 1, bk, 1) if layered else (1, bk, 1)
@@ -220,12 +259,12 @@ def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
             if valid is None:
                 valid = jnp.ones((S,), bool)
             inputs += [
-                _pad_axis(jnp.asarray(s["idx"], jnp.int32), bk, 0,
-                          fill=big)[None],
-                _pad_axis(jnp.asarray(s["seg"], jnp.int32), bk, 0,
-                          fill=-2)[None],
-                _pad_axis(s["comp"].astype(jnp.int32), bk, 0)[None],
-                _pad_axis(valid.astype(jnp.int32), bk, 0)[None]]
+                _pad_axis(lanes(jnp.asarray(s["idx"], jnp.int32)), bk, 1,
+                          fill=big),
+                _pad_axis(lanes(jnp.asarray(s["seg"], jnp.int32)), bk, 1,
+                          fill=-2),
+                _pad_axis(lanes(s["comp"]).astype(jnp.int32), bk, 1),
+                _pad_axis(lanes(valid).astype(jnp.int32), bk, 1)]
             in_specs += [pl.BlockSpec((1, bk), im_meta)] * 4
 
     nk_total = off
@@ -234,7 +273,7 @@ def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
         return (b, iq, h, 0)
 
     def im_qmeta(b, h, iq, ik, lens_ref):
-        return (0, iq)
+        return (b, iq)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -261,5 +300,5 @@ def segmented_flash_attention(q, segs: Sequence[Dict[str, Any]],
         out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
         compiler_params=cparams,
         interpret=interpret,
-    )(jnp.stack(lens + layers), qi[None], qs[None], qp, *inputs)
+    )(jnp.stack(lens + layers, axis=1), qi, qs, qp, *inputs)
     return out[:, :Sq]

@@ -56,8 +56,16 @@ def segmented_attention(q, segs, q_idx, q_seg, scale: float,
                         block_q: int = 128, block_k: int = 128,
                         interpret: Optional[bool] = None):
     """Drop-in for repro.models.attention.attend_segments (impl='pallas'):
-    q (B,Sq,Hq,D) over in-place KV segments — see
+    q (B, Sq, Hq, D) over in-place KV segments — see
     decode_attention.segmented_flash_attention for the seg-dict schema.
+
+    B is the LANE axis: segment ``length``/``layer`` may be per-lane
+    ``(B,)`` vectors (metadata ``(B, S)``, q_idx/q_seg ``(B, Sq)``), and
+    a per-lane stacked cache uses the lane-major ``(B, L, S, Hkv, D)``
+    layout with ``lane_major=True`` — each lane then tile-skips past its
+    own valid prefix (the serve engine's vmapped-session route).  Scalars
+    / 1-D metadata broadcast to all lanes (the single-session layout).
+
     Not jitted here: hot paths call it from inside already-jitted steps
     and the segment list's None-structure is part of the trace."""
     return _dattn.segmented_flash_attention(

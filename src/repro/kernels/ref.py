@@ -95,6 +95,55 @@ def segmented_attention_ref(q, segs, q_idx, q_seg, scale: float):
     return out.transpose(0, 2, 1, 3)
 
 
+def segmented_attention_lanes_ref(q, segs, q_idx, q_seg, scale: float):
+    """Batched oracle for the lane-batched segmented kernel: a plain
+    Python loop over lanes, each lane attending its OWN segment slices
+    through :func:`segmented_attention_ref`.
+
+    q (N, Sq, Hq, D) with N the lane axis; each seg a dict in the
+    *normalized lane schema* of ``segmented_flash_attention``:
+    non-layered k/v (N, S, Hkv, D); layered ``lane_major`` k/v
+    (N, L, S, Hkv, D) (scales (N, L, S, Hkv)); length/layer () or (N,);
+    idx/seg/comp/valid (S,) or (N, S).  q_idx/q_seg (Sq,) or (N, Sq).
+    """
+    N, Sq = q.shape[:2]
+    q_idx = jnp.broadcast_to(jnp.asarray(q_idx, jnp.int32), (N, Sq))
+    q_seg = jnp.broadcast_to(jnp.asarray(q_seg, jnp.int32), (N, Sq))
+
+    def lane(x, i):
+        x = jnp.asarray(x)
+        return x[i] if x.ndim else x
+
+    outs = []
+    for i in range(N):
+        per = []
+        for s in segs:
+            layered = s.get("layer") is not None
+            d = {"layer": None if s.get("layer") is None
+                 else lane(s["layer"], i)}
+            for key in ("k", "v", "k_scale", "v_scale"):
+                a = s.get(key)
+                if a is None:
+                    d[key] = None
+                elif layered and s.get("lane_major"):
+                    d[key] = a[i][:, None]          # (L, S, ..) -> (L,1,S,..)
+                elif layered:
+                    d[key] = a[:, i:i + 1]
+                else:
+                    d[key] = a[i:i + 1]
+            d["length"] = None if s.get("length") is None \
+                else lane(s["length"], i)
+            for key in ("idx", "seg", "comp", "valid"):
+                a = s.get(key)
+                d[key] = None if a is None \
+                    else (jnp.asarray(a)[i] if jnp.asarray(a).ndim == 2
+                          else jnp.asarray(a))
+            per.append(d)
+        outs.append(segmented_attention_ref(q[i:i + 1], per, q_idx[i],
+                                            q_seg[i], scale))
+    return jnp.concatenate(outs, axis=0)
+
+
 def cond_lora_ref(x, w, a, b, gate, scale: float,
                   bias: Optional[jnp.ndarray] = None):
     """y = x@w (+bias) + gate * ((x@a^T)@b) * scale.

@@ -118,8 +118,14 @@ def session_vmap(cfg: ModelConfig, op: str, ragged: bool = False) -> Callable:
 
     'ingest' -> state; 'query'/'stream' -> (logits (B,1,l,V), state).
     Query = prefill of I(t) over [Mem, self] with full per-token logits.
-    For 'stream', vmap turns the eviction `cond` into a `select`, so the
-    compression pass runs every step on every lane.
+
+    Per-lane cost stays occupancy-proportional under the vmap: the
+    segmented attends reroute through `models.attention`'s lane-batched
+    `custom_vmap` rule (per-lane tile skip instead of a capacity-bound
+    `select`), and 'stream' dispatches to `streaming.stream_step_lanes`,
+    which gates the eviction/compression pass on a batch-level
+    "any lane pending" `cond` and re-selects non-overflowing lanes'
+    state bit-exactly instead of compressing every lane every step.
 
     ``ragged``: each lane's tokens are padded up to a shared token bucket
     and ``lengths`` carries the per-request valid length — pad tokens are
@@ -130,21 +136,24 @@ def session_vmap(cfg: ModelConfig, op: str, ragged: bool = False) -> Callable:
     if ragged and not ragged_family(cfg):
         raise ValueError(
             f"ragged session batching unsupported for family {cfg.family!r}")
+    if op == "stream":
+        def fn(params, state, tokens, lengths):
+            return STR.stream_step_lanes(
+                params, cfg, state, tokens,
+                lengths=lengths if ragged else None)
+        return fn
     if ragged:
         core = {
             "ingest": lambda p, st, tk, vl: I.ingest_context(
                 p, cfg, st, tk, valid_len=vl),
             "query": lambda p, st, tk, vl: I.prefill(
                 p, cfg, st, tk, full_logits=True, valid_len=vl),
-            "stream": lambda p, st, tk, vl: STR.stream_step(
-                p, cfg, st, tk, valid_len=vl),
         }[op]
     else:
         core = {
             "ingest": lambda p, st, tk, vl: I.ingest_context(p, cfg, st, tk),
             "query": lambda p, st, tk, vl: I.prefill(p, cfg, st, tk,
                                                      full_logits=True),
-            "stream": lambda p, st, tk, vl: STR.stream_step(p, cfg, st, tk),
         }[op]
 
     def fn(params, state, tokens, lengths):
@@ -159,10 +168,22 @@ def make_arena_step(cfg: ModelConfig, op: str,
     (params, slabs, ids (B,), tokens (B,1,l), lengths (B,)) ->
     (logits-or-None, slabs).
 
+    Shape contract: ``slabs`` is the arena's state pytree — every leaf
+    of the single-session template (inner batch 1) with a leading
+    ``(n_slots + 1,)`` slot axis; ``ids`` selects the batch's B slot
+    rows (``pad_slot`` for pad lanes); ``tokens`` are (B, 1, token_len)
+    bucket-padded token lanes and ``lengths`` the per-lane valid lengths
+    (== token_len everywhere when ``ragged=False``).  'query'/'stream'
+    return logits (B, 1, token_len, V) — rows past a lane's valid length
+    are masked-lane garbage the engine slices off.
+
     Gather of the batch's slot rows, the vmapped op, and the scatter of
     updated rows run as ONE jitted program over the donated slabs — the
     serve engine's hot path (no intermediate batch materialization, no
-    extra dispatch boundaries)."""
+    extra dispatch boundaries).  Inside the vmapped op, decode/stream
+    attention takes the lane-batched route (per-lane tile skip; see
+    `session_vmap`), so the fused program's cost follows per-lane cache
+    occupancy rather than arena capacity."""
     from repro.kernels import ops as KOPS
     vf = session_vmap(cfg, op, ragged)
 

@@ -18,6 +18,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import custom_batching
 
 from repro.core import lora as lora_lib
 from repro.core.masks import NEG_INF
@@ -232,6 +233,12 @@ class KVSegment(NamedTuple):
     k_scale/v_scale : (B, S, Hkv) fp32 when k/v are int8-quantized
                ((L, B, S, Hkv) when ``layer`` is set).
     layer    : () int32 index into the leading layer axis, or None.
+
+    Under `jax.vmap` (serve session lanes) each field may carry a mapped
+    lane axis — per-lane lengths, metadata and stacked caches; the
+    `custom_vmap` rule in :func:`attend_segments` rewrites the batch
+    into the lane schema of `kernels.decode_attention` so the per-block
+    tile skip stays per-lane instead of lowering to `select`.
     """
     k: jnp.ndarray
     v: jnp.ndarray
@@ -300,19 +307,22 @@ def segment_key_info(seg: KVSegment) -> KeyInfo:
 def _fold_block(state, qg, kb, vb, mask, scale):
     """Online-softmax update of (m, l, acc) with one k-block.
 
-    qg (B,Sq,Hkv,G,D); kb/vb (B,bk,Hkv,D); mask (Sq,bk)/(1,bk)/None.
-    Masked columns contribute exactly 0 to l/acc, so padding a segment
-    (or a lane) leaves the statistics bit-identical.
+    qg (B,Sq,Hkv,G,D); kb/vb (B,bk,Hkv,D); mask (Sq,bk)/(1,bk) shared
+    across the batch, (B,Sq,bk)/(B,1,bk) per-lane, or None.  Masked
+    columns contribute exactly 0 to l/acc, so padding a segment (or a
+    lane) leaves the statistics bit-identical.
     """
     m_i, l_i, acc = state
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32) * scale
     if mask is not None:
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = mask[None, None, None] if mask.ndim == 2 \
+            else mask[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
     m_new = jnp.maximum(m_i, s.max(axis=-1))
     alpha = jnp.exp(m_i - m_new)
     p = jnp.exp(s - m_new[..., None])
     if mask is not None:
-        p = jnp.where(mask[None, None, None], p, 0.0)
+        p = jnp.where(mask, p, 0.0)
     l_new = l_i * alpha + p.sum(axis=-1)
     acc = acc * alpha[..., None] \
         + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qg.dtype), vb
@@ -427,15 +437,244 @@ def _attend_segments_online(cfg: ModelConfig, q, segments, q_info: KeyInfo,
     return outs.swapaxes(0, 1).reshape(B, nq * q_chunk, Hq, D)[:, :Sq]
 
 
+# ---------------------------------------------------------------------------
+# lane-batched segmented attention — the serve-vmap route
+#
+# Under `launch.serve.session_vmap` every serve lane is an independent
+# session, so `cache.length` (and the ragged valid masks) are *batched*
+# and the per-block `lax.cond` skip of `_fold_segment` would lower to a
+# `select`: every lane computes capacity-bounded attention.  Instead,
+# `attend_segments` wraps its dispatch in `jax.custom_batching.custom_vmap`
+# whose rule re-expresses the batch in the *lane schema* (lane axis folded
+# into the batch axis, per-lane lengths/metadata as arrays, per-lane
+# stacked caches lane-major) and calls a lane-aware implementation:
+#
+#   pallas — the kernel's lane grid axis + 2-D scalar prefetch skips each
+#            lane's k-blocks past its OWN valid prefix;
+#   jnp    — `_fold_segment_lanes` keeps a REAL `cond` by predicating on
+#            the batch max length (a scalar), so work scales with the
+#            largest lane occupancy in the batch, not with capacity, and
+#            per-lane masks keep lanes numerically independent.
+#
+# Masked-out columns contribute exactly 0 to the running softmax, so the
+# lane route is bit-identical to running each lane unbatched.  Layouts
+# the rule cannot express (per-lane layer ids, inner batch > 1, a shared
+# stacked cache) fall back to plain `jax.vmap` of the unbatched dispatch —
+# the legacy select-lowered semantics.
+# ---------------------------------------------------------------------------
+
+
+class _LaneFallback(Exception):
+    """Batched layout with no lane-schema equivalent; use plain vmap."""
+
+
+def _lane_normalize(axis_size, in_batched, q, segments, q_info: KeyInfo):
+    """(vmap-batched args) -> (q (N,Sq,Hq,D), lane seg dicts, qidx, qseg).
+
+    Batched leaves arrive with the mapped lane axis at dim 0; shared
+    leaves are broadcast.  Raises `_LaneFallback` for layouts outside
+    the lane schema."""
+    N = axis_size
+    qB, segsB, qiB = in_batched
+    if not qB or q.shape[1] != 1:
+        raise _LaneFallback   # lanes must be single-session (inner B=1)
+    ql = q[:, 0]
+
+    def meta(x, batched, dtype):
+        if x is None:
+            return None
+        x = jnp.asarray(x).astype(dtype)
+        return x if batched else jnp.broadcast_to(x, (N,) + x.shape)
+
+    qidx = meta(q_info.idx, qiB.idx, jnp.int32)
+    qseg = meta(q_info.seg, qiB.seg, jnp.int32)
+    dicts = []
+    for s, sb in zip(segments, segsB):
+        layered = s.layer is not None
+        if layered and (sb.layer or not sb.k):
+            # per-lane layer ids, or a stacked cache shared across lanes:
+            # neither has a lane-major layout without a full-cache copy
+            raise _LaneFallback
+        d = {"lane_major": layered}
+        for key in ("k", "v", "k_scale", "v_scale"):
+            a = getattr(s, key)
+            if a is None:
+                d[key] = None
+                continue
+            if getattr(sb, key):
+                if a.shape[2 if layered else 1] != 1:
+                    raise _LaneFallback
+                d[key] = a[:, :, 0] if layered else a[:, 0]
+            else:
+                if layered or a.shape[0] != 1:
+                    raise _LaneFallback
+                d[key] = jnp.broadcast_to(a[0], (N,) + a.shape[1:])
+        d["layer"] = None if s.layer is None \
+            else jnp.asarray(s.layer, jnp.int32)
+        d["length"] = None if s.length is None else jnp.broadcast_to(
+            jnp.asarray(s.length, jnp.int32), (N,))
+        if s.info is None:
+            d.update(idx=None, seg=None, comp=None, valid=None)
+        else:
+            ib = sb.info
+            d["idx"] = meta(s.info.idx, ib.idx, jnp.int32)
+            d["seg"] = meta(s.info.seg, ib.seg, jnp.int32)
+            d["comp"] = meta(s.info.comp, ib.comp, bool)
+            d["valid"] = None if s.info.valid is None \
+                else meta(s.info.valid, ib.valid, bool)
+        dicts.append(d)
+    return ql, dicts, qidx, qseg
+
+
+def _fold_segment_lanes(state, qg, qidx, qseg, seg: Dict, scale: float,
+                        block: int):
+    """`_fold_segment` over the lane schema: seg a dict with per-lane
+    length (N,), metadata (N, S) and (for layered segments) a lane-major
+    stacked cache (N, L, S, Hkv, D) at a lane-shared ``layer``.  Blocks
+    past the BATCH max length are skipped by a real `cond` (the predicate
+    is a scalar); per-lane validity inside a block is a mask column that
+    contributes exactly zero."""
+    layered = seg.get("layer") is not None
+    S = seg["k"].shape[2 if layered else 1]
+    N = qg.shape[0]
+    L = seg.get("length")
+    idx = seg.get("idx")
+    dt = qg.dtype
+    layer = seg.get("layer")
+
+    def slice_kv(start, width):
+        def sl(a):
+            if layered:
+                starts = [jnp.zeros((), jnp.int32),
+                          jnp.asarray(layer, jnp.int32),
+                          jnp.asarray(start, jnp.int32)] \
+                    + [jnp.zeros((), jnp.int32)] * (a.ndim - 3)
+                return jax.lax.dynamic_slice(
+                    a, starts, (N, 1, width) + a.shape[3:])[:, 0]
+            return jax.lax.dynamic_slice_in_dim(a, start, width, 1)
+        kb, vb = sl(seg["k"]), sl(seg["v"])
+        if seg.get("k_scale") is not None:
+            kb = _dequant(kb, sl(seg["k_scale"]), dt)
+            vb = _dequant(vb, sl(seg["v_scale"]), dt)
+        return kb.astype(dt), vb.astype(dt)
+
+    def block_mask(start, width):
+        def msl(a):
+            return jax.lax.dynamic_slice(
+                a, (jnp.zeros((), jnp.int32), jnp.asarray(start, jnp.int32)),
+                (N, width))
+        mask = None
+        if idx is not None:
+            mask = (msl(idx)[:, None, :] <= qidx[:, :, None]) \
+                & ((msl(seg["seg"])[:, None, :] == qseg[:, :, None])
+                   | msl(seg["comp"])[:, None, :])
+            if seg.get("valid") is not None:
+                mask = mask & msl(seg["valid"])[:, None, :]
+        if L is not None:
+            lv = ((start + jnp.arange(width))[None, :] < L[:, None])
+            lv = lv[:, None, :]
+            mask = lv if mask is None else mask & lv
+        return mask
+
+    def do_block(st, start, width):
+        kb, vb = slice_kv(start, width)
+        return _fold_block(st, qg, kb, vb, block_mask(start, width), scale)
+
+    Lmax = None if L is None else jnp.max(L)
+    bs = min(S, block)
+    nfull, tail = divmod(S, bs)
+    if nfull == 1 and tail == 0:
+        return do_block(state, jnp.zeros((), jnp.int32), bs)
+    if nfull:
+        starts = jnp.arange(nfull, dtype=jnp.int32) * bs
+
+        def body(carry, start):
+            if Lmax is None:
+                return do_block(carry, start, bs), None
+            return jax.lax.cond(start < Lmax,
+                                lambda c: do_block(c, start, bs),
+                                lambda c: c, carry), None
+
+        state, _ = jax.lax.scan(body, state, starts)
+    if tail:
+        t0 = jnp.asarray(nfull * bs, jnp.int32)
+        if Lmax is None:
+            state = do_block(state, t0, tail)
+        else:
+            state = jax.lax.cond(
+                t0 < Lmax, lambda c: do_block(c, t0, tail),
+                lambda c: c, state)
+    return state
+
+
+def _attend_segments_lanes_online(cfg: ModelConfig, q, segs, qidx, qseg,
+                                  scale: float) -> jnp.ndarray:
+    """Lane-schema analogue of `_attend_segments_online`: q (N,Sq,Hq,D)
+    with N independent lanes, per-lane metadata (N, Sq)/(N, S)."""
+    N, Sq, Hq, D = q.shape
+    Hkv = segs[0]["k"].shape[-2]
+    G = Hq // Hkv
+
+    def one_q_block(qblk, qi, qs):
+        qc = qblk.shape[1]
+        qg = qblk.reshape(N, qc, Hkv, G, D)
+        state = (jnp.full((N, Hkv, G, qc), NEG_INF, jnp.float32),
+                 jnp.zeros((N, Hkv, G, qc), jnp.float32),
+                 jnp.zeros((N, Hkv, G, qc, D), jnp.float32))
+        for s in segs:
+            blk = cfg.attn_seg_block if s.get("length") is not None \
+                else cfg.attn_chunk
+            state = _fold_segment_lanes(state, qg, qi, qs, s, scale, blk)
+        m_f, l_f, acc = state
+        out = acc / jnp.maximum(l_f, 1e-37)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(N, qc, Hq, D
+                                                    ).astype(qblk.dtype)
+
+    q_chunk = min(cfg.attn_chunk, 512)
+    if Sq <= q_chunk:
+        return one_q_block(q, qidx, qseg)
+    qp, _ = _pad_to(q, q_chunk, axis=1)
+    qi, _ = _pad_to(qidx, q_chunk, axis=1, fill=-(10 ** 9))
+    qs, _ = _pad_to(qseg, q_chunk, axis=1, fill=-3)
+    nq = qp.shape[1] // q_chunk
+
+    def body(carry, xs):
+        return carry, one_q_block(*xs)
+
+    _, outs = jax.lax.scan(
+        body, (),
+        (qp.reshape(N, nq, q_chunk, Hq, D).swapaxes(0, 1),
+         qi.reshape(N, nq, q_chunk).swapaxes(0, 1),
+         qs.reshape(N, nq, q_chunk).swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).reshape(N, nq * q_chunk, Hq, D)[:, :Sq]
+
+
 def attend_segments(cfg: ModelConfig, q, segments, q_info: KeyInfo,
                     impl: Optional[str] = None) -> jnp.ndarray:
-    """q (B,Sq,Hq,D) over ordered KV ``segments`` read in place.
+    """q (B, Sq, Hq, D) over ordered KV ``segments`` read in place.
+
+    Shape/layout contract: every segment's k/v are (B, S, Hkv, hd) — or
+    the stacked (L, B, S, Hkv, hd) state when ``KVSegment.layer`` is set
+    — consumed where they live; nothing is concatenated.  ``q_info``
+    carries the query rows' (Sq,) idx/seg metadata; each segment brings
+    its own k-side metadata (or none, for always-visible memory keys)
+    and a valid-prefix ``length`` that bounds the work to occupancy.
+    Returns (B, Sq, Hq, D) in ``q.dtype``.
 
     impl: None -> ``cfg.attn_impl``.  'pallas' -> fused segmented kernel
     (repro.kernels.decode_attention); 'concat' -> materialize the full
     [seg|...|seg] concatenation and run :func:`attend` (the pre-segmented
     baseline, kept for benchmarks/oracles); 'dense'/'chunked' -> the
     pure-jnp blocked online-softmax above.
+
+    Under `jax.vmap` (the serve engine's session lanes) the non-concat
+    paths reroute through a `custom_vmap` rule to a lane-batched
+    implementation so the per-block tile skip survives batching —
+    see the lane-batched section above.  `cfg.attn_lane_batched=False`
+    restores the legacy select-lowered vmap; it is also required to
+    differentiate through these paths (`jax.custom_batching.custom_vmap`
+    defines no JVP rule, so `jax.grad` through the wrapped dispatch
+    fails — the training step differentiates :func:`attend`, never this).
     """
     scale = 1.0 / (cfg.hd ** 0.5)
     segments = [s for s in segments if s.n_tokens]
@@ -456,12 +695,38 @@ def attend_segments(cfg: ModelConfig, q, segments, q_info: KeyInfo,
         # treats an unknown impl like 'concat' itself as dense)
         return attend(cfg, q, jnp.concatenate(ks, axis=1),
                       jnp.concatenate(vs, axis=1), q_info, info, impl=None)
+
     if impl == "pallas":
-        from repro.kernels import ops as kops
-        return kops.segmented_attention(
-            q, [_raw_segment(s) for s in segments], q_info.idx, q_info.seg,
-            scale)
-    return _attend_segments_online(cfg, q, segments, q_info, scale)
+        def base(q, segments, q_info):
+            from repro.kernels import ops as kops
+            return kops.segmented_attention(
+                q, [_raw_segment(s) for s in segments], q_info.idx,
+                q_info.seg, scale)
+    else:
+        def base(q, segments, q_info):
+            return _attend_segments_online(cfg, q, segments, q_info, scale)
+
+    if not cfg.attn_lane_batched:
+        return base(q, segments, q_info)
+    fn = custom_batching.custom_vmap(base)
+
+    @fn.def_vmap
+    def _lane_rule(axis_size, in_batched, qb, segsb, qib):
+        try:
+            ql, dicts, qidx, qseg = _lane_normalize(
+                axis_size, in_batched, qb, segsb, qib)
+        except _LaneFallback:
+            in_axes = jax.tree.map(lambda b: 0 if b else None, in_batched)
+            return jax.vmap(base, in_axes=in_axes)(qb, segsb, qib), True
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.segmented_attention(ql, dicts, qidx, qseg, scale)
+        else:
+            out = _attend_segments_lanes_online(cfg, ql, dicts, qidx, qseg,
+                                                scale)
+        return out[:, None], True
+
+    return fn(q, segments, q_info)
 
 
 def _raw_segment(seg: KVSegment) -> Dict:

@@ -112,6 +112,16 @@ class ModelConfig:
                                  # (decode work rounds cache.length up to it;
                                  # 512 balances skip granularity vs per-block
                                  # loop overhead on CPU — see decode_bench)
+    # --- lane batching: route attend_segments through a custom_vmap rule
+    #     so vmapped serve/stream lanes keep the tile-level skip (per-lane
+    #     in the Pallas kernel, batch-max-bounded on the jnp path) instead
+    #     of lowering the per-block `cond` to a capacity-bound `select`.
+    #     False restores the legacy select-lowered vmap (benchmarks).
+    #     NOTE: custom_vmap has no JVP rule, so the wrapped (non-concat)
+    #     attend_segments paths cannot be differentiated while this is
+    #     True — training differentiates models.attention.attend, never
+    #     attend_segments; set False to grad through the inference paths ---
+    attn_lane_batched: bool = True
 
     # ------------------------------------------------------------------
     @property

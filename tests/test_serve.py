@@ -252,6 +252,103 @@ def test_engine_stream_sessions(tiny_cfg, params):
         eng.ingest("u", toks[0])   # wrong op kind for a stream session
 
 
+def _stream_cfg(tiny_cfg):
+    from repro.models.config import CCMConfig
+    return tiny_cfg.replace(ccm=CCMConfig(
+        comp_len=2, max_steps=4, stream_window=16, stream_sink=2,
+        stream_chunk=4, stream_mem_slots=4))
+
+
+def test_stream_lanes_eviction_gated_per_lane(tiny_cfg, params):
+    """stream_step_lanes: a batch where ONE lane overflows must (a) match
+    running each lane through the single-session stream_step bit-exactly
+    in every state leaf, (b) leave non-overflowing lanes' memory and
+    counters untouched by the masked eviction, and (c) keep the whole
+    eviction/compression pass under a REAL `cond` (predicated on the
+    batch-level any-lane-pending scalar, not a per-lane select)."""
+    from repro.core import streaming as ST
+    cfg = _stream_cfg(tiny_cfg)
+    key = jax.random.PRNGKey(5)
+    warm = [4, 1, 0]   # win_len 16 / 4 / 0 -> only lane 0 overflows on +4
+    lanes = []
+    for i, w in enumerate(warm):
+        st = ST.init_stream_state(cfg, 1)
+        for j in range(w):
+            t = jax.random.randint(jax.random.fold_in(key, i * 10 + j),
+                                   (1, 4), 0, 128)
+            _, st = ST.stream_step(params, cfg, st, t)
+        lanes.append(st)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+    toks = jax.random.randint(jax.random.fold_in(key, 99), (3, 1, 4),
+                              0, 128)
+    pending = ST.eviction_pending(cfg, stacked, jnp.full((3,), 4))
+    assert list(np.asarray(pending)) == [True, False, False]
+    fn = jax.jit(lambda s, t: ST.stream_step_lanes(params, cfg, s, t))
+    lg, new = fn(stacked, toks)
+    for i in range(3):
+        lg1, st1 = ST.stream_step(params, cfg, lanes[i], toks[i])
+        np.testing.assert_allclose(np.asarray(lg[i]), np.asarray(lg1),
+                                   atol=2e-5, rtol=0)
+        lane_new = jax.tree.map(lambda a: a[i], new)
+        for g, w in zip(jax.tree.leaves(lane_new), jax.tree.leaves(st1)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # non-overflow lanes: compression never touched memory or counters
+    for i in (1, 2):
+        np.testing.assert_array_equal(np.asarray(new.mem.k[i]),
+                                      np.asarray(stacked.mem.k[i]))
+        np.testing.assert_array_equal(np.asarray(new.mem.slots[i]),
+                                      np.asarray(stacked.mem.slots[i]))
+        assert int(new.pos[i]) == int(stacked.pos[i]) + 4
+    jp = str(jax.make_jaxpr(
+        lambda s, t: ST.stream_step_lanes(params, cfg, s, t))(stacked, toks))
+    assert "cond[" in jp
+
+
+def test_stream_lanes_no_overflow_skips_compression(tiny_cfg, params):
+    """A batch with NO pending lane leaves every memory leaf bit-identical
+    to the input — the gated branch was the identity."""
+    from repro.core import streaming as ST
+    cfg = _stream_cfg(tiny_cfg)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[ST.init_stream_state(cfg, 1) for _ in range(3)])
+    toks = jax.random.randint(jax.random.PRNGKey(7), (3, 1, 4), 0, 128)
+    _, new = ST.stream_step_lanes(params, cfg, stacked, toks)
+    for g, w in zip(jax.tree.leaves(new.mem), jax.tree.leaves(stacked.mem)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_stream_lanes_ragged_matches_unpadded(tiny_cfg, params):
+    """Ragged stream lanes through stream_step_lanes: a lane padded into
+    a larger token bucket (valid_len < padded width) must match the
+    unpadded single-session run bit-exactly — including the per-lane
+    eviction trigger, which fires on valid lengths, not bucket widths."""
+    from repro.core import streaming as ST
+    cfg = _stream_cfg(tiny_cfg)
+    key = jax.random.PRNGKey(9)
+    # warm lane 0 to the brink: 4 more VALID tokens would overflow, but
+    # its next request is only 2 valid tokens -> must NOT evict
+    lanes = []
+    for i, w in enumerate([4, 2]):
+        st = ST.init_stream_state(cfg, 1)
+        for j in range(w):
+            t = jax.random.randint(jax.random.fold_in(key, i * 10 + j),
+                                   (1, 4), 0, 128)
+            _, st = ST.stream_step(params, cfg, st, t)
+        lanes.append(st)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+    toks = jax.random.randint(jax.random.fold_in(key, 77), (2, 1, 4), 0, 128)
+    vls = jnp.array([2, 4], jnp.int32)
+    lg, new = ST.stream_step_lanes(params, cfg, stacked, toks, lengths=vls)
+    for i in range(2):
+        vl = int(vls[i])
+        lg1, st1 = ST.stream_step(params, cfg, lanes[i], toks[i][:, :vl])
+        np.testing.assert_allclose(np.asarray(lg[i][:, :vl]),
+                                   np.asarray(lg1), atol=2e-5, rtol=0)
+        # counters (incl. the eviction trigger) exact; written float rows
+        # to tolerance (padded-shape programs fuse matmuls differently)
+        _assert_state_close(jax.tree.map(lambda a: a[i], new), st1)
+
+
 def test_stream_batches_capped_by_stream_arena(tiny_cfg, params):
     """A stream batch must fit the (smaller) stream arena even when the
     online arena is larger — regression for the shared max_batch cap."""
