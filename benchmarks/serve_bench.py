@@ -17,16 +17,32 @@ and reports compile-cache churn and mean batch occupancy for both; the
 ragged scheduler must compile strictly fewer programs at higher
 occupancy on identical traffic.
 
+A third scenario drives OPEN-LOOP admission (arrival rate > service
+rate): requests arrive faster than `run(max_batches=1)` can serve them,
+against a bounded queue (`max_queued_tokens`) with the
+``shed-lowest-priority`` policy and an arena smaller than the session
+population (constant offload/restore churn).  It reports shed rate,
+queue depth, and tok/s for per-victim vs batched vs batched+async
+offload on IDENTICAL traffic (admission is deterministic control
+plane, so the shed/queue numbers must match across modes — only the
+transfer batching changes throughput).
+
 Also checks the LRU offload path end-to-end: a session offloaded to host
 and restored must reproduce its query logits EXACTLY (allclose) vs a
 never-offloaded run.
 
+Results are written to BENCH_serve.json (``--out``; committed per PR,
+CI uploads a ``--smoke`` run as an artifact — absolute numbers are
+container noise, ratios and invariants are the signal).
+
 Weights are random — throughput and state-exactness don't need a trained
 adapter (accuracy benchmarks live in benchmarks/tables.py).
 
-    PYTHONPATH=src python benchmarks/serve_bench.py
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] \
+        [--out BENCH_serve.json]
 """
 import argparse
+import json
 import sys
 import time
 
@@ -106,7 +122,7 @@ def run_engine(params, cfg, work, cache_len, warm=True):
         for t in range(len(work[0]["chunks"])):
             for s, w in enumerate(work):
                 eng.ingest(f"u{rep}_{s}", w["chunks"][t])
-        rr = [eng.query(f"u{rep}_{s}", w["query"])
+        rr = [eng.query(f"u{rep}_{s}", w["query"]).request
               for s, w in enumerate(work)]
         eng.run()
         dt = time.perf_counter() - t0
@@ -147,7 +163,7 @@ def run_mixed(params, cfg, work, cache_len, token_buckets):
         for s, w in enumerate(work):
             eng.ingest(f"m{s}", w["chunks"][t])
         eng.run()
-    reqs = [eng.query(f"m{s}", w["query"]) for s, w in enumerate(work)]
+    reqs = [eng.query(f"m{s}", w["query"]).request for s, w in enumerate(work)]
     eng.run()
     dt = time.perf_counter() - t0
     return dt, [np.asarray(r.result) for r in reqs], eng
@@ -171,10 +187,59 @@ def offload_roundtrip_check(params, cfg, work, cache_len):
         eng.run()
         if do_offload:
             eng.offload_session("u")
-        r = eng.query("u", w["query"])
+        r = eng.query("u", w["query"]).request
         eng.run()
         outs.append(np.asarray(r.result))
     return np.allclose(outs[0], outs[1], atol=0.0)
+
+
+def run_open_loop(params, cfg, *, mode, rounds, arrivals_per_round=4,
+                  n_sessions=16, n_slots=5, max_resident=4,
+                  max_queued_tokens=96, seed=11):
+    """Open-loop admission: ``arrivals_per_round`` requests land per
+    round but only ONE batch is served per round, so the queue saturates
+    and the bounded-ingress shed policy engages; a session population
+    4x the resident budget keeps the offload path hot.  ``mode`` picks
+    the offload transfer strategy under test."""
+    batched = mode != "per_victim"
+    eng = ServeEngine(params, cfg, n_slots=n_slots,
+                      max_resident=max_resident, cache_len=64,
+                      batch_buckets=(1, 2, 4),
+                      admission_policy="shed-lowest-priority",
+                      max_queued_tokens=max_queued_tokens,
+                      batched_offload=batched,
+                      async_offload=(mode == "batched_async"))
+    rng = np.random.RandomState(seed)
+    for s in range(n_sessions):
+        eng.create_session(f"u{s}")
+    depths = []
+    submitted = 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for _ in range(arrivals_per_round):
+            s = rng.randint(n_sessions)
+            ln = (3, 5, 8)[rng.randint(3)]
+            toks = rng.randint(0, cfg.vocab_size, size=ln).astype(np.int32)
+            eng.ingest(f"u{s}", toks, priority=int(rng.randint(3)))
+            submitted += 1
+        eng.run(max_batches=1)          # service rate < arrival rate
+        depths.append(eng.queue_depth())
+    eng.run()                           # close the loop: drain the rest
+    wall = time.perf_counter() - t0
+    st = eng.admission.stats
+    shed = st["shed_new"] + st["shed_victims"]
+    toks_served = sum(s_["tokens"] for s_ in eng.stats.values())
+    offloads = sum(s_.n_offloads
+                   for s_ in eng._mgr["online"].sessions.values())
+    return {
+        "mode": mode, "submitted": submitted, "shed": shed,
+        "shed_rate": shed / submitted,
+        "served": submitted - shed,
+        "queue_depth_mean": float(np.mean(depths)),
+        "queue_depth_max": int(max(depths)),
+        "offloads": offloads,
+        "tok_per_s": toks_served / wall, "wall_s": wall,
+    }
 
 
 def main():
@@ -185,7 +250,14 @@ def main():
     ap.add_argument("--qlen", type=int, default=4)
     ap.add_argument("--mixed-sessions", type=int, default=24,
                     help="sessions in the mixed-length ragged scenario")
+    ap.add_argument("--open-rounds", type=int, default=120,
+                    help="arrival rounds in the open-loop scenario")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI artifact run")
+    ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
+    if args.smoke:
+        args.sessions, args.mixed_sessions, args.open_rounds = 12, 8, 40
 
     # serve-bench config: half-width bench model so the per-op dispatch
     # floor (what continuous batching amortizes) is visible on a 2-core
@@ -250,6 +322,54 @@ def main():
               f"{prog_e} programs, occ {occ_e:.2f}")
     C.csv_row("serve_mixed_ragged", t_ragged * 1e6,
               f"{prog_r} programs, occ {occ_r:.2f}")
+
+    # -- open-loop admission: arrival rate > service rate ---------------
+    open_loop = []
+    for mode in ("per_victim", "batched", "batched_async"):
+        r = run_open_loop(params, cfg, mode=mode, rounds=args.open_rounds)
+        open_loop.append(r)
+        print(f"\nopen-loop [{mode:13s}]: shed rate {r['shed_rate']:.2f} "
+              f"({r['shed']}/{r['submitted']}), queue depth "
+              f"mean {r['queue_depth_mean']:.1f} max {r['queue_depth_max']}, "
+              f"{r['offloads']} offloads, {r['tok_per_s']:7.0f} tok/s")
+        C.csv_row(f"serve_open_{mode}", r["wall_s"] * 1e6,
+                  f"shed {r['shed_rate']:.2f}, {r['tok_per_s']:.0f} tok/s")
+    # identical traffic -> identical control plane across offload modes;
+    # recorded in the JSON so the CI artifact carries the invariant
+    deterministic = all(
+        r["shed"] == open_loop[0]["shed"]
+        and r["queue_depth_max"] == open_loop[0]["queue_depth_max"]
+        for r in open_loop)
+    if not deterministic:
+        print("WARNING: open-loop control plane diverged across offload "
+              "modes (must be deterministic on identical traffic)")
+    base, best = open_loop[0]["tok_per_s"], max(
+        r["tok_per_s"] for r in open_loop[1:])
+    print(f"batched-offload speedup under churn: {best / base:.2f}x")
+
+    results = {
+        "config": {"sessions": args.sessions, "turns": args.turns,
+                   "chunk": args.chunk, "qlen": args.qlen,
+                   "mixed_sessions": args.mixed_sessions,
+                   "open_rounds": args.open_rounds, "smoke": args.smoke},
+        "continuous_batching": {
+            "naive_tok_per_s": tok_total / t_naive,
+            "engine_tok_per_s": tok_total / t_eng,
+            "speedup": t_naive / t_eng,
+            "engine_matches_naive": bool(ok),
+            "offload_roundtrip_exact": bool(exact)},
+        "mixed_length": {
+            "exact": {"batches": bat_e, "programs": prog_e,
+                      "occupancy": occ_e},
+            "ragged": {"batches": bat_r, "programs": prog_r,
+                       "occupancy": occ_r},
+            "ragged_matches_exact": bool(same)},
+        "open_loop": open_loop,
+        "open_loop_control_plane_deterministic": deterministic,
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {args.out}")
 
 
 if __name__ == "__main__":

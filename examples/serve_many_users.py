@@ -66,7 +66,8 @@ def main():
                 eng.ingest(f"u{u}", chunk)
                 progress[u] = t + 1
             elif u not in queries:
-                queries[u] = eng.query(f"u{u}", toks[u, args.turns * sl:])
+                queries[u] = eng.query(
+                    f"u{u}", toks[u, args.turns * sl:]).request
         eng.run()
         mgr = eng._mgr["online"]
         offloads = sum(s.n_offloads for s in mgr.sessions.values())

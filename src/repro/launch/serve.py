@@ -20,6 +20,7 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import inference as I
@@ -205,6 +206,29 @@ def make_arena_step(cfg: ModelConfig, op: str,
             slabs, state, new)
         return out, slabs
     return jax.jit(fn, donate_argnums=(1,))
+
+
+def make_null_step(cfg: ModelConfig, op: str, ragged: bool = False
+                   ) -> Callable:
+    """Control-plane-only arena step with `make_arena_step`'s exact
+    call contract but NO model compute: returns zero logits of the
+    contract shape and the slabs untouched.
+
+    The serve-simulation harness (`tests/simulation.py`) injects this
+    as the engine's ``step_factory`` so thousands of fuzzed
+    admit->schedule->offload->restore->cancel traces exercise the REAL
+    scheduler/arena/session/admission objects — free-list moves, host
+    offload transfers, verdicts — without paying model FLOPs or jit
+    compiles per trace."""
+    del ragged
+
+    def fn(params, slabs, ids, tokens, lengths):
+        del params, ids, lengths
+        if op == "ingest":
+            return None, slabs
+        B, _, L = tokens.shape
+        return np.zeros((B, 1, L, cfg.vocab_size), np.float32), slabs
+    return fn
 
 
 def _jit_with_specs(fn, cfg: ModelConfig, dist: DistContext,

@@ -6,17 +6,28 @@ device feasible.  This package is that serving layer:
 
   arena.py     — fixed-shape device slabs of per-session state with a
                  free-list and jitted pack/unpack (gather/scatter)
+  admission.py — bounded ingress: per-tenant quotas (resident slots,
+                 queued tokens), overflow policies (block /
+                 shed-lowest-priority / reject-new), structured
+                 Admitted | Queued | Shed verdicts
   scheduler.py — continuous batching: queue per-session requests, group
                  by op kind + token bucket (ragged lanes carry a
                  valid_len; priorities age to prevent starvation), pad
                  to bucketed batch sizes
-  session.py   — session lifecycle + LRU host offload of cold sessions
-  engine.py    — the driver loop wiring scheduler -> jitted steps
+  session.py   — session lifecycle + batched/async LRU host offload
+                 (restore-vs-recompute cost model)
+  engine.py    — the driver loop wiring admission -> scheduler ->
+                 jitted steps
 """
+from repro.serve.admission import (Admitted, AdmissionController, Queued,
+                                   Shed, TenantQuota, Verdict)
 from repro.serve.arena import ArenaFull, SessionArena
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
-from repro.serve.session import SessionManager
+from repro.serve.session import (OffloadCostModel, OffloadResult,
+                                 SessionManager)
 
-__all__ = ["ArenaFull", "SessionArena", "ServeEngine", "Request",
-           "ScheduledBatch", "Scheduler", "SessionManager"]
+__all__ = ["Admitted", "AdmissionController", "ArenaFull",
+           "OffloadCostModel", "OffloadResult", "Queued", "Request",
+           "ScheduledBatch", "Scheduler", "ServeEngine", "SessionArena",
+           "SessionManager", "Shed", "TenantQuota", "Verdict"]

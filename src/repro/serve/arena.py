@@ -35,7 +35,28 @@ from repro.models.config import ModelConfig
 
 
 class ArenaFull(RuntimeError):
-    """No free session slots (caller should offload or shed load)."""
+    """No free session slots (caller should offload or shed load).
+
+    Internal to the serve package: `ServeEngine` admission control
+    guarantees this never escapes `submit`/`run` (batches are capped at
+    evictable capacity — see `serve.admission`); it can still surface
+    from direct `SessionArena`/`SessionManager` misuse."""
+
+
+# Shared across every arena instance: jax.jit caches by function
+# identity, so per-instance `jax.jit(...)` wrappers would recompile the
+# same gather/scatter for every arena built (one per fuzzed trace in
+# tests/simulation.py, one per engine elsewhere).
+@jax.jit
+def _pack_slabs(slabs, ids):
+    return jax.tree.map(lambda slab: ops.session_gather(slab, ids), slabs)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slabs(slabs, ids, state):
+    return jax.tree.map(
+        lambda slab, rows: ops.session_scatter(slab, ids, rows),
+        slabs, state)
 
 
 def online_template(cfg: ModelConfig, cache_len: int,
@@ -64,8 +85,8 @@ class SessionArena:
         self._free = deque(range(n_slots))
         self._live = set()
         self._dirty = set()           # slots that have ever been written
-        self._pack = jax.jit(self._pack_fn)
-        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self._pack = _pack_slabs
+        self._scatter = _scatter_slabs
 
     # -- allocation ----------------------------------------------------
     @classmethod
@@ -98,17 +119,29 @@ class SessionArena:
         self._live.remove(slot)
         self._free.append(slot)
 
+    def consistency_errors(self) -> list:
+        """Free-list / live-set invariant violations (empty = healthy):
+        no slot both free and live, no duplicates in the free list, and
+        every slot accounted exactly once.  The serve property suite
+        asserts this after every simulated event (double-free / leak
+        detection)."""
+        errs = []
+        free = list(self._free)
+        if len(free) != len(set(free)):
+            errs.append(f"duplicate slots in free list: {sorted(free)}")
+        overlap = set(free) & self._live
+        if overlap:
+            errs.append(f"slots both free and live: {sorted(overlap)}")
+        missing = set(range(self.n_slots)) - set(free) - self._live
+        if missing:
+            errs.append(f"slots leaked (neither free nor live): "
+                        f"{sorted(missing)}")
+        bogus = (set(free) | self._live) - set(range(self.n_slots))
+        if bogus:
+            errs.append(f"out-of-range slots tracked: {sorted(bogus)}")
+        return errs
+
     # -- batched pack/unpack -------------------------------------------
-    @staticmethod
-    def _pack_fn(slabs, ids):
-        return jax.tree.map(lambda slab: ops.session_gather(slab, ids), slabs)
-
-    @staticmethod
-    def _scatter_fn(slabs, ids, state):
-        return jax.tree.map(
-            lambda slab, rows: ops.session_scatter(slab, ids, rows),
-            slabs, state)
-
     def pack(self, slot_ids: Sequence[int]):
         """Gather slots into a batch: leaves (B,) + template shape."""
         ids = jnp.asarray(slot_ids, jnp.int32)

@@ -1,11 +1,18 @@
-"""Multi-tenant serve engine: scheduler -> arena -> jitted session steps.
+"""Multi-tenant serve engine: admission -> scheduler -> arena -> steps.
 
-Drives the whole subsystem: requests queue in the `Scheduler`, `run`
-drains them batch by batch — activate the batch's sessions (LRU
-restore/offload via `SessionManager`), then one fused jitted program
-per batch (`launch.serve.make_arena_step`) gathers their arena rows,
-runs the vmapped op, and scatters the updated rows back, fulfilling the
-requests.  Per-op stats (tokens/s, batches, padding waste),
+Drives the whole subsystem: submits pass ADMISSION CONTROL
+(`serve.admission`: bounded ingress, per-tenant quotas, overflow
+policy) and return a structured ``Admitted | Queued | Shed`` verdict —
+`ArenaFull` never reaches callers; batches are capped at evictable
+capacity by construction (scheduler ``max_batch`` <= ``max_resident``
+per kind, per-tenant batch lanes <= the tenant's resident quota).
+`run` drains the queue batch by batch — activate the batch's sessions
+(batched LRU restore/offload via `SessionManager`, tenant-quota-aware),
+then one fused jitted program per batch (`launch.serve.make_arena_step`)
+gathers their arena rows, runs the vmapped op, and scatters the updated
+rows back, fulfilling the requests.  After every popped batch the
+backpressure backlog is pumped, so blocked submits drain as soon as
+queue capacity frees.  Per-op stats (tokens/s, batches, padding waste),
 arena occupancy and compile counts are tracked for the benchmark
 harness.
 
@@ -16,18 +23,22 @@ their state templates differ; ``stream_slots=0`` skips the second arena.
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import serve as SRV
-from repro.launch.specs import SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS
+from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
+                                token_bucket)
 from repro.models.config import ModelConfig
+from repro.serve.admission import (AdmissionController, TenantQuota,
+                                   Verdict)
 from repro.serve.arena import SessionArena
 from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
-from repro.serve.session import SessionManager
+from repro.serve.session import (OffloadCostModel, OffloadResult,
+                                 SessionManager)
 
 _OP_STATE = {"ingest": "online", "query": "online", "stream": "stream"}
 
@@ -38,12 +49,38 @@ class ServeEngine:
                  max_resident: Optional[int] = None, stream_slots: int = 0,
                  stream_max_resident: Optional[int] = None,
                  batch_buckets: Sequence[int] = SERVE_BATCH_BUCKETS,
-                 token_buckets="auto", aging: Optional[int] = 32):
+                 token_buckets="auto", aging: Optional[int] = 32,
+                 admission_policy: str = "block",
+                 max_queued_tokens: Optional[int] = None,
+                 max_backlog: Optional[int] = None,
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None,
+                 default_quota: Optional[TenantQuota] = None,
+                 batched_offload: bool = True,
+                 async_offload: bool = False,
+                 offload_cost_model: Optional[OffloadCostModel] = None,
+                 step_factory: Optional[Callable] = None):
         """``token_buckets``: ragged-batching token buckets ("auto" picks
         `launch.specs.SERVE_TOKEN_BUCKETS` for attention archs and exact-
         length grouping for SSM/hybrid; None forces exact lengths).
         ``aging``: scheduler starvation knob — a waiting request's
-        effective priority improves by one per ``aging`` popped batches."""
+        effective priority improves by one per ``aging`` popped batches.
+
+        Admission (`serve.admission`): ``admission_policy`` is one of
+        ``block`` / ``shed-lowest-priority`` / ``reject-new``;
+        ``max_queued_tokens`` bounds the global queue
+        (``max_backlog`` bounds the block-policy backlog entries);
+        ``tenant_quotas`` / ``default_quota`` bound resident slots and
+        queued tokens per tenant.  Defaults are unbounded — every
+        submit returns ``Admitted``.
+
+        Offload (`serve.session`): ``batched_offload`` moves k victims
+        per transfer, ``async_offload`` overlaps the device->host copy
+        with scheduling, ``offload_cost_model`` drops state and replays
+        request history when that is cheaper than the round trip.
+
+        ``step_factory(cfg, op, masked)``: override the fused arena step
+        builder (default `launch.serve.make_arena_step`); the serve
+        simulation harness injects a control-plane-only null step."""
         self.params = params
         self.cfg = cfg
         self.cache_len = cache_len
@@ -55,10 +92,18 @@ class ServeEngine:
                 f"token buckets need masked lanes, unsupported for "
                 f"family {cfg.family!r}")
         self.ragged = token_buckets is not None
+        self._token_buckets = token_buckets
+        self._step_factory = step_factory or SRV.make_arena_step
+        mgr_kw = dict(batched_offload=batched_offload,
+                      async_offload=async_offload,
+                      cost_model=offload_cost_model,
+                      resident_quota_of=self._resident_quota_of,
+                      pack_buckets=batch_buckets)
         self._mgr: Dict[str, SessionManager] = {
             "online": SessionManager(
                 SessionArena.for_online(cfg, n_slots, cache_len, mem_slots),
-                max_resident),
+                max_resident, replay_fn=self._make_replay("online"),
+                **mgr_kw),
         }
         if stream_slots:
             c = cfg.ccm
@@ -71,7 +116,8 @@ class ServeEngine:
                     f"({c.stream_window})")
             self._mgr["stream"] = SessionManager(
                 SessionArena.for_stream(cfg, stream_slots),
-                stream_max_resident)
+                stream_max_resident, replay_fn=self._make_replay("stream"),
+                **mgr_kw)
         caps = {op: self._mgr[kind].max_resident
                 for op, kind in _OP_STATE.items() if kind in self._mgr}
         # a stream op must never pad past the eviction quantum — one
@@ -79,8 +125,14 @@ class ServeEngine:
         self.scheduler = Scheduler(
             batch_buckets, max_batch=caps, token_buckets=token_buckets,
             max_token_len={"stream": cfg.ccm.stream_chunk}, aging=aging)
+        self.admission = AdmissionController(
+            self.scheduler, policy=admission_policy,
+            max_queued_tokens=max_queued_tokens, quotas=tenant_quotas,
+            default_quota=default_quota, on_shed=self._on_shed,
+            max_backlog=max_backlog)
         self._steps = {}               # op kind -> jitted fn
         self._kind: Dict[str, str] = {}   # sid -> 'online' | 'stream'
+        self._tenant: Dict[str, str] = {}  # sid -> tenant
         self._cached: Dict[str, int] = {}  # sid -> KV-cache tokens used
         self._undelivered = []         # [(requests, device out)] per batch
         self.stats_wall = 0.0
@@ -89,30 +141,53 @@ class ServeEngine:
                           "batches": 0, "seconds": 0.0}
                       for k in ("ingest", "query", "stream")}
 
+    def _resident_quota_of(self, tenant: str) -> Optional[int]:
+        return self.admission.quota(tenant).max_resident
+
     # -- session lifecycle --------------------------------------------
-    def create_session(self, sid: str, kind: str = "online") -> None:
+    def create_session(self, sid: str, kind: str = "online",
+                       tenant: str = "default") -> None:
         if kind not in self._mgr:
             raise ValueError(
                 f"no arena for session kind {kind!r} "
                 "(construct the engine with stream_slots > 0?)")
-        self._mgr[kind].create(sid)
+        self._mgr[kind].create(sid, tenant)
         self._kind[sid] = kind
+        self._tenant[sid] = tenant
 
     def close_session(self, sid: str) -> None:
-        self.scheduler.cancel(sid)      # flags the requests `cancelled`
+        self.admission.cancel(sid)      # backlog + queue, flags `cancelled`
         self._cached.pop(sid, None)
+        self._tenant.pop(sid, None)
         self._mgr[self._kind.pop(sid)].close(sid)
 
-    def offload_session(self, sid: str) -> None:
-        """Explicitly push a session's state to host (tests/benchmarks)."""
-        self._mgr[self._kind[sid]].offload(sid)
+    def offload_session(self, sid: str) -> OffloadResult:
+        """Explicitly push a session's state to host.  A no-op with a
+        telling status for unknown / already-offloaded / never-activated
+        sessions — never raises."""
+        kind = self._kind.get(sid)
+        if kind is None:
+            return OffloadResult(sid, "unknown")
+        return self._mgr[kind].offload_batch([sid])[0]
 
     # -- request submission -------------------------------------------
-    def _submit(self, sid: str, op: str, tokens, priority: int) -> Request:
+    def _on_shed(self, req: Request) -> None:
+        """Admission dropped a request: release any resources its
+        submit-time validation reserved (KV-cache token accounting)."""
+        if req.kind == "query" and req.sid in self._cached:
+            # plain decrement: every shed query (newcomer or queued
+            # victim) carries a reservation made at its own submit
+            self._cached[req.sid] -= req.token_len
+
+    def _submit(self, sid: str, op: str, tokens, priority: int) -> Verdict:
         kind = self._kind[sid]
         if _OP_STATE[op] != kind:
             raise ValueError(f"op {op!r} invalid for {kind!r} session {sid!r}")
-        n = int(np.asarray(tokens).size)
+        # make (and shape-validate) the request BEFORE any reservation —
+        # a validation error must raise with zero side effects
+        req = self.scheduler.make_request(sid, op, tokens, priority,
+                                          tenant=self._tenant[sid])
+        n = req.token_len
         if op == "stream" and n > self.cfg.ccm.stream_chunk:
             # mirror the stream_step trace-time guard HERE, before the
             # request enters the queue — a trace error mid-drain would
@@ -124,7 +199,10 @@ class ServeEngine:
         if op == "query":
             # queries append their tokens to the session's KV cache; the
             # cache write clamps silently past cache_len, corrupting
-            # earlier rows — admit only what fits (counts queued work)
+            # earlier rows — admit only what fits (counts queued work).
+            # The reservation happens BEFORE admission so _on_shed can
+            # reverse it symmetrically whether the shed request is this
+            # one (shed at submit) or a queued victim it displaces.
             used = self._cached.get(sid, 0)
             if used + n > self.cache_len:
                 raise ValueError(
@@ -133,15 +211,15 @@ class ServeEngine:
                     f"{self.cache_len}; close the session or build the "
                     "engine with a larger cache_len")
             self._cached[sid] = used + n
-        return self.scheduler.submit(sid, op, tokens, priority)
+        return self.admission.submit_request(req)
 
-    def ingest(self, sid, tokens, priority: int = 0) -> Request:
+    def ingest(self, sid, tokens, priority: int = 0) -> Verdict:
         return self._submit(sid, "ingest", tokens, priority)
 
-    def query(self, sid, tokens, priority: int = 0) -> Request:
+    def query(self, sid, tokens, priority: int = 0) -> Verdict:
         return self._submit(sid, "query", tokens, priority)
 
-    def stream(self, sid, tokens, priority: int = 0) -> Request:
+    def stream(self, sid, tokens, priority: int = 0) -> Verdict:
         return self._submit(sid, "stream", tokens, priority)
 
     # -- execution -----------------------------------------------------
@@ -152,8 +230,34 @@ class ServeEngine:
         nothing; only genuinely ragged batches run the masked variant."""
         key = (op, masked)
         if key not in self._steps:
-            self._steps[key] = SRV.make_arena_step(self.cfg, op, masked)
+            self._steps[key] = self._step_factory(self.cfg, op, masked)
         return self._steps[key]
+
+    def _make_replay(self, state_kind: str):
+        """Replay a recompute-dropped session's request history into its
+        (zeroed) slot: one B=1 fused step per recorded request, padded
+        into the same token buckets as live traffic so replay shares the
+        serve programs instead of compiling exact-length ones."""
+        def replay(sid: str, slot: int, history) -> None:
+            mgr = self._mgr[state_kind]
+            arena = mgr.arena
+            ids = jnp.asarray([slot], jnp.int32)
+            for op, toks in history:
+                flat = np.asarray(toks, np.int32).reshape(-1)
+                L = flat.size
+                tl = token_bucket(L, self._token_buckets) if self.ragged \
+                    else L
+                if op == "stream":
+                    tl = min(tl, self.cfg.ccm.stream_chunk)
+                tl = max(tl, L)
+                buf = np.zeros((1, 1, tl), np.int32)
+                buf[0, 0, :L] = flat
+                masked = self.ragged and tl != L
+                step = self._step(op, masked)
+                _, arena.slabs = step(self.params, arena.slabs, ids, buf,
+                                      np.asarray([L], np.int32))
+            arena.mark_dirty([slot])
+        return replay
 
     def _run_batch(self, batch: ScheduledBatch) -> None:
         mgr = self._mgr[_OP_STATE[batch.kind]]
@@ -188,6 +292,7 @@ class ServeEngine:
         self._undelivered.append((batch.requests, out))
         for r in batch.requests:
             mgr.sessions[r.sid].n_ops += 1
+            mgr.record(r.sid, r.kind, r.tokens[0])
         s = self.stats[batch.kind]
         s["requests"] += len(batch.requests)
         s["tokens"] += sum(batch.valid_lens)
@@ -200,15 +305,25 @@ class ServeEngine:
 
     def run(self, max_batches: Optional[int] = None) -> int:
         """Drain the queue (or up to ``max_batches``); returns batches
-        run.  Synchronizes once at the end, so per-kind ``seconds`` are
-        dispatch times and the drain's wall clock is the true cost."""
+        run.  After every popped batch the admission backlog is pumped —
+        backpressured submits enter the queue as soon as their tokens
+        fit — and the drain only ends once both the queue AND the
+        pumpable backlog are empty.  Synchronizes once at the end, so
+        per-kind ``seconds`` are dispatch times and the drain's wall
+        clock is the true cost."""
         n = 0
         t0 = time.perf_counter()
         while max_batches is None or n < max_batches:
-            batch = self.scheduler.next_batch()
+            # recomputed per pop: pumped backlog entries can introduce
+            # tenants that were not queued when the drain started
+            batch = self.scheduler.next_batch(*self.admission.lane_caps())
             if batch is None:
+                if self.admission.pump():
+                    continue
                 break
+            self.admission.note_popped(batch.requests)
             self._run_batch(batch)
+            self.admission.pump()
             n += 1
         if n:
             for reqs, out in self._undelivered:
@@ -221,6 +336,12 @@ class ServeEngine:
                         if out_np is not None else None
                     r.done = True
             self._undelivered.clear()
+        for m in self._mgr.values():
+            # unconditional: async offload_session() transfers may be in
+            # flight even when this drain popped zero batches — leaving
+            # them unbarriered would pin the stacked host buffers forever
+            m.sync()
+        if n:
             for m in self._mgr.values():
                 jax.block_until_ready(jax.tree.leaves(m.arena.slabs)[0])
             self.stats_wall += time.perf_counter() - t0
@@ -255,6 +376,11 @@ class ServeEngine:
 
     def resident(self) -> Dict[str, int]:
         return {k: m.n_resident for k, m in self._mgr.items()}
+
+    def queue_depth(self) -> int:
+        """Requests waiting anywhere: scheduler queue + admission
+        backlog (the open-loop benchmark's saturation metric)."""
+        return self.scheduler.pending + len(self.admission.backlog)
 
     def throughput(self) -> float:
         """Overall tokens/s across all drains (synced wall clock).

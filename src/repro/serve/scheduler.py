@@ -47,11 +47,13 @@ class Request:
     kind: str                      # 'ingest' | 'query' | 'stream'
     tokens: np.ndarray             # (1, token_len) int32
     priority: int = 0              # lower drains first
-    seq: int = -1                  # submission order (set by Scheduler)
-    round: int = 0                 # scheduler round at submit (aging clock)
+    tenant: str = "default"        # admission-quota group (serve.admission)
+    seq: int = -1                  # submission order (set at enqueue)
+    round: int = 0                 # scheduler round at enqueue (aging clock)
     result: Any = None             # logits for query/stream; None for ingest
     done: bool = False
     cancelled: bool = False        # dropped by close_session, never ran
+    shed: bool = False             # dropped by admission overflow, never ran
 
     @property
     def token_len(self) -> int:
@@ -113,8 +115,12 @@ class Scheduler:
         self._seq = itertools.count()
         self._round = 0
 
-    def submit(self, sid: str, kind: str, tokens, priority: int = 0
-               ) -> Request:
+    def make_request(self, sid: str, kind: str, tokens, priority: int = 0,
+                     tenant: str = "default") -> Request:
+        """Validate and wrap a submission WITHOUT queueing it — the
+        admission controller holds backpressured requests outside the
+        queue and enqueues them when capacity frees (``seq`` is assigned
+        at enqueue time so drain order follows admission order)."""
         if kind not in _KINDS:
             raise ValueError(f"unknown op kind {kind!r}")
         arr = np.asarray(tokens)
@@ -127,10 +133,20 @@ class Scheduler:
         # copy: the queue holds tokens until run(); a no-copy view of a
         # caller buffer would alias later writes
         toks = np.array(arr, np.int32, copy=True).reshape(1, -1)
-        req = Request(sid=sid, kind=kind, tokens=toks, priority=priority,
-                      seq=next(self._seq), round=self._round)
+        return Request(sid=sid, kind=kind, tokens=toks, priority=priority,
+                       tenant=tenant)
+
+    def enqueue(self, req: Request) -> Request:
+        """Admit a made request into the queue (stamps seq + aging round)."""
+        req.seq = next(self._seq)
+        req.round = self._round
         self._queue.append(req)
         return req
+
+    def submit(self, sid: str, kind: str, tokens, priority: int = 0,
+               tenant: str = "default") -> Request:
+        return self.enqueue(
+            self.make_request(sid, kind, tokens, priority, tenant))
 
     @property
     def pending(self) -> int:
@@ -146,6 +162,31 @@ class Scheduler:
         if not self.aging:
             return req.priority
         return req.priority - (self._round - req.round) // self.aging
+
+    def queued(self, tenant: Optional[str] = None,
+               sid: Optional[str] = None) -> List[Request]:
+        """Queued requests, optionally filtered by tenant / session."""
+        return [r for r in self._queue
+                if (tenant is None or r.tenant == tenant)
+                and (sid is None or r.sid == sid)]
+
+    def drop(self, reqs: Sequence[Request]) -> None:
+        """Remove specific queued requests (admission shed victims).  The
+        caller flags the outcome on the requests; unknown entries are
+        ignored."""
+        ids = set(id(r) for r in reqs)
+        self._queue = [r for r in self._queue if id(r) not in ids]
+
+    def session_tails(self, reqs: Sequence[Request]) -> List[Request]:
+        """Subset of ``reqs`` that are their session's LAST queued
+        request.  Shedding only ever removes a session-program suffix —
+        dropping a middle request would leave later ops of the same
+        session running against a state that skipped one."""
+        last_seq = {}
+        for r in self._queue:
+            if r.sid not in last_seq or r.seq > last_seq[r.sid]:
+                last_seq[r.sid] = r.seq
+        return [r for r in reqs if last_seq.get(r.sid) == r.seq]
 
     def cancel(self, sid: str) -> List[Request]:
         """Drop every queued request for a session (closed sessions must
@@ -180,11 +221,25 @@ class Scheduler:
             tlen = min(tlen, cap)
         return max(tlen, head.token_len)
 
-    def next_batch(self) -> Optional[ScheduledBatch]:
+    def next_batch(self,
+                   tenant_lane_caps: Optional[Dict[str,
+                                                   Optional[int]]] = None,
+                   default_lane_cap: Optional[int] = None
+                   ) -> Optional[ScheduledBatch]:
         """Pop the next batch: head of the eligible order defines the op
         kind and token bucket; fill with any eligible request of that
         kind whose token length fits the bucket (padded lanes carry
-        their ``valid_len``)."""
+        their ``valid_len``).
+
+        ``tenant_lane_caps``: max lanes per tenant in this batch; a
+        tenant missing from the dict falls back to
+        ``default_lane_cap``, and an explicit ``None`` value means
+        uncapped (an explicit quota overrides the default).  The serve
+        engine passes each tenant's resident-slot quota so a single
+        batch can never pin more of a tenant's sessions than its quota
+        allows — the batch-formation half of the per-tenant residency
+        invariant (`serve.admission`; eviction in `SessionManager` is
+        the other half)."""
         elig = self._eligible()
         if not elig:
             return None
@@ -193,11 +248,22 @@ class Scheduler:
         tlen = self._head_token_len(head)
         cap = self.max_batch.get(head.kind, self.batch_buckets[-1])
         if self.token_buckets is None:
-            taken = [r for r in elig
-                     if r.kind == head.kind and r.token_len == tlen][:cap]
+            fits = [r for r in elig
+                    if r.kind == head.kind and r.token_len == tlen]
         else:
-            taken = [r for r in elig
-                     if r.kind == head.kind and r.token_len <= tlen][:cap]
+            fits = [r for r in elig
+                    if r.kind == head.kind and r.token_len <= tlen]
+        taken, lanes_of = [], {}
+        for r in fits:
+            if len(taken) >= cap:
+                break
+            if tenant_lane_caps is not None or default_lane_cap is not None:
+                tcap = (tenant_lane_caps or {}).get(r.tenant,
+                                                    default_lane_cap)
+                if tcap is not None and lanes_of.get(r.tenant, 0) >= tcap:
+                    continue
+            taken.append(r)
+            lanes_of[r.tenant] = lanes_of.get(r.tenant, 0) + 1
         taken_set = set(id(r) for r in taken)
         self._queue = [r for r in self._queue if id(r) not in taken_set]
         bucket = min(batch_bucket(len(taken), self.batch_buckets), cap)

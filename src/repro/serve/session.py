@@ -1,13 +1,30 @@
-"""Session lifecycle + LRU host offload.
+"""Session lifecycle + batched host offload with tenant-aware eviction.
 
 A session is a named user stream whose state lives in one arena slot
-while *resident*.  When the arena (or the ``max_resident`` budget) is
-exhausted, the least-recently-used resident session is offloaded to host
-memory (`jax.device_put` to the CPU device) and its slot freed; the next
-request on that session transparently restores it.  Offload -> restore
-is a pure device transfer of the state pytree, so a restored session's
-next logits are bit-identical to never having been offloaded — total
-sessions can exceed device HBM with no semantic effect, only latency.
+while *resident*.  When the arena (or the ``max_resident`` budget, or
+its tenant's resident-slot quota — see `serve.admission`) is exhausted,
+least-recently-used victims are offloaded to host memory
+(`jax.device_put` to the CPU device) and their slots freed; the next
+request on an offloaded session transparently restores it.
+
+Offload and restore are BATCHED: activation picks every victim the
+batch needs up front, packs their arena rows with ONE gather, and moves
+the stacked states with ONE `device_put` each way (per-victim transfers
+survive as ``batched_offload=False`` — the benchmark baseline and the
+bit-exactness oracle).  ``async_offload=True`` additionally skips the
+blocking sync on the device->host copy, overlapping the transfer with
+the engine's next scheduler pop (`sync()` is the barrier; restores of
+in-flight sessions order correctly through the data dependency).
+
+Offload -> restore is a pure device transfer of the state pytree, so a
+restored session's next logits are bit-identical to never having been
+offloaded — total sessions can exceed device HBM with no semantic
+effect, only latency.  An optional `OffloadCostModel` compares that
+transfer latency against REPLAYING the session's recorded request
+history from a zero slot and drops the state entirely when recompute is
+cheaper (no host copy at all); replayed state is numerically equivalent
+but not bit-exact (a replay runs at batch 1, and XLA fuses differently
+per batch shape), so the cost model is opt-in.
 
 Fresh sessions carry no host tree: their slot is zero-initialised on
 first activation (all state inits are zeros + zero counters).
@@ -15,19 +32,26 @@ first activation (all state inits are zeros + zero counters).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Collection, Dict, Optional
+import math
+from typing import Any, Callable, Collection, Dict, List, Optional, Sequence
 
 import jax
+import numpy as np
 
+from repro.launch.specs import batch_bucket
 from repro.serve.arena import ArenaFull, SessionArena
 
 
 @dataclasses.dataclass
 class Session:
     sid: str
+    tenant: str = "default"        # admission-quota group
     slot: Optional[int] = None     # arena slot while resident
     host_state: Any = None         # CPU pytree while offloaded (None = zero)
     fresh: bool = True             # never activated yet
+    needs_replay: bool = False     # state dropped; rebuild from history
+    history: Optional[list] = None  # [(op, tokens)] when recording enabled
+    history_tokens: int = 0        # running total (cost-model decision)
     last_used: int = 0             # logical LRU clock
     n_ops: int = 0
     n_offloads: int = 0
@@ -37,22 +61,93 @@ class Session:
         return self.slot is not None
 
 
+@dataclasses.dataclass(frozen=True)
+class OffloadResult:
+    """Structured outcome of an offload attempt.  Offloading an unknown
+    or already-offloaded session is a NO-OP with a telling status — it
+    used to trust callers and crash (unknown sid) or silently pass."""
+    sid: str
+    status: str   # offloaded | recompute | already-offloaded | fresh | unknown
+    n_bytes: int = 0
+
+    @property
+    def moved(self) -> bool:
+        return self.status in ("offloaded", "recompute")
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadCostModel:
+    """Restore-from-host vs recompute-from-history, per session.
+
+    The transfer path pays the state tree down AND back up
+    (``2 * state_bytes / host_bandwidth``); the recompute path pays
+    nothing at offload time and replays the session's recorded requests
+    at restore time (``history_tokens / replay_tokens_per_s``).  Both
+    rates are workload constants the operator calibrates (defaults are
+    a PCIe-ish bandwidth and a small-model CPU replay rate)."""
+    host_bandwidth: float = 8e9          # bytes/s, device<->host
+    replay_tokens_per_s: float = 2e4
+
+    def transfer_seconds(self, state_bytes: int) -> float:
+        return 2.0 * state_bytes / self.host_bandwidth
+
+    def replay_seconds(self, history_tokens: int) -> float:
+        return history_tokens / self.replay_tokens_per_s
+
+    def prefers_recompute(self, state_bytes: int,
+                          history_tokens: int) -> bool:
+        return (self.replay_seconds(history_tokens)
+                < self.transfer_seconds(state_bytes))
+
+
 class SessionManager:
     def __init__(self, arena: SessionArena,
-                 max_resident: Optional[int] = None):
+                 max_resident: Optional[int] = None, *,
+                 batched_offload: bool = True,
+                 async_offload: bool = False,
+                 cost_model: Optional[OffloadCostModel] = None,
+                 replay_fn: Optional[Callable] = None,
+                 resident_quota_of: Optional[Callable[[str],
+                                                      Optional[int]]] = None,
+                 pack_buckets: Optional[Sequence[int]] = None):
+        """``batched_offload``: move k victims with one gather + one
+        `device_put` each way (False = per-victim transfers).
+        ``async_offload``: don't block on the device->host copy; the
+        engine overlaps it with the next scheduler pop and `sync()`s at
+        drain end.  ``cost_model`` + ``replay_fn(sid, slot, history)``:
+        drop state instead of transferring when replaying the session's
+        history is cheaper (enables per-session request recording).
+        ``resident_quota_of(tenant)``: per-tenant resident-slot cap —
+        activation evicts the tenant's own LRU session once at quota.
+        ``pack_buckets``: bucket ladder for the batched offload/restore
+        pack shapes — pass the engine's ``batch_buckets`` so transfers
+        only ever compile at the batch dims the operator configured
+        (default: `launch.specs.SERVE_BATCH_BUCKETS`)."""
         self.arena = arena
+        self.pack_buckets = tuple(sorted(pack_buckets)) if pack_buckets \
+            else None
         self.max_resident = min(max_resident or arena.n_slots,
                                 arena.n_slots)
+        self.batched_offload = batched_offload
+        self.async_offload = async_offload
+        self.cost_model = cost_model
+        self.replay_fn = replay_fn
+        self.resident_quota_of = resident_quota_of or (lambda tenant: None)
         self.sessions: Dict[str, Session] = {}
         self._clock = 0
+        self._inflight: List[Any] = []
         self._host = jax.devices("cpu")[0]
         self._device = jax.local_devices()[0]
+        self._state_bytes = sum(
+            math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(arena.template))
 
     # -- lifecycle -----------------------------------------------------
-    def create(self, sid: str) -> Session:
+    def create(self, sid: str, tenant: str = "default") -> Session:
         if sid in self.sessions:
             raise ValueError(f"session {sid!r} already exists")
-        sess = Session(sid=sid)
+        sess = Session(sid=sid, tenant=tenant,
+                       history=[] if self.cost_model is not None else None)
         self.sessions[sid] = sess
         return sess
 
@@ -65,6 +160,26 @@ class SessionManager:
     def n_resident(self) -> int:
         return sum(1 for s in self.sessions.values() if s.resident)
 
+    def n_resident_of(self, tenant: str) -> int:
+        return sum(1 for s in self.sessions.values()
+                   if s.resident and s.tenant == tenant)
+
+    def record(self, sid: str, op: str, tokens: np.ndarray) -> None:
+        """Append a delivered request to the session's replay history
+        (no-op unless the cost model enabled recording).  ``tokens`` is
+        retained as-is — callers hand over an array nothing mutates
+        (the engine passes the queue's private request copy)."""
+        sess = self.sessions.get(sid)
+        if sess is not None and sess.history is not None:
+            sess.history.append((op, tokens))
+            sess.history_tokens += int(np.asarray(tokens).size)
+
+    def _bucket(self, k: int) -> int:
+        """Pack/transfer bucket for k rows, on the configured ladder."""
+        if self.pack_buckets is None:
+            return max(batch_bucket(k), k)
+        return max(batch_bucket(k, self.pack_buckets), k)
+
     # -- residency -----------------------------------------------------
     def activate(self, sid: str, pinned: Collection[str] = ()) -> int:
         """Ensure ``sid`` is resident (restoring / evicting as needed)
@@ -75,52 +190,213 @@ class SessionManager:
     def activate_batch(self, sids, pinned: Collection[str] = ()) -> list:
         """Make every session in ``sids`` resident and return their slots.
 
-        Fresh sessions are zeroed with ONE batched scatter (and skipped
-        entirely when their slot was never dirtied) — the per-batch hot
-        path does no per-session device work unless a restore is due."""
-        fresh_slots = []
-        slots = []
+        Three phases, each one device dispatch for the whole batch:
+        (1) plan — walk the batch in order, picking every eviction
+        victim up front (tenant-quota LRU first, then global LRU /
+        slot-scarcity LRU); (2) evict — ONE batched offload of all
+        victims; (3) admit — allocate slots, zero fresh sessions with
+        one batched scatter, restore offloaded sessions with one
+        stacked `device_put` + scatter, and replay recompute-dropped
+        sessions from their history."""
+        untouchable = set(pinned) | set(sids)
+        res = {s.sid: s for s in self.sessions.values() if s.resident}
+        victims: List[Session] = []
+        avail = self.arena.n_free
+
+        def evict_one(pool):
+            cands = [s for s in pool if s.sid not in untouchable]
+            if not cands:
+                raise ArenaFull(
+                    "no evictable session: batch size exceeds arena "
+                    "capacity")
+            v = min(cands, key=lambda s: s.last_used)
+            victims.append(v)
+            del res[v.sid]
+            return v
+
+        need: List[str] = []
         for sid in sids:
             sess = self.sessions[sid]
             self._clock += 1
             sess.last_used = self._clock
-            if sess.resident:
-                slots.append(sess.slot)
+            if sess.resident or sid in need:
                 continue
-            while (self.n_resident >= self.max_resident
-                   or self.arena.n_free == 0):
-                self._evict_lru(pinned)
-            slot = self.arena.alloc()
-            if sess.fresh and sess.host_state is None:
-                fresh_slots.append(slot)
+            quota = self.resident_quota_of(sess.tenant)
+            if quota is not None:
+                while sum(1 for s in res.values()
+                          if s.tenant == sess.tenant) >= quota:
+                    evict_one([s for s in res.values()
+                               if s.tenant == sess.tenant])
+                    avail += 1
+            while len(res) >= self.max_resident or avail == 0:
+                evict_one(res.values())
+                avail += 1
+            res[sid] = sess          # planned resident
+            need.append(sid)
+            avail -= 1
+
+        if victims:
+            self.offload_batch([v.sid for v in victims])
+
+        fresh_slots, replay, restore = [], [], []
+        for sid in need:
+            sess = self.sessions[sid]
+            sess.slot = self.arena.alloc()
+            if sess.host_state is not None:
+                restore.append(sess)
+            elif sess.needs_replay:
+                fresh_slots.append(sess.slot)
+                replay.append(sess)
             else:
-                self.arena.write_slot(
-                    slot, jax.device_put(sess.host_state, self._device))
-                sess.host_state = None
-            sess.slot = slot
+                # fresh (never activated) — offload always leaves either
+                # host_state or needs_replay, so nothing else reaches here
+                fresh_slots.append(sess.slot)
             sess.fresh = False
-            slots.append(slot)
         if fresh_slots:
             self.arena.reset_slots(fresh_slots)
-        return slots
+        if restore:
+            self._restore_batch(restore)
+        for sess in replay:
+            if self.replay_fn is None:
+                raise RuntimeError(
+                    f"session {sess.sid!r} needs replay but no replay_fn "
+                    "is wired (cost model dropped its state)")
+            self.replay_fn(sess.sid, sess.slot, sess.history or [])
+            sess.needs_replay = False
+        return [self.sessions[sid].slot for sid in sids]
 
-    def offload(self, sid: str) -> None:
-        """Move a resident session's state to host and free its slot."""
+    # -- offload -------------------------------------------------------
+    def _classify(self, sid: str) -> Optional[OffloadResult]:
+        """Structured no-op verdicts; None = resident, proceed."""
+        sess = self.sessions.get(sid)
+        if sess is None:
+            return OffloadResult(sid, "unknown")
+        if sess.resident:
+            return None
+        if sess.host_state is not None or sess.needs_replay:
+            return OffloadResult(sid, "already-offloaded")
+        return OffloadResult(sid, "fresh")
+
+    def _drop_for_recompute(self, sess: Session) -> bool:
+        """True when the cost model chose recompute: state dropped, slot
+        freed, nothing transferred."""
+        if (self.cost_model is None or self.replay_fn is None
+                or sess.history is None):
+            return False
+        if not self.cost_model.prefers_recompute(self._state_bytes,
+                                                 sess.history_tokens):
+            # history only grows and state bytes are constant, so once
+            # the transfer wins it wins forever — drop the retained
+            # token arrays and stop recording (bounds host memory; the
+            # session is transfer-only from here on)
+            sess.history = None
+            return False
+        self.arena.free(sess.slot)
+        sess.slot = None
+        sess.host_state = None
+        sess.needs_replay = True
+        sess.n_offloads += 1
+        return True
+
+    def offload(self, sid: str) -> OffloadResult:
+        """Per-victim offload: one gather + one `device_put` for ONE
+        session (the ``batched_offload=False`` path and the batched
+        path's bit-exactness oracle)."""
+        verdict = self._classify(sid)
+        if verdict is not None:
+            return verdict
         sess = self.sessions[sid]
-        if not sess.resident:
-            return
+        if self._drop_for_recompute(sess):
+            return OffloadResult(sid, "recompute")
         state = self.arena.read_slot(sess.slot)
-        sess.host_state = jax.block_until_ready(
-            jax.device_put(state, self._host))
+        host = jax.device_put(state, self._host)
+        if self.async_offload:
+            self._inflight.append(host)
+        else:
+            host = jax.block_until_ready(host)
+        sess.host_state = host
         self.arena.free(sess.slot)
         sess.slot = None
         sess.n_offloads += 1
+        return OffloadResult(sid, "offloaded", n_bytes=self._state_bytes)
 
-    def _evict_lru(self, pinned: Collection[str]) -> None:
-        candidates = [s for s in self.sessions.values()
-                      if s.resident and s.sid not in pinned]
-        if not candidates:
-            raise ArenaFull(
-                "no evictable session: batch size exceeds arena capacity")
-        victim = min(candidates, key=lambda s: s.last_used)
-        self.offload(victim.sid)
+    def offload_batch(self, sids: Sequence[str]) -> List[OffloadResult]:
+        """Move k resident sessions to host with ONE arena gather and
+        ONE `device_put` (vs k of each on the per-victim path).  The
+        gathered batch is padded up to a `batch_bucket` with scratch
+        rows so only bucketed pack shapes compile."""
+        if not self.batched_offload:
+            return [self.offload(sid) for sid in sids]
+        results: Dict[str, OffloadResult] = {}
+        todo: List[Session] = []
+        seen = set()
+        for sid in sids:
+            if sid in seen:      # dup sid: one verdict, one transfer
+                continue
+            seen.add(sid)
+            verdict = self._classify(sid)
+            if verdict is not None:
+                results[sid] = verdict
+                continue
+            sess = self.sessions[sid]
+            if self._drop_for_recompute(sess):
+                results[sid] = OffloadResult(sid, "recompute")
+            else:
+                todo.append(sess)
+        if todo:
+            slots = [s.slot for s in todo]
+            n = self._bucket(len(slots))
+            ids = slots + [self.arena.pad_slot] * (n - len(slots))
+            packed = self.arena.pack(ids)
+            host = jax.device_put(packed, self._host)
+            if self.async_offload:
+                self._inflight.append(host)
+            else:
+                host = jax.block_until_ready(host)
+            for i, sess in enumerate(todo):
+                sess.host_state = jax.tree.map(lambda x, i=i: x[i], host)
+                self.arena.free(sess.slot)
+                sess.slot = None
+                sess.n_offloads += 1
+                results[sess.sid] = OffloadResult(
+                    sess.sid, "offloaded", n_bytes=self._state_bytes)
+        out, emitted = [], set()
+        for sid in sids:
+            if sid not in emitted:
+                emitted.add(sid)
+                out.append(results[sid])
+            elif results[sid].moved:
+                # a later duplicate observes the first occurrence's
+                # effect — exactly what sequential per-victim calls
+                # would report
+                out.append(OffloadResult(sid, "already-offloaded"))
+            else:
+                out.append(results[sid])
+        return out
+
+    def _restore_batch(self, sess_list: List[Session]) -> None:
+        """Stack k host states, move them up with ONE `device_put`, and
+        scatter them into their slots with one arena unpack (padded to a
+        bucket; pad lanes land on the scratch row)."""
+        slots = [s.slot for s in sess_list]
+        n = self._bucket(len(slots))
+        ids = slots + [self.arena.pad_slot] * (n - len(slots))
+        hosts = [s.host_state for s in sess_list]
+        pad = n - len(hosts)
+
+        def stack(*leaves):
+            rows = [np.asarray(x) for x in leaves]
+            rows += [rows[0]] * pad       # scratch lanes: content ignored
+            return np.stack(rows)
+
+        stacked = jax.tree.map(stack, *hosts)
+        dev = jax.device_put(stacked, self._device)
+        self.arena.unpack(ids, dev)
+        for sess in sess_list:
+            sess.host_state = None
+
+    def sync(self) -> None:
+        """Barrier for ``async_offload`` transfers still in flight."""
+        for t in self._inflight:
+            jax.block_until_ready(t)
+        self._inflight.clear()

@@ -14,8 +14,13 @@ try:
     # "ci" (selected via HYPOTHESIS_PROFILE in .github/workflows/ci.yml):
     # derandomized — property tests draw a fixed example sequence so CI
     # is deterministic; the default profile keeps fuzzing locally.
+    # print_blob: a CI failure prints a @reproduce_failure blob that
+    # replays the exact trace locally.  Suites that need more examples
+    # (e.g. test_admission_properties: 200) override max_examples in
+    # their own @settings; derandomize/print_blob are inherited.
     _hyp_settings.register_profile(
-        "ci", derandomize=True, max_examples=60, deadline=None)
+        "ci", derandomize=True, max_examples=60, deadline=None,
+        print_blob=True)
     _hyp_settings.load_profile(
         os.environ.get("HYPOTHESIS_PROFILE", "default"))
 except ImportError:          # property tests skip without hypothesis

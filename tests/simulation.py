@@ -1,0 +1,232 @@
+"""Deterministic serve-simulation driver (clock-free discrete events).
+
+Replays arrival traces through the REAL serve objects — `ServeEngine`
+wired with its production `AdmissionController`, `Scheduler`,
+`SessionManager` and `SessionArena` — and snapshots the control-plane
+state after every event so a property suite can assert serving
+invariants over the full admit -> schedule -> offload -> restore ->
+cancel lifecycle (`tests/test_admission_properties.py`).
+
+Determinism & speed: there is no wall clock anywhere (the "time" axis is
+the event sequence itself plus the scheduler's logical round counter),
+and by default the engine's fused compute step is replaced with
+`launch.serve.make_null_step` — same call contract, zero model FLOPs —
+so hundreds of fuzzed traces run in seconds while still exercising real
+arena gathers, free-list moves and host offload transfers.  Pass
+``params`` to run the same trace against the real model step (used to
+cross-check that the null-step harness doesn't diverge structurally).
+
+Events are plain tuples (hypothesis-friendly):
+
+  ("create",  sid, tenant)          # online session (auto on first use)
+  ("submit",  sid, op, length, priority, tenant)
+  ("run",     max_batches)          # drain up to N batches
+  ("offload", sid)                  # explicit offload (may be a no-op)
+  ("close",   sid)                  # cancel queued + drop state
+
+The driver never lets a trace die on *caller-contract* errors the fuzzer
+can't know about (op on a closed sid, KV-cache exhaustion, wrong-kind
+op): those submissions are skipped and counted in ``skipped``.  Engine
+bugs — `ArenaFull` escaping, accounting drift, free-list corruption —
+propagate, which is exactly what the property suite wants to catch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch.serve import make_null_step
+from repro.serve import ServeEngine, TenantQuota
+from repro.serve.scheduler import Request
+
+OPS = ("ingest", "query")
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """Control-plane state right after one event."""
+    event: Tuple
+    n_resident: int                       # online arena
+    max_resident: int
+    tenant_resident: Dict[str, int]       # per tenant (online arena)
+    queued_tokens_total: int              # controller accounting
+    queued_tokens: Dict[str, int]         # per tenant (controller)
+    true_queued_tokens: Dict[str, int]    # recomputed from the raw queue
+    backlog: int
+    consistency: List[str]                # arena free-list violations
+
+
+@dataclasses.dataclass
+class Accounting:
+    """Terminal disposition of every request the trace produced."""
+    submitted: List[Request]
+    delivered: Dict[int, int]             # id(req) -> times in a batch
+    shed: List[Request]
+    cancelled: List[Request]
+    skipped: int                          # submissions the driver refused
+
+
+class ServeSimulation:
+    def __init__(self, cfg, *, n_slots: int = 3,
+                 max_resident: Optional[int] = None,
+                 cache_len: int = 64,
+                 policy: str = "block",
+                 max_queued_tokens: Optional[int] = None,
+                 max_backlog: Optional[int] = None,
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 default_quota: Optional[TenantQuota] = None,
+                 batch_buckets=(1, 2, 4),
+                 token_buckets=(2, 4, 8, 16),
+                 aging: Optional[int] = 4,
+                 batched_offload: bool = True,
+                 async_offload: bool = False,
+                 offload_cost_model=None,
+                 params=None):
+        self.engine = ServeEngine(
+            params, cfg, n_slots=n_slots, cache_len=cache_len,
+            max_resident=max_resident, batch_buckets=batch_buckets,
+            token_buckets=token_buckets, aging=aging,
+            admission_policy=policy, max_queued_tokens=max_queued_tokens,
+            max_backlog=max_backlog,
+            tenant_quotas=quotas, default_quota=default_quota,
+            batched_offload=batched_offload, async_offload=async_offload,
+            offload_cost_model=offload_cost_model,
+            step_factory=None if params is not None else make_null_step)
+        self.cache_len = cache_len
+        self.verdicts: List[Tuple[Tuple, Any]] = []
+        self.snapshots: List[Snapshot] = []
+        # (incoming request, its eff. priority, [(victim, victim eff. prio)])
+        # recorded AT DECISION TIME — aging moves effective priorities
+        # later, so the property suite can't recompute them post hoc
+        self.shed_log: List[Tuple[Request, int, List[Tuple[Request, int]]]] \
+            = []
+        self._submitted: List[Request] = []
+        self._delivered: Dict[int, int] = {}
+        self._skipped = 0
+        self._closed_for_good: set = set()
+        # count batch deliveries at the source: wrap the scheduler pop
+        sched = self.engine.scheduler
+        orig_pop = sched.next_batch
+
+        def counting_pop(tenant_lane_caps=None, default_lane_cap=None):
+            batch = orig_pop(tenant_lane_caps, default_lane_cap)
+            if batch is not None:
+                for r in batch.requests:
+                    self._delivered[id(r)] = self._delivered.get(id(r),
+                                                                 0) + 1
+            return batch
+        sched.next_batch = counting_pop
+
+    # -- event application --------------------------------------------
+    def _ensure_session(self, sid: str, tenant: str) -> bool:
+        """Create on first use; a closed sid stays closed (recreating it
+        would make 'cancelled exactly the closed session's requests'
+        ambiguous in the ledger)."""
+        if sid in self.engine._kind:
+            return True
+        if sid in self._closed_for_good:
+            return False
+        self.engine.create_session(sid, kind="online", tenant=tenant)
+        return True
+
+    def apply(self, event: Tuple) -> Snapshot:
+        kind = event[0]
+        if kind == "create":
+            _, sid, tenant = event
+            self._ensure_session(sid, tenant)
+        elif kind == "submit":
+            _, sid, op, length, priority, tenant = event
+            self._apply_submit(sid, op, length, priority, tenant)
+        elif kind == "run":
+            self.engine.run(max_batches=event[1])
+        elif kind == "offload":
+            self.engine.offload_session(event[1])
+        elif kind == "close":
+            sid = event[1]
+            if sid in self.engine._kind:
+                self.engine.close_session(sid)
+                self._closed_for_good.add(sid)
+        else:
+            raise ValueError(f"unknown simulation event {event!r}")
+        snap = self.snapshot(event)
+        self.snapshots.append(snap)
+        return snap
+
+    def _apply_submit(self, sid, op, length, priority, tenant) -> None:
+        if op not in OPS or not self._ensure_session(sid, tenant):
+            self._skipped += 1
+            return
+        if op == "query":
+            used = self.engine._cached.get(sid, 0)
+            if used + length > self.cache_len:   # caller-contract guard
+                self._skipped += 1
+                return
+        toks = np.zeros(length, np.int32)
+        verdict = getattr(self.engine, op)(sid, toks, priority=priority)
+        self.verdicts.append((("submit", sid, op, length, priority, tenant),
+                              verdict))
+        self._submitted.append(verdict.request)
+        victims = getattr(verdict, "shed_victims", ())
+        if victims:
+            sch = self.engine.scheduler
+            # effective_priority depends only on (priority, round at
+            # enqueue, current round) — unchanged by the removal, and the
+            # round hasn't advanced since the decision
+            self.shed_log.append(
+                (verdict.request, verdict.request.priority,
+                 [(v, sch.effective_priority(v)) for v in victims]))
+
+    def run_trace(self, events) -> List[Snapshot]:
+        for ev in events:
+            self.apply(ev)
+        return self.snapshots
+
+    def finish(self) -> Snapshot:
+        """Drain to quiescence (queue AND pumpable backlog empty)."""
+        self.engine.run()
+        return self.apply(("run", 0))
+
+    # -- state exposure ------------------------------------------------
+    def snapshot(self, event: Tuple = ("probe",)) -> Snapshot:
+        eng = self.engine
+        mgr = eng._mgr["online"]
+        tenants = sorted({s.tenant for s in mgr.sessions.values()}
+                        | set(eng.admission.quotas)
+                        | {r.tenant for r in eng.scheduler._queue})
+        true_q: Dict[str, int] = {}
+        for r in eng.scheduler._queue:
+            true_q[r.tenant] = true_q.get(r.tenant, 0) + r.token_len
+        return Snapshot(
+            event=event,
+            n_resident=mgr.n_resident,
+            max_resident=mgr.max_resident,
+            tenant_resident={t: mgr.n_resident_of(t) for t in tenants},
+            queued_tokens_total=eng.admission.queued_tokens(),
+            queued_tokens={t: eng.admission.queued_tokens(t)
+                           for t in tenants},
+            true_queued_tokens=true_q,
+            backlog=len(eng.admission.backlog),
+            consistency=mgr.arena.consistency_errors())
+
+    def accounting(self) -> Accounting:
+        return Accounting(
+            submitted=list(self._submitted),
+            delivered=dict(self._delivered),
+            shed=[r for r in self._submitted if r.shed],
+            cancelled=[r for r in self._submitted if r.cancelled],
+            skipped=self._skipped)
+
+    def session_states(self) -> Dict[str, str]:
+        """sid -> 'resident' | 'offloaded' | 'fresh' for every live
+        session (the terminal-state half of the acceptance criterion)."""
+        out = {}
+        for sid, sess in self.engine._mgr["online"].sessions.items():
+            if sess.resident:
+                out[sid] = "resident"
+            elif sess.host_state is not None or sess.needs_replay:
+                out[sid] = "offloaded"
+            else:
+                out[sid] = "fresh"
+        return out

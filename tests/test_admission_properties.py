@@ -1,0 +1,348 @@
+"""Admission/backpressure property suite over the serve simulation.
+
+Random admit -> schedule -> offload -> restore -> cancel traces run
+through `tests/simulation.py` (REAL engine/scheduler/session/arena
+objects, null compute step) and a model checker asserts, after every
+event and at end of trace:
+
+  1. conservation — no request lost or duplicated: every submitted
+     request ends in exactly one terminal state (delivered in exactly
+     one batch, cancelled, or shed) and is flagged ``done``;
+  2. per-tenant quotas never exceeded — resident sessions and queued
+     tokens per tenant stay within `TenantQuota` at every step, and the
+     controller's token accounting matches a recount of the raw queue;
+  3. global bounds — resident count <= ``max_resident`` and queued
+     tokens <= ``max_queued_tokens`` at every step;
+  4. shed discipline — a shed victim always has STRICTLY lower
+     effective priority (aging included) than the request that
+     displaced it; non-shedding policies never displace queued work;
+  5. backpressure liveness — blocked submits drain once capacity
+     frees: after a final drain the backlog and queue are empty;
+  6. arena integrity — the free list never double-frees or leaks a
+     slot (checked after every event), and every live session ends
+     resident, offloaded, or fresh — `ArenaFull` escaping anywhere
+     fails the trace.
+
+The checker is shared between a hypothesis fuzz (200 examples; CI runs
+the fixed derandomized "ci" profile, see conftest.py — failures print a
+`@reproduce_failure` blob that replays locally) and a seeded
+deterministic sweep that runs even where hypothesis is not installed.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import OffloadCostModel, TenantQuota
+from repro.serve.admission import POLICIES, Queued, Shed
+
+from simulation import ServeSimulation
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SIDS = tuple(f"s{i}" for i in range(5))
+OPS = ("ingest", "query")
+LENGTHS = (1, 2, 3, 5, 8, 13)
+PRIORITIES = (0, 1, 2, 3)
+
+
+def tenant_of(sid: str) -> str:
+    """Deterministic sid -> tenant map: t0 is quota-bound in bounded
+    configs, t1/t2 ride the default quota."""
+    return f"t{int(sid[1]) % 3}"
+
+
+def _expand(ev):
+    if ev[0] == "submit":
+        _, sid, op, length, prio = ev
+        return ("submit", sid, op, length, prio, tenant_of(sid))
+    return ev
+
+
+# offload cost models the fuzz sweeps: None (no recording), a model
+# that always prefers recompute (state dropped, history replayed through
+# the real activation path on every offload), and one that never does
+# (recording on, transfer path taken) — the replay/eviction/cancel
+# interleavings are exactly where a recompute regression would hide
+COST_MODELS = {
+    "none": None,
+    "always-recompute": OffloadCostModel(host_bandwidth=1.0,
+                                         replay_tokens_per_s=1e12),
+    "never-recompute": OffloadCostModel(host_bandwidth=1e15,
+                                        replay_tokens_per_s=1e-6),
+}
+
+
+def build_sim(cfg, conf) -> ServeSimulation:
+    quotas = None
+    if conf["quota_resident"] is not None or conf["quota_tokens"] is not None:
+        quotas = {"t0": TenantQuota(max_resident=conf["quota_resident"],
+                                    max_queued_tokens=conf["quota_tokens"])}
+    default_quota = (TenantQuota(max_resident=conf["default_resident"])
+                     if conf["default_resident"] is not None else None)
+    return ServeSimulation(
+        cfg, n_slots=conf["n_slots"], max_resident=conf["max_resident"],
+        policy=conf["policy"], max_queued_tokens=conf["max_queued_tokens"],
+        max_backlog=conf.get("max_backlog"),
+        quotas=quotas, default_quota=default_quota,
+        aging=conf["aging"], batched_offload=conf["batched"],
+        async_offload=conf["async"],
+        offload_cost_model=COST_MODELS[conf.get("cost_model", "none")])
+
+
+def check_snapshot(snap, conf) -> None:
+    # 6. arena integrity: free list consistent after EVERY event
+    assert not snap.consistency, snap.consistency
+    # 3. global residency bound
+    assert snap.n_resident <= snap.max_resident
+    # 2. per-tenant quotas + accounting-vs-recount agreement
+    for t, n in snap.tenant_resident.items():
+        cap = _resident_cap(t, conf)
+        if cap is not None:
+            assert n <= cap, (t, n, cap)
+    tenants = set(snap.queued_tokens) | set(snap.true_queued_tokens)
+    for t in tenants:
+        acct = snap.queued_tokens.get(t, 0)
+        true = snap.true_queued_tokens.get(t, 0)
+        assert acct == true, f"accounting drift for {t}: {acct} != {true}"
+        tq = _token_quota(t, conf)
+        if tq is not None:
+            assert true <= tq, (t, true, tq)
+    assert snap.queued_tokens_total == sum(
+        snap.true_queued_tokens.values())
+    # 3. global queued-token bound
+    if conf["max_queued_tokens"] is not None:
+        assert snap.queued_tokens_total <= conf["max_queued_tokens"]
+    # 3b. block-policy backlog bound (entries)
+    if conf.get("max_backlog") is not None:
+        assert snap.backlog <= conf["max_backlog"]
+
+
+def _resident_cap(tenant, conf):
+    if tenant == "t0" and conf["quota_resident"] is not None:
+        return conf["quota_resident"]
+    return conf["default_resident"]
+
+
+def _token_quota(tenant, conf):
+    if tenant == "t0":
+        return conf["quota_tokens"]
+    return None
+
+
+def _hard_cap(tenant, conf):
+    caps = [c for c in (_token_quota(tenant, conf),
+                        conf["max_queued_tokens"]) if c is not None]
+    return min(caps) if caps else None
+
+
+def run_trace(cfg, events, conf) -> None:
+    """Execute a trace and assert every admission/serve invariant.
+    `ArenaFull` (or any other exception) escaping the engine fails the
+    trace — overflow must always resolve to a structured verdict."""
+    sim = build_sim(cfg, conf)
+    for ev in events:
+        snap = sim.apply(_expand(ev))
+        check_snapshot(snap, conf)
+    check_snapshot(sim.finish(), conf)
+
+    # 5. backpressure liveness: a final drain empties queue AND backlog
+    assert sim.engine.scheduler.pending == 0
+    assert len(sim.engine.admission.backlog) == 0
+
+    # 1. conservation: exactly one terminal outcome per request
+    acc = sim.accounting()
+    for r in acc.submitted:
+        n_batches = acc.delivered.get(id(r), 0)
+        assert r.done, f"request {r.sid}/{r.kind} never resolved"
+        if r.shed or r.cancelled:
+            assert n_batches == 0, "terminal request also ran in a batch"
+            assert not (r.shed and r.cancelled), "two terminal outcomes"
+        else:
+            assert n_batches == 1, \
+                f"request ran in {n_batches} batches (lost or duplicated)"
+
+    # 4. shed discipline
+    for req, eff_new, victims in sim.shed_log:
+        assert conf["policy"] == "shed-lowest-priority"
+        for v, eff_v in victims:
+            assert eff_v > eff_new, \
+                f"shed victim eff={eff_v} not strictly lower-priority " \
+                f"than incoming eff={eff_new}"
+            assert v.shed and v.done
+            assert v.sid != req.sid
+    if conf["policy"] != "shed-lowest-priority":
+        assert not sim.shed_log
+    # non-shed policies shed a NEW request only when it could never fit
+    for ev, verdict in sim.verdicts:
+        if isinstance(verdict, Shed) and conf["policy"] != \
+                "shed-lowest-priority":
+            hard = _hard_cap(verdict.request.tenant, conf)
+            if conf["policy"] == "block":
+                oversized = hard is not None \
+                    and verdict.request.token_len > hard
+                backlog_full = "backlog full" in verdict.reason
+                assert oversized or (backlog_full
+                                     and conf.get("max_backlog")
+                                     is not None), \
+                    "block policy shed a request that could have waited"
+        if isinstance(verdict, Queued):
+            assert conf["policy"] == "block"
+
+    # 6. every surviving session is in a legal terminal state
+    assert set(sim.session_states().values()) <= {
+        "resident", "offloaded", "fresh"}
+    # engine stats agree with the ledger (nothing delivered off-book)
+    delivered = sum(1 for r in acc.submitted
+                    if not r.shed and not r.cancelled)
+    assert sum(s["requests"]
+               for s in sim.engine.stats.values()) == delivered
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweep (runs without hypothesis)
+# ---------------------------------------------------------------------------
+
+def _random_conf(rng) -> dict:
+    return {
+        "policy": POLICIES[rng.randint(len(POLICIES))],
+        "max_queued_tokens": (None, 12, 24)[rng.randint(3)],
+        "quota_resident": (None, 1, 2)[rng.randint(3)],
+        "quota_tokens": (None, 8, 16)[rng.randint(3)],
+        "default_resident": (None, 2)[rng.randint(2)],
+        "n_slots": (2, 4)[rng.randint(2)],
+        "max_resident": (None, 2)[rng.randint(2)],
+        "batched": bool(rng.randint(2)),
+        "async": bool(rng.randint(2)),
+        "aging": (0, 3)[rng.randint(2)],
+        "cost_model": tuple(COST_MODELS)[rng.randint(len(COST_MODELS))],
+        "max_backlog": (None, 2)[rng.randint(2)],
+    }
+
+
+def _random_events(rng, n):
+    evs = []
+    for _ in range(n):
+        roll = rng.rand()
+        if roll < 0.55:
+            evs.append(("submit", SIDS[rng.randint(len(SIDS))],
+                        OPS[rng.randint(len(OPS))],
+                        int(LENGTHS[rng.randint(len(LENGTHS))]),
+                        int(PRIORITIES[rng.randint(len(PRIORITIES))])))
+        elif roll < 0.75:
+            evs.append(("run", int(rng.randint(1, 4))))
+        elif roll < 0.85:
+            evs.append(("offload", SIDS[rng.randint(len(SIDS))]))
+        else:
+            evs.append(("close", SIDS[rng.randint(len(SIDS))]))
+    return evs
+
+
+def test_seeded_traces_uphold_invariants(tiny_cfg):
+    """Deterministic sweep of the same checker (runs without
+    hypothesis)."""
+    rng = np.random.RandomState(20260729)
+    for _ in range(40):
+        run_trace(tiny_cfg, _random_events(rng, 35), _random_conf(rng))
+
+
+def test_backpressure_blocks_then_drains(tiny_cfg):
+    """block policy: a submit over the tenant token quota is Queued (not
+    shed, not enqueued), stays queued while the bound holds, and drains
+    exactly once capacity frees."""
+    conf = {"policy": "block", "max_queued_tokens": None,
+            "quota_resident": None, "quota_tokens": 8,
+            "default_resident": None, "n_slots": 3, "max_resident": None,
+            "batched": True, "async": False, "aging": 0}
+    sim = build_sim(tiny_cfg, conf)
+    sim.apply(("submit", "s0", "ingest", 8, 0, "t0"))   # fills the quota
+    snap = sim.apply(("submit", "s3", "ingest", 5, 0, "t0"))  # blocked
+    _, v0 = sim.verdicts[0]
+    _, v1 = sim.verdicts[1]
+    assert type(v1).__name__ == "Queued" and snap.backlog == 1
+    assert snap.queued_tokens["t0"] == 8
+    snap = sim.apply(("run", 1))      # s0 pops -> pump admits s3
+    assert snap.backlog == 0 and snap.queued_tokens["t0"] == 5
+    sim.finish()
+    assert v1.request.done and not v1.request.shed
+
+
+def test_shed_policy_strict_priority(tiny_cfg):
+    """shed-lowest-priority only displaces strictly-lower-priority
+    queued work; an equal-priority newcomer is itself shed."""
+    conf = {"policy": "shed-lowest-priority", "max_queued_tokens": 8,
+            "quota_resident": None, "quota_tokens": None,
+            "default_resident": None, "n_slots": 3, "max_resident": None,
+            "batched": True, "async": False, "aging": 0}
+    sim = build_sim(tiny_cfg, conf)
+    sim.apply(("submit", "s0", "ingest", 8, 3, "t0"))    # low priority
+    sim.apply(("submit", "s1", "ingest", 8, 1, "t1"))    # higher: sheds s0
+    _, v0 = sim.verdicts[0]
+    _, v1 = sim.verdicts[1]
+    assert v0.request.shed and v0.request.done
+    assert type(v1).__name__ == "Admitted"
+    assert [v.sid for v in v1.shed_victims] == ["s0"]
+    # equal priority: the NEWCOMER is shed, the queue is untouched
+    sim.apply(("submit", "s2", "ingest", 8, 1, "t2"))
+    _, v2 = sim.verdicts[2]
+    assert isinstance(v2, Shed) and v2.request.shed
+    assert not v1.request.shed
+    sim.finish()
+    run_trace(tiny_cfg, [], conf)     # empty trace sanity
+
+
+def test_oversized_request_shed_under_every_policy(tiny_cfg):
+    """A request that could NEVER fit its bound is shed immediately —
+    blocking it would deadlock the backlog."""
+    for policy in POLICIES:
+        conf = {"policy": policy, "max_queued_tokens": 4,
+                "quota_resident": None, "quota_tokens": None,
+                "default_resident": None, "n_slots": 2,
+                "max_resident": None, "batched": True, "async": False,
+                "aging": 0}
+        sim = build_sim(tiny_cfg, conf)
+        sim.apply(("submit", "s0", "ingest", 13, 0, "t0"))
+        _, v = sim.verdicts[0]
+        assert isinstance(v, Shed) and v.request.shed and v.request.done
+        sim.finish()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz (200 examples; CI pins the derandomized profile)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    EVENTS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.sampled_from(SIDS),
+                      st.sampled_from(OPS), st.sampled_from(LENGTHS),
+                      st.sampled_from(PRIORITIES)),
+            st.tuples(st.just("run"), st.integers(1, 3)),
+            st.tuples(st.just("offload"), st.sampled_from(SIDS)),
+            st.tuples(st.just("close"), st.sampled_from(SIDS)),
+        ), max_size=40)
+
+    CONFIGS = st.fixed_dictionaries({
+        "policy": st.sampled_from(POLICIES),
+        "max_queued_tokens": st.sampled_from((None, 12, 24)),
+        "quota_resident": st.sampled_from((None, 1, 2)),
+        "quota_tokens": st.sampled_from((None, 8, 16)),
+        "default_resident": st.sampled_from((None, 2)),
+        "n_slots": st.sampled_from((2, 4)),
+        "max_resident": st.sampled_from((None, 2)),
+        "batched": st.booleans(),
+        "async": st.booleans(),
+        "aging": st.sampled_from((0, 3)),
+        "cost_model": st.sampled_from(tuple(COST_MODELS)),
+        "max_backlog": st.sampled_from((None, 2)),
+    })
+
+    @given(events=EVENTS, conf=CONFIGS)
+    @settings(max_examples=200, deadline=None)
+    def test_property_traces_uphold_invariants(tiny_cfg, events, conf):
+        run_trace(tiny_cfg, events, conf)
+else:
+    def test_property_traces_uphold_invariants():
+        pytest.skip("property fuzz needs hypothesis")

@@ -149,7 +149,7 @@ def test_engine_matches_single_session(tiny_cfg, params):
     for s in range(3):
         eng.create_session(f"s{s}")
         eng.ingest(f"s{s}", chunks[s])
-    reqs = [eng.query(f"s{s}", query) for s in range(3)]
+    reqs = [eng.query(f"s{s}", query).request for s in range(3)]
     eng.run()
     for s in range(3):
         st = I.init_online_state(tiny_cfg, 1, max_cache_len=32)
@@ -222,7 +222,7 @@ def test_engine_offload_preserves_logits(tiny_cfg, params):
         if offload:
             eng.offload_session("u")
             assert not eng._mgr["online"].sessions["u"].resident
-        req = eng.query("u", query)
+        req = eng.query("u", query).request
         eng.run()
         return np.asarray(req.result)
 
@@ -241,7 +241,7 @@ def test_engine_stream_sessions(tiny_cfg, params):
                       stream_slots=2, batch_buckets=(1, 2))
     eng.create_session("u", kind="stream")
     toks = [np.asarray(_tokens(40 + i, 4)) for i in range(6)]
-    reqs = [eng.stream("u", t) for t in toks]
+    reqs = [eng.stream("u", t).request for t in toks]
     eng.run()
     st = ST.init_stream_state(cfg, 1)
     for t, req in zip(toks, reqs):
@@ -361,7 +361,7 @@ def test_stream_batches_capped_by_stream_arena(tiny_cfg, params):
     reqs = []
     for s in range(3):
         eng.create_session(f"t{s}", kind="stream")
-        reqs.append(eng.stream(f"t{s}", np.asarray(_tokens(60 + s, 4))))
+        reqs.append(eng.stream(f"t{s}", np.asarray(_tokens(60 + s, 4))).request)
     eng.run()
     assert all(r.done for r in reqs)
     assert eng.stats["stream"]["requests"] == 3
@@ -378,8 +378,8 @@ def test_close_session_cancels_queued_requests(tiny_cfg, params):
                       batch_buckets=(1, 2, 4))
     eng.create_session("a")
     eng.create_session("b")
-    ra = eng.ingest("a", np.asarray(_tokens(0, 8)))
-    rb = eng.ingest("b", np.asarray(_tokens(1, 8)))
+    ra = eng.ingest("a", np.asarray(_tokens(0, 8))).request
+    rb = eng.ingest("b", np.asarray(_tokens(1, 8))).request
     eng.close_session("a")
     assert ra.cancelled and ra.done and ra.result is None
     assert eng.scheduler.pending == 1
@@ -500,7 +500,7 @@ def test_ragged_ingest_query_equivalence(tiny_cfg, params):
     for s, c in enumerate(chunks):
         eng.create_session(f"s{s}")
         eng.ingest(f"s{s}", c)
-    reqs = [eng.query(f"s{s}", q) for s, q in enumerate(queries)]
+    reqs = [eng.query(f"s{s}", q).request for s, q in enumerate(queries)]
     eng.run()
     # all three lengths shared ONE batch per op kind (the point of
     # ragged batching — exact grouping would have taken 3 + 3 batches)
@@ -533,7 +533,7 @@ def test_ragged_stream_equivalence(tiny_cfg, params):
     # 8 chunks of 3 tokens (padded to the stream_chunk-4 bucket) push the
     # 16-token window through multiple evictions
     toks = [np.asarray(_tokens(70 + i, 3)) for i in range(8)]
-    reqs = [eng.stream("u", t) for t in toks]
+    reqs = [eng.stream("u", t).request for t in toks]
     eng.run()
     assert eng.stats["stream"]["pad_tokens"] == 8    # one pad per chunk
     st = ST.init_stream_state(cfg, 1)
@@ -562,7 +562,7 @@ def test_ragged_matches_exact_scheduling(tiny_cfg, params):
         for s, L in enumerate(lens):
             eng.create_session(f"s{s}")
             eng.ingest(f"s{s}", np.asarray(_tokens(s, L)))
-        reqs = [eng.query(f"s{s}", np.asarray(_tokens(50 + s, L)))
+        reqs = [eng.query(f"s{s}", np.asarray(_tokens(50 + s, L))).request
                 for s, L in enumerate(lens)]
         eng.run()
         return ([np.asarray(r.result) for r in reqs],
@@ -615,3 +615,217 @@ def test_make_arena_step_golden_rows(tiny_cfg, params):
         else jnp.full(s.shape, 2, s.dtype), arena.template)
     want = I.ingest_context(params, tiny_cfg, st, jnp.asarray(toks[0, :, :5]))
     _assert_state_close(arena.read_slot(1), want)
+
+
+# ---------------------------------------------------------------------------
+# admission verdicts + batched offload (PR 5)
+# ---------------------------------------------------------------------------
+
+def test_submit_returns_admitted_verdict(tiny_cfg, params):
+    """Default (unbounded) engine: every submit returns Admitted and the
+    request handle rides on the verdict."""
+    from repro.serve import Admitted
+    eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=16,
+                      batch_buckets=(1, 2))
+    eng.create_session("u")
+    v = eng.ingest("u", np.asarray(_tokens(0, 4)))
+    assert isinstance(v, Admitted) and not v.shed_victims
+    eng.run()
+    assert v.request.done and not v.request.shed
+
+
+def test_offload_structured_noop_statuses(tiny_cfg, params):
+    """Offloading an unknown, never-activated, or already-offloaded
+    session is a structured no-op — it used to KeyError (unknown) or
+    silently pass (already offloaded)."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=16,
+                      batch_buckets=(1, 2))
+    assert eng.offload_session("ghost").status == "unknown"
+    eng.create_session("u")
+    assert eng.offload_session("u").status == "fresh"       # never ran
+    eng.ingest("u", np.asarray(_tokens(0, 4)))
+    eng.run()
+    r = eng.offload_session("u")
+    assert r.status == "offloaded" and r.moved and r.n_bytes > 0
+    assert eng.offload_session("u").status == "already-offloaded"
+    # the SessionManager-level per-victim path agrees
+    mgr = eng._mgr["online"]
+    assert mgr.offload("u").status == "already-offloaded"
+    assert mgr.offload("ghost").status == "unknown"
+    # and the session still restores bit-exactly after the no-ops
+    q = eng.query("u", np.asarray(_tokens(1, 3))).request
+    eng.run()
+    assert q.done and q.result.shape == (3, tiny_cfg.vocab_size)
+
+
+def _offload_interleaved_trace(cfg, params, *, batched, async_off,
+                               seed):
+    """Shared fuzz body: 5 warm sessions, k-victim offload, interleaved
+    cancel() + re-activation of a session mid-offload, final drain.
+    Returns (offload statuses, s0 host-state leaves, result logits)."""
+    rng = np.random.RandomState(seed)
+    lens = rng.randint(2, 9, size=5)
+    eng = ServeEngine(params, cfg, n_slots=6, cache_len=32,
+                      batch_buckets=(1, 2, 4), batched_offload=batched,
+                      async_offload=async_off)
+    for s in range(5):
+        eng.create_session(f"s{s}")
+        eng.ingest(f"s{s}", np.asarray(_tokens(100 * seed + s,
+                                               int(lens[s]))))
+    eng.run()
+    mgr = eng._mgr["online"]
+    # k victims at once, with a duplicate and an unknown mixed in
+    res = mgr.offload_batch(["s0", "s1", "s2", "s0", "nope"])
+    # mid-offload interleavings: queue work on an offloaded session
+    # (restore), cancel another's queued work, close one while offloaded
+    rq = eng.query("s1", np.asarray(_tokens(50 + seed, 3)))      # restore
+    rc = eng.ingest("s3", np.asarray(_tokens(60 + seed, 4)))
+    eng.close_session("s3")                                      # cancel
+    eng.close_session("s2")                                      # offloaded
+    r4 = eng.query("s4", np.asarray(_tokens(70 + seed, 2)))      # resident
+    eng.run()
+    mgr.sync()
+    host0 = [np.asarray(x)
+             for x in jax.tree.leaves(mgr.sessions["s0"].host_state)]
+    assert rc.request.cancelled and rc.request.result is None
+    return ([r.status for r in res], host0,
+            [np.asarray(rq.request.result), np.asarray(r4.request.result)])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_offload_bitexact_vs_per_victim(tiny_cfg, params, seed):
+    """k-victim stacked offload/restore == per-victim path bit-for-bit:
+    same no-op statuses, same host bytes, same post-restore logits —
+    including interleaved cancel() and re-activation mid-offload, and
+    with the async double-buffer on."""
+    base = _offload_interleaved_trace(tiny_cfg, params, batched=False,
+                                      async_off=False, seed=seed)
+    for batched, async_off in ((True, False), (True, True)):
+        got = _offload_interleaved_trace(tiny_cfg, params, batched=batched,
+                                         async_off=async_off, seed=seed)
+        assert got[0] == base[0] == ["offloaded", "offloaded", "offloaded",
+                                     "already-offloaded", "unknown"]
+        for a, b in zip(got[1], base[1]):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(got[2], base[2]):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_offload_cost_model_decision():
+    """Pure decision function: transfer cost is the round trip, replay
+    cost is history tokens at the replay rate."""
+    from repro.serve import OffloadCostModel
+    cm = OffloadCostModel(host_bandwidth=1e9, replay_tokens_per_s=100.0)
+    assert cm.transfer_seconds(5 * 10**8) == pytest.approx(1.0)
+    assert cm.replay_seconds(50) == pytest.approx(0.5)
+    assert cm.prefers_recompute(5 * 10**8, 50)        # 0.5 s < 1.0 s
+    assert not cm.prefers_recompute(5 * 10**8, 200)   # 2.0 s > 1.0 s
+
+
+def test_recompute_offload_replays_history(tiny_cfg, params):
+    """A cost model that always prefers recompute drops the state (no
+    host copy) and replays the session's recorded requests on the next
+    activation; logits match the transfer path."""
+    from repro.serve import OffloadCostModel
+    chunk, query = np.asarray(_tokens(3, 6)), np.asarray(_tokens(4, 4))
+
+    def run(cm):
+        eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=32,
+                          batch_buckets=(1, 2), offload_cost_model=cm)
+        eng.create_session("u")
+        eng.ingest("u", chunk)
+        eng.run()
+        r = eng.offload_session("u")
+        q = eng.query("u", query).request
+        eng.run()
+        return r.status, np.asarray(q.result)
+
+    always = OffloadCostModel(host_bandwidth=1.0, replay_tokens_per_s=1e12)
+    s1, rec = run(always)
+    s2, xfer = run(None)
+    assert (s1, s2) == ("recompute", "offloaded")
+    # replay runs the same B=1 programs here -> bit-exact; keep a small
+    # tolerance anyway (replay is only numerically, not bitwise,
+    # guaranteed when the original ops ran at a different batch shape)
+    np.testing.assert_allclose(rec, xfer, atol=1e-5, rtol=0)
+
+
+def test_shed_query_releases_exact_cache_reservation(tiny_cfg, params):
+    """Regression: a query shed at SUBMIT time must leave the KV-cache
+    token accounting exactly where it was — the old code decremented a
+    reservation that was never made, under-counting the cache and
+    letting a later oversized query slip past the exhaustion guard."""
+    from repro.serve import Shed
+    eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=16,
+                      batch_buckets=(1, 2),
+                      admission_policy="reject-new", max_queued_tokens=6)
+    eng.create_session("u")
+    v1 = eng.query("u", np.asarray(_tokens(0, 4)))   # cached: 4, queued: 4
+    v2 = eng.query("u", np.asarray(_tokens(1, 5)))   # queue 4+5 > 6: shed
+    assert isinstance(v2, Shed) and v2.request.shed
+    assert eng._cached["u"] == 4      # reservation reversed, not drained
+    eng.run()
+    assert v1.request.done
+    # 4 cached + 13 > cache_len 16: the guard must still fire (the old
+    # under-count of 0 would have let this through to corrupt the cache)
+    with pytest.raises(ValueError, match="cache exhausted"):
+        eng.query("u", np.asarray(_tokens(2, 13)))
+    # and a fitting query still passes
+    v3 = eng.query("u", np.asarray(_tokens(3, 4)))
+    eng.run()
+    assert v3.request.done and eng._cached["u"] == 8
+
+
+def test_explicit_quota_overrides_default_lane_cap(tiny_cfg, params):
+    """Regression: a tenant with an explicit TenantQuota whose
+    max_resident is None is residency-UNBOUNDED even when default_quota
+    caps residency — batch formation must not throttle it to the
+    default (one batch of 4, not 4 single-lane batches)."""
+    from repro.serve import TenantQuota
+    eng = ServeEngine(params, tiny_cfg, n_slots=6, cache_len=16,
+                      batch_buckets=(1, 2, 4),
+                      tenant_quotas={"vip": TenantQuota(
+                          max_queued_tokens=100)},
+                      default_quota=TenantQuota(max_resident=1))
+    for s in range(4):
+        eng.create_session(f"v{s}", tenant="vip")
+        eng.ingest(f"v{s}", np.asarray(_tokens(s, 4)))
+    eng.run()
+    assert eng.stats["ingest"]["batches"] == 1    # one 4-lane batch
+    # default-quota tenants ARE capped to one lane per batch
+    for s in range(3):
+        eng.create_session(f"d{s}")              # tenant="default"
+        eng.ingest(f"d{s}", np.asarray(_tokens(10 + s, 4)))
+    eng.run()
+    assert eng.stats["ingest"]["batches"] == 4    # 1 + three 1-lane
+
+
+def test_invalid_submit_leaves_no_reservation(tiny_cfg, params):
+    """Regression: a shape-validation error at submit must raise with
+    ZERO side effects — the old order reserved KV-cache tokens before
+    validating, permanently inflating the session's accounting."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=16,
+                      batch_buckets=(1, 2))
+    eng.create_session("u")
+    with pytest.raises(ValueError, match="one sequence"):
+        eng.query("u", np.zeros((2, 5), np.int32))   # batched tokens
+    assert eng._cached.get("u", 0) == 0              # nothing leaked
+    v = eng.query("u", np.asarray(_tokens(0, 8)))    # 8 <= 16: admitted
+    eng.run()
+    assert v.request.done and eng._cached["u"] == 8
+
+
+def test_zero_batch_run_syncs_async_offload(tiny_cfg, params):
+    """Regression: run() on an empty queue must still barrier async
+    offload transfers — `if n:` used to skip sync(), pinning the
+    stacked host buffers of explicit offload_session() calls forever."""
+    eng = ServeEngine(params, tiny_cfg, n_slots=2, cache_len=16,
+                      batch_buckets=(1, 2), async_offload=True)
+    eng.create_session("u")
+    eng.ingest("u", np.asarray(_tokens(0, 4)))
+    eng.run()
+    assert eng.offload_session("u").status == "offloaded"
+    mgr = eng._mgr["online"]
+    assert len(mgr._inflight) == 1       # transfer in flight
+    assert eng.run() == 0                # zero batches popped...
+    assert len(mgr._inflight) == 0       # ...but the barrier still ran
