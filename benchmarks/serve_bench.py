@@ -22,10 +22,15 @@ rate): requests arrive faster than `run(max_batches=1)` can serve them,
 against a bounded queue (`max_queued_tokens`) with the
 ``shed-lowest-priority`` policy and an arena smaller than the session
 population (constant offload/restore churn).  It reports shed rate,
-queue depth, and tok/s for per-victim vs batched vs batched+async
-offload on IDENTICAL traffic (admission is deterministic control
-plane, so the shed/queue numbers must match across modes — only the
-transfer batching changes throughput).
+queue depth, queue-wait and end-to-end latency percentiles
+(p50/p95/p99, from the engine's tracing histograms — see
+docs/OBSERVABILITY.md), goodput, and tok/s for per-victim vs batched
+vs batched+async offload on IDENTICAL traffic (admission is
+deterministic control plane, so the shed/queue numbers must match
+across modes — only the transfer batching changes throughput).
+``--metrics-out PREFIX`` additionally writes the last open-loop
+engine's full metrics snapshot as PREFIX.json + PREFIX.prom (the CI
+artifact).
 
 Also checks the LRU offload path end-to-end: a session offloaded to host
 and restored must reproduce its query logits EXACTLY (allclose) vs a
@@ -56,6 +61,7 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import inference as I
 from repro.models import transformer as T
+from repro.obs import Observability
 from repro.serve import ServeEngine
 
 
@@ -200,15 +206,19 @@ def run_open_loop(params, cfg, *, mode, rounds, arrivals_per_round=4,
     round but only ONE batch is served per round, so the queue saturates
     and the bounded-ingress shed policy engages; a session population
     4x the resident budget keeps the offload path hot.  ``mode`` picks
-    the offload transfer strategy under test."""
+    the offload transfer strategy under test.  Runs with request
+    tracing on — queue-wait / e2e latency percentiles come from the obs
+    histograms (host-side only; the compute path is identical to an
+    untraced engine)."""
     batched = mode != "per_victim"
+    obs = Observability.tracing()
     eng = ServeEngine(params, cfg, n_slots=n_slots,
                       max_resident=max_resident, cache_len=64,
                       batch_buckets=(1, 2, 4),
                       admission_policy="shed-lowest-priority",
                       max_queued_tokens=max_queued_tokens,
                       batched_offload=batched,
-                      async_offload=(mode == "batched_async"))
+                      async_offload=(mode == "batched_async"), obs=obs)
     rng = np.random.RandomState(seed)
     for s in range(n_sessions):
         eng.create_session(f"u{s}")
@@ -231,15 +241,22 @@ def run_open_loop(params, cfg, *, mode, rounds, arrivals_per_round=4,
     toks_served = sum(s_["tokens"] for s_ in eng.stats.values())
     offloads = sum(s_.n_offloads
                    for s_ in eng._mgr["online"].sessions.values())
+    reg = eng.obs.registry
+    wait_pct = reg.get("serve_queue_wait_seconds").aggregate().percentiles()
+    e2e_pct = reg.get("serve_e2e_latency_seconds").aggregate().percentiles()
+    served = submitted - shed
     return {
         "mode": mode, "submitted": submitted, "shed": shed,
         "shed_rate": shed / submitted,
-        "served": submitted - shed,
+        "served": served,
         "queue_depth_mean": float(np.mean(depths)),
         "queue_depth_max": int(max(depths)),
         "offloads": offloads,
+        "queue_wait_s": wait_pct,
+        "e2e_latency_s": e2e_pct,
+        "goodput_req_per_s": served / wall,
         "tok_per_s": toks_served / wall, "wall_s": wall,
-    }
+    }, eng
 
 
 def main():
@@ -255,6 +272,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for the CI artifact run")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--metrics-out", default=None, metavar="PREFIX",
+                    help="also write the last open-loop engine's metrics "
+                         "snapshot as PREFIX.json and PREFIX.prom")
     args = ap.parse_args()
     if args.smoke:
         args.sessions, args.mixed_sessions, args.open_rounds = 12, 8, 40
@@ -325,13 +345,24 @@ def main():
 
     # -- open-loop admission: arrival rate > service rate ---------------
     open_loop = []
+    open_eng = None
     for mode in ("per_victim", "batched", "batched_async"):
-        r = run_open_loop(params, cfg, mode=mode, rounds=args.open_rounds)
+        r, open_eng = run_open_loop(params, cfg, mode=mode,
+                                    rounds=args.open_rounds)
         open_loop.append(r)
         print(f"\nopen-loop [{mode:13s}]: shed rate {r['shed_rate']:.2f} "
               f"({r['shed']}/{r['submitted']}), queue depth "
               f"mean {r['queue_depth_mean']:.1f} max {r['queue_depth_max']}, "
               f"{r['offloads']} offloads, {r['tok_per_s']:7.0f} tok/s")
+        print(f"  queue wait p50/p95/p99: "
+              f"{r['queue_wait_s']['p50']*1e3:.1f}/"
+              f"{r['queue_wait_s']['p95']*1e3:.1f}/"
+              f"{r['queue_wait_s']['p99']*1e3:.1f} ms   "
+              f"e2e p50/p95/p99: "
+              f"{r['e2e_latency_s']['p50']*1e3:.1f}/"
+              f"{r['e2e_latency_s']['p95']*1e3:.1f}/"
+              f"{r['e2e_latency_s']['p99']*1e3:.1f} ms   "
+              f"goodput {r['goodput_req_per_s']:.0f} req/s")
         C.csv_row(f"serve_open_{mode}", r["wall_s"] * 1e6,
                   f"shed {r['shed_rate']:.2f}, {r['tok_per_s']:.0f} tok/s")
     # identical traffic -> identical control plane across offload modes;
@@ -370,6 +401,12 @@ def main():
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"\nwrote {args.out}")
+    if args.metrics_out and open_eng is not None:
+        with open(args.metrics_out + ".json", "w") as f:
+            json.dump(open_eng.metrics_snapshot(), f, indent=1)
+        with open(args.metrics_out + ".prom", "w") as f:
+            f.write(open_eng.metrics_prometheus())
+        print(f"wrote {args.metrics_out}.json / .prom")
 
 
 if __name__ == "__main__":

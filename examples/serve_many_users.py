@@ -35,6 +35,9 @@ def main():
                     help="arena slots (< users: forces LRU offload)")
     ap.add_argument("--arrivals", type=int, default=3,
                     help="new users per round")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the engine's Prometheus metrics export "
+                         "at the end (docs/OBSERVABILITY.md)")
     args = ap.parse_args()
 
     print("training serving model + compression adapter...")
@@ -96,6 +99,9 @@ def main():
           "(ragged token buckets pad mixed-length requests into shared "
           "batches; pad lanes are masked)")
     print(f"accuracy from compressed memory: {hits / tot:.3f}")
+    if args.metrics:
+        print("\n--- metrics (Prometheus text exposition) ---")
+        print(eng.metrics_prometheus())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Lint: raw timers are confined to the observability clock module.
+
+Everything under ``src/`` must take its timestamps from
+`repro.obs.clock` (injectable — the deterministic simulation harness
+swaps in a `ManualClock`); a stray ``time.time()`` / ``perf_counter()``
+elsewhere silently reintroduces nondeterministic timing the obs layer
+exists to remove.  This scans ``src/**/*.py`` for direct uses of the
+stdlib timer functions (calls AND ``from time import ...`` aliases) and
+fails listing each offender as ``file:line``.  ``benchmarks/``,
+``examples/``, ``tests/`` and ``scripts/`` are intentionally out of
+scope — drivers may time whatever they like.
+
+Usage: python scripts/check_no_stray_timers.py [--root DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+# the one module allowed to touch the stdlib clock
+ALLOWED = ("src/repro/obs/clock.py",)
+
+TIMER_FNS = ("time", "perf_counter", "perf_counter_ns", "monotonic",
+             "monotonic_ns", "process_time", "thread_time")
+_CALL = re.compile(r"\btime\.(%s)\s*\(" % "|".join(TIMER_FNS))
+_FROM = re.compile(r"^\s*from\s+time\s+import\b")
+
+
+def scan(root: pathlib.Path):
+    src = root / "src"
+    offenders = []
+    for path in sorted(src.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel in ALLOWED:
+            continue
+        for ln, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            code = line.split("#", 1)[0]      # ignore comments
+            if _CALL.search(code) or _FROM.search(code):
+                offenders.append((rel, ln, line.strip()))
+    return offenders
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".",
+                    help="repo root containing src/ (default: cwd)")
+    args = ap.parse_args(argv)
+    offenders = scan(pathlib.Path(args.root))
+    if offenders:
+        print("stray timer calls outside repro.obs.clock "
+              "(route them through the injectable clock):")
+        for rel, ln, text in offenders:
+            print(f"  {rel}:{ln}: {text}")
+        return 1
+    print("timer lint OK: all src/ timing goes through repro.obs.clock")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,6 @@ import os
 import queue
 import shutil
 import threading
-import time
 import zlib
 from typing import Any, Dict, Optional, Tuple
 

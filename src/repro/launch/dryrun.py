@@ -23,12 +23,12 @@ import argparse
 import json
 import re
 import sys
-import time
 import traceback
 
 import jax
 
 from repro.configs.registry import ASSIGNED, get_config
+from repro.obs import perf_counter
 from repro.launch.mesh import make_dist, make_production_mesh
 from repro.launch.specs import SHAPES, build_cell
 
@@ -143,15 +143,15 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
     if os.path.exists(fname) and not force:
         print(f"skip {arch} {shape} {mesh_kind} (cached)")
         return json.load(open(fname))
-    t0 = time.time()
+    t0 = perf_counter()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     dist = make_dist(mesh)
     cfg = _apply_variant(get_config(arch), variant)
     cell = build_cell(cfg, shape, dist)
     lowered = cell.fn.lower(*cell.args)
-    t_lower = time.time() - t0
+    t_lower = perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = perf_counter() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     txt = compiled.as_text()

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -28,6 +27,7 @@ from repro.distributed import sharding as SH
 from repro.distributed.context import DistContext, shard_map_compat
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import perf_counter
 from repro.optim import partition as PT
 from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, init_adamw
 from repro.optim.grad_compress import EFState, compressed_psum, init_ef
@@ -187,11 +187,11 @@ class TrainLoop:
         for s in range(start_step, n_steps):
             key = self.it.next_key()
             batch = sample_kv_batch(key, self.layout, self.batch_size)
-            t0 = time.perf_counter()
+            t0 = perf_counter()
             self.tp, self.opt, metrics, self.ef = self.step_fn(
                 self.tp, self.fp, self.opt, batch, self.ef)
             loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = perf_counter() - t0
             straggle = self.watchdog.record(dt)
             self.history.append({"step": s, "loss": loss, "dt": dt,
                                  "straggler": straggle})

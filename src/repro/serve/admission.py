@@ -47,12 +47,20 @@ Overflow policies (what happens when a submit would break a bound):
 
 A request whose tokens alone exceed an applicable bound is shed under
 every policy (``block`` would otherwise hold it forever).
+
+Verdicts are counted in the engine's `MetricsRegistry`
+(``admission_verdicts_total{verdict=...}``); the legacy ``stats`` dict
+is a read-only view over those counters.  Every counter is MONOTONIC —
+a pumped request counts under ``pumped``, not ``admitted`` (direct
+admissions only), so rates computed from scrapes are always
+well-defined.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs import MetricsRegistry
 from repro.serve.scheduler import Request, Scheduler
 
 POLICIES = ("block", "shed-lowest-priority", "reject-new")
@@ -108,7 +116,8 @@ class AdmissionController:
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  default_quota: Optional[TenantQuota] = None,
                  on_shed: Optional[Callable[[Request], None]] = None,
-                 max_backlog: Optional[int] = None):
+                 max_backlog: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         """``max_backlog``: cap on ``block``-policy backlog ENTRIES —
         beyond it even the block policy sheds newcomers, so a producer
         that ignores ``Queued`` verdicts cannot grow host memory without
@@ -127,8 +136,28 @@ class AdmissionController:
         self._queued_tokens: Dict[str, int] = {}   # per tenant, in queue
         self._queued_total = 0
         self._backlog: List[Request] = []          # block-policy holding pen
-        self.stats = {"admitted": 0, "queued": 0, "shed_new": 0,
-                      "shed_victims": 0, "pumped": 0}
+        self._verdicts = (metrics or MetricsRegistry()).counter(
+            "admission_verdicts_total",
+            "admission outcomes: admitted (direct), queued "
+            "(backpressured), pumped (backlog -> queue), shed_new "
+            "(newcomer dropped), shed_victim (queued request displaced)",
+            labels=("verdict",))
+        for v in ("admitted", "queued", "pumped", "shed_new",
+                  "shed_victim"):       # explicit zeros in exports
+            self._verdicts.labels(verdict=v)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counter view over ``admission_verdicts_total``.  All
+        values are monotonic: ``admitted`` counts DIRECT admissions;
+        backlog entries admitted later count under ``pumped`` (their
+        backpressure is already counted under ``queued``)."""
+        v = self._verdicts
+        return {"admitted": int(v.labels(verdict="admitted").value),
+                "queued": int(v.labels(verdict="queued").value),
+                "shed_new": int(v.labels(verdict="shed_new").value),
+                "shed_victims": int(v.labels(verdict="shed_victim").value),
+                "pumped": int(v.labels(verdict="pumped").value)}
 
     # -- introspection -------------------------------------------------
     def quota(self, tenant: str) -> TenantQuota:
@@ -214,7 +243,7 @@ class AdmissionController:
                 return self._shed_new(
                     req, f"backlog full ({self.max_backlog} entries)")
             self._backlog.append(req)
-            self.stats["queued"] += 1
+            self._verdicts.labels(verdict="queued").inc()
             # honest reason: a request that FITS current headroom was
             # backpressured purely by per-tenant FIFO ordering, not by
             # the bound _headroom happened to name
@@ -225,19 +254,22 @@ class AdmissionController:
         return self._shed_for(req, bound)
 
     # -- policy internals ----------------------------------------------
-    def _admit(self, req: Request,
-               victims: Tuple[Request, ...] = ()) -> Admitted:
+    def _admit(self, req: Request, victims: Tuple[Request, ...] = (),
+               from_pump: bool = False) -> Admitted:
         self.scheduler.enqueue(req)
         self._queued_tokens[req.tenant] = (
             self._queued_tokens.get(req.tenant, 0) + req.token_len)
         self._queued_total += req.token_len
-        self.stats["admitted"] += 1
+        # pump admissions get their own counter so both stay monotonic
+        # (the old dict did `admitted -= 1` here, breaking rate queries)
+        self._verdicts.labels(
+            verdict="pumped" if from_pump else "admitted").inc()
         return Admitted(req, shed_victims=victims)
 
     def _shed_new(self, req: Request, reason: str) -> Shed:
         req.shed = True
         req.done = True
-        self.stats["shed_new"] += 1
+        self._verdicts.labels(verdict="shed_new").inc()
         if self._on_shed is not None:
             self._on_shed(req)
         return Shed(req, reason=reason)
@@ -292,7 +324,7 @@ class AdmissionController:
         for v in victims:
             v.shed = True
             v.done = True
-            self.stats["shed_victims"] += 1
+            self._verdicts.labels(verdict="shed_victim").inc()
             if self._on_shed is not None:
                 self._on_shed(v)
         return self._admit(req, tuple(victims))
@@ -341,9 +373,7 @@ class AdmissionController:
                 continue
             room, _ = self._headroom(r.tenant)
             if room is None or r.token_len <= room:
-                self._admit(r)
-                self.stats["admitted"] -= 1     # counted at submit time
-                self.stats["pumped"] += 1
+                self._admit(r, from_pump=True)
                 admitted.append(r)
             else:
                 blocked_tenants.add(r.tenant)

@@ -119,6 +119,12 @@ class SessionArena:
         self._live.remove(slot)
         self._free.append(slot)
 
+    def metrics_sample(self) -> dict:
+        """Point-in-time occupancy sample for gauge export (the engine's
+        ``_sample_gauges`` reads this on every metrics snapshot)."""
+        return {"n_slots": self.n_slots, "live": self.n_slots - self.n_free,
+                "free": self.n_free, "occupancy": self.occupancy}
+
     def consistency_errors(self) -> list:
         """Free-list / live-set invariant violations (empty = healthy):
         no slot both free and live, no duplicates in the free list, and

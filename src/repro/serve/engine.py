@@ -12,9 +12,23 @@ then one fused jitted program per batch (`launch.serve.make_arena_step`)
 gathers their arena rows, runs the vmapped op, and scatters the updated
 rows back, fulfilling the requests.  After every popped batch the
 backpressure backlog is pumped, so blocked submits drain as soon as
-queue capacity frees.  Per-op stats (tokens/s, batches, padding waste),
-arena occupancy and compile counts are tracked for the benchmark
-harness.
+queue capacity frees.
+
+OBSERVABILITY (`repro.obs`, see docs/OBSERVABILITY.md): every counter
+the engine keeps — per-op requests/tokens/padding waste, dispatch
+seconds, compile churn, admission verdicts, offload transfer
+bytes/seconds — lives in one `MetricsRegistry`, exported as JSON
+(`metrics_snapshot`) or Prometheus text (`metrics_prometheus`); the
+legacy ``stats`` dicts remain as thin read-only views.  Pass
+``obs=Observability.tracing()`` for per-request lifecycle spans
+(submit -> verdict -> queue wait -> execute -> terminal), queue-wait /
+end-to-end latency histograms, and a bounded flight recorder the
+engine dumps to stderr when an exception escapes a drain.  The default
+`NullRecorder` makes every trace hook a no-op — cache state and
+verdicts are bit-exact with a recorder-enabled run on the same
+traffic, and all timing stays outside jit (device work is timed around
+dispatch with ``block_until_ready``), so compiled programs never see
+the difference.
 
 Online sessions (ingest/query over ``OnlineState``) and streaming
 sessions (``stream`` over ``StreamState``) live in separate arenas since
@@ -22,7 +36,7 @@ their state templates differ; ``stream_slots=0`` skips the second arena.
 """
 from __future__ import annotations
 
-import time
+import sys
 from typing import Callable, Dict, Optional, Sequence
 
 import jax
@@ -33,6 +47,7 @@ from repro.launch import serve as SRV
 from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
                                 token_bucket)
 from repro.models.config import ModelConfig
+from repro.obs import Observability
 from repro.serve.admission import (AdmissionController, TenantQuota,
                                    Verdict)
 from repro.serve.arena import SessionArena
@@ -41,6 +56,8 @@ from repro.serve.session import (OffloadCostModel, OffloadResult,
                                  SessionManager)
 
 _OP_STATE = {"ingest": "online", "query": "online", "stream": "stream"}
+_STAT_KEYS = ("requests", "tokens", "pad_lanes", "pad_tokens", "lanes",
+              "batches")
 
 
 class ServeEngine:
@@ -58,7 +75,8 @@ class ServeEngine:
                  batched_offload: bool = True,
                  async_offload: bool = False,
                  offload_cost_model: Optional[OffloadCostModel] = None,
-                 step_factory: Optional[Callable] = None):
+                 step_factory: Optional[Callable] = None,
+                 obs: Optional[Observability] = None):
         """``token_buckets``: ragged-batching token buckets ("auto" picks
         `launch.specs.SERVE_TOKEN_BUCKETS` for attention archs and exact-
         length grouping for SSM/hybrid; None forces exact lengths).
@@ -80,7 +98,14 @@ class ServeEngine:
 
         ``step_factory(cfg, op, masked)``: override the fused arena step
         builder (default `launch.serve.make_arena_step`); the serve
-        simulation harness injects a control-plane-only null step."""
+        simulation harness injects a control-plane-only null step.
+
+        ``obs``: `repro.obs.Observability` bundle.  Default = live
+        metrics registry + monotonic clock + `NullRecorder` (no traces,
+        no flight buffer, bit-exact with pre-obs behavior).  Pass
+        ``Observability.tracing()`` for request spans and latency
+        histograms, or inject a `ManualClock` for deterministic
+        timestamps (the simulation harness does both)."""
         self.params = params
         self.cfg = cfg
         self.cache_len = cache_len
@@ -94,11 +119,14 @@ class ServeEngine:
         self.ragged = token_buckets is not None
         self._token_buckets = token_buckets
         self._step_factory = step_factory or SRV.make_arena_step
+        self.obs = obs if obs is not None else Observability()
+        self._build_metrics()
         mgr_kw = dict(batched_offload=batched_offload,
                       async_offload=async_offload,
                       cost_model=offload_cost_model,
                       resident_quota_of=self._resident_quota_of,
-                      pack_buckets=batch_buckets)
+                      pack_buckets=batch_buckets,
+                      obs=self.obs)
         self._mgr: Dict[str, SessionManager] = {
             "online": SessionManager(
                 SessionArena.for_online(cfg, n_slots, cache_len, mem_slots),
@@ -124,22 +152,93 @@ class ServeEngine:
         # eviction per step keeps the window bounded (stream_step guard)
         self.scheduler = Scheduler(
             batch_buckets, max_batch=caps, token_buckets=token_buckets,
-            max_token_len={"stream": cfg.ccm.stream_chunk}, aging=aging)
+            max_token_len={"stream": cfg.ccm.stream_chunk}, aging=aging,
+            metrics=self.obs.registry)
         self.admission = AdmissionController(
             self.scheduler, policy=admission_policy,
             max_queued_tokens=max_queued_tokens, quotas=tenant_quotas,
             default_quota=default_quota, on_shed=self._on_shed,
-            max_backlog=max_backlog)
+            max_backlog=max_backlog, metrics=self.obs.registry)
         self._steps = {}               # op kind -> jitted fn
+        self._seen_shapes = set()      # (kind, lanes, token_len, masked)
         self._kind: Dict[str, str] = {}   # sid -> 'online' | 'stream'
         self._tenant: Dict[str, str] = {}  # sid -> tenant
         self._cached: Dict[str, int] = {}  # sid -> KV-cache tokens used
         self._undelivered = []         # [(requests, device out)] per batch
-        self.stats_wall = 0.0
-        self.stats = {k: {"requests": 0, "tokens": 0, "pad_lanes": 0,
-                          "pad_tokens": 0, "lanes": 0,
-                          "batches": 0, "seconds": 0.0}
-                      for k in ("ingest", "query", "stream")}
+
+    def _build_metrics(self) -> None:
+        reg = self.obs.registry
+        self._m = {
+            "requests": reg.counter(
+                "serve_requests_total",
+                "real requests served, per op kind", labels=("kind",)),
+            "tokens": reg.counter(
+                "serve_tokens_total",
+                "real (valid) tokens served, per op kind",
+                labels=("kind",)),
+            "pad_lanes": reg.counter(
+                "serve_pad_lanes_total",
+                "scratch lanes added to reach a batch bucket",
+                labels=("kind",)),
+            "pad_tokens": reg.counter(
+                "serve_pad_tokens_total",
+                "token-bucket padding waste on real lanes",
+                labels=("kind",)),
+            "lanes": reg.counter(
+                "serve_lanes_total", "total batch lanes dispatched",
+                labels=("kind",)),
+            "batches": reg.counter(
+                "serve_batches_total", "batches dispatched",
+                labels=("kind",)),
+            "dispatch_s": reg.counter(
+                "serve_dispatch_seconds_total",
+                "host time spent dispatching fused steps (async — the "
+                "synced drain wall clock is serve_wall_seconds_total)",
+                labels=("kind",)),
+            "wall_s": reg.counter(
+                "serve_wall_seconds_total",
+                "synchronized wall seconds across all drains"),
+            "compiled": reg.counter(
+                "serve_compiled_programs_total",
+                "first-seen fused-step shapes (compile churn), per "
+                "(kind, LANESxTOKENS[/masked]) bucket",
+                labels=("kind", "shape")),
+        }
+        # pre-create per-kind children so exports carry explicit zeros
+        for fam in ("requests", "tokens", "pad_lanes", "pad_tokens",
+                    "lanes", "batches", "dispatch_s"):
+            for k in _OP_STATE:
+                self._m[fam].labels(kind=k)
+        self._g = {
+            "occupancy": reg.gauge(
+                "serve_arena_occupancy",
+                "fraction of arena slots allocated", labels=("arena",)),
+            "slots": reg.gauge(
+                "serve_arena_slots", "arena slot counts",
+                labels=("arena", "state")),
+            "resident": reg.gauge(
+                "serve_resident_sessions",
+                "device-resident sessions", labels=("arena",)),
+            "queue_depth": reg.gauge(
+                "serve_queue_depth",
+                "requests in the scheduler queue"),
+            "backlog_depth": reg.gauge(
+                "serve_backlog_depth",
+                "requests held in the admission backlog"),
+            "quota_pressure": reg.gauge(
+                "serve_tenant_quota_pressure",
+                "per-tenant queued-token usage / quota (explicitly "
+                "quota'd tenants only)", labels=("tenant",)),
+        }
+        self._probe = {
+            "probes": reg.counter(
+                "serve_arena_consistency_probes_total",
+                "free-list integrity probes run", labels=("arena",)),
+            "errors": reg.counter(
+                "serve_arena_consistency_errors_total",
+                "free-list integrity violations found (must stay 0)",
+                labels=("arena",)),
+        }
 
     def _resident_quota_of(self, tenant: str) -> Optional[int]:
         return self.admission.quota(tenant).max_resident
@@ -156,7 +255,10 @@ class ServeEngine:
         self._tenant[sid] = tenant
 
     def close_session(self, sid: str) -> None:
-        self.admission.cancel(sid)      # backlog + queue, flags `cancelled`
+        dropped = self.admission.cancel(sid)  # backlog + queue
+        rec = self.obs.recorder
+        for r in dropped:                     # terminal span: cancelled
+            rec.cancelled(r)
         self._cached.pop(sid, None)
         self._tenant.pop(sid, None)
         self._mgr[self._kind.pop(sid)].close(sid)
@@ -211,7 +313,27 @@ class ServeEngine:
                     f"{self.cache_len}; close the session or build the "
                     "engine with a larger cache_len")
             self._cached[sid] = used + n
-        return self.admission.submit_request(req)
+        rec = self.obs.recorder
+        rec.submit(req)
+        verdict = self.admission.submit_request(req)
+        self._record_verdict(verdict)
+        return verdict
+
+    def _record_verdict(self, verdict: Verdict) -> None:
+        """Span events for the verdict — the engine observes everything
+        from the structured return value, so admission stays recorder-
+        free (pure control plane)."""
+        rec = self.obs.recorder
+        req = verdict.request
+        cls = type(verdict).__name__
+        if cls == "Admitted":
+            rec.admitted(req)
+            for v in verdict.shed_victims:     # terminal: displaced
+                rec.shed(v, "displaced by higher-priority submit")
+        elif cls == "Queued":
+            rec.backlogged(req, verdict.reason)
+        else:                                  # Shed
+            rec.shed(req, verdict.reason)
 
     def ingest(self, sid, tokens, priority: int = 0) -> Verdict:
         return self._submit(sid, "ingest", tokens, priority)
@@ -232,6 +354,18 @@ class ServeEngine:
         if key not in self._steps:
             self._steps[key] = self._step_factory(self.cfg, op, masked)
         return self._steps[key]
+
+    def _note_shape(self, op: str, lanes: int, token_len: int,
+                    masked: bool) -> None:
+        """Count first-seen fused-step shapes: the compile-churn signal
+        the bucket-ladder cost model (ROADMAP item 5) feeds on.  jit
+        caches by (B, token_len) and program variant, so each new key
+        here is (at most) one fresh XLA compile."""
+        key = (op, lanes, token_len, masked)
+        if key not in self._seen_shapes:
+            self._seen_shapes.add(key)
+            shape = f"{lanes}x{token_len}" + ("/masked" if masked else "")
+            self._m["compiled"].labels(kind=op, shape=shape).inc()
 
     def _make_replay(self, state_kind: str):
         """Replay a recompute-dropped session's request history into its
@@ -254,6 +388,7 @@ class ServeEngine:
                 buf[0, 0, :L] = flat
                 masked = self.ragged and tl != L
                 step = self._step(op, masked)
+                self._note_shape(op, 1, tl, masked)
                 _, arena.slabs = step(self.params, arena.slabs, ids, buf,
                                       np.asarray([L], np.int32))
             arena.mark_dirty([slot])
@@ -262,8 +397,9 @@ class ServeEngine:
     def _run_batch(self, batch: ScheduledBatch) -> None:
         mgr = self._mgr[_OP_STATE[batch.kind]]
         arena = mgr.arena
+        rec = self.obs.recorder
         pinned = {r.sid for r in batch.requests}
-        t0 = time.perf_counter()
+        t0 = self.obs.clock.now()
         slots = mgr.activate_batch([r.sid for r in batch.requests], pinned)
         ids = slots + [arena.pad_slot] * batch.pad
         # lanes padded up to the batch's token bucket; per-lane valid
@@ -281,27 +417,34 @@ class ServeEngine:
         masked = self.ragged and any(vl != batch.token_len
                                      for vl in batch.valid_lens)
         step = self._step(batch.kind, masked)
+        self._note_shape(batch.kind, batch.bucket, batch.token_len, masked)
         out, arena.slabs = step(self.params, arena.slabs,
                                 jnp.asarray(ids, jnp.int32), toks, lengths)
         arena.mark_dirty(ids)
-        dt = time.perf_counter() - t0
+        dt = self.obs.clock.now() - t0
         # results are NOT materialized here — np.asarray(out) would
         # block on this batch's compute and serialize the drain; run()
         # converts all outs after the last dispatch (one transfer per
         # batch, per-request results become zero-copy numpy views)
         self._undelivered.append((batch.requests, out))
+        shape = f"{batch.bucket}x{batch.token_len}" \
+            + ("/masked" if masked else "")
         for r in batch.requests:
             mgr.sessions[r.sid].n_ops += 1
             mgr.record(r.sid, r.kind, r.tokens[0])
-        s = self.stats[batch.kind]
-        s["requests"] += len(batch.requests)
-        s["tokens"] += sum(batch.valid_lens)
-        s["pad_lanes"] += batch.pad
-        s["pad_tokens"] += (len(batch.requests) * batch.token_len
-                            - sum(batch.valid_lens))
-        s["lanes"] += batch.bucket
-        s["batches"] += 1
-        s["seconds"] += dt
+            rec.executed(r, shape)
+        rec.note("batch", f"kind={batch.kind} shape={shape} "
+                          f"real={len(batch.requests)} pad={batch.pad} "
+                          f"dispatch_s={dt:.6f}")
+        m = self._m
+        m["requests"].labels(kind=batch.kind).inc(len(batch.requests))
+        m["tokens"].labels(kind=batch.kind).inc(sum(batch.valid_lens))
+        m["pad_lanes"].labels(kind=batch.kind).inc(batch.pad)
+        m["pad_tokens"].labels(kind=batch.kind).inc(
+            len(batch.requests) * batch.token_len - sum(batch.valid_lens))
+        m["lanes"].labels(kind=batch.kind).inc(batch.bucket)
+        m["batches"].labels(kind=batch.kind).inc()
+        m["dispatch_s"].labels(kind=batch.kind).inc(dt)
 
     def run(self, max_batches: Optional[int] = None) -> int:
         """Drain the queue (or up to ``max_batches``); returns batches
@@ -309,21 +452,37 @@ class ServeEngine:
         backpressured submits enter the queue as soon as their tokens
         fit — and the drain only ends once both the queue AND the
         pumpable backlog are empty.  Synchronizes once at the end, so
-        per-kind ``seconds`` are dispatch times and the drain's wall
-        clock is the true cost."""
+        per-kind dispatch seconds are dispatch times and the drain's
+        wall clock is the true cost.  If anything escapes mid-drain the
+        flight recorder's last events are dumped to stderr before the
+        exception propagates."""
+        try:
+            return self._run(max_batches)
+        except Exception as exc:                 # noqa: BLE001 — re-raised
+            self._dump_flight_on_error(exc)
+            raise
+
+    def _run(self, max_batches: Optional[int]) -> int:
+        rec = self.obs.recorder
         n = 0
-        t0 = time.perf_counter()
+        t0 = self.obs.clock.now()
         while max_batches is None or n < max_batches:
             # recomputed per pop: pumped backlog entries can introduce
             # tenants that were not queued when the drain started
             batch = self.scheduler.next_batch(*self.admission.lane_caps())
             if batch is None:
-                if self.admission.pump():
+                pumped = self.admission.pump()
+                if pumped:
+                    for r in pumped:
+                        rec.pumped(r)
                     continue
                 break
             self.admission.note_popped(batch.requests)
+            for r in batch.requests:
+                rec.popped(r)
             self._run_batch(batch)
-            self.admission.pump()
+            for r in self.admission.pump():
+                rec.pumped(r)
             n += 1
         if n:
             for reqs, out in self._undelivered:
@@ -335,6 +494,7 @@ class ServeEngine:
                     r.result = out_np[i, 0, :r.token_len] \
                         if out_np is not None else None
                     r.done = True
+                    rec.finished(r)
             self._undelivered.clear()
         for m in self._mgr.values():
             # unconditional: async offload_session() transfers may be in
@@ -344,26 +504,65 @@ class ServeEngine:
         if n:
             for m in self._mgr.values():
                 jax.block_until_ready(jax.tree.leaves(m.arena.slabs)[0])
-            self.stats_wall += time.perf_counter() - t0
+            self._m["wall_s"].inc(self.obs.clock.now() - t0)
         return n
 
+    def _dump_flight_on_error(self, exc: BaseException) -> None:
+        """Crash forensics: print the flight recorder's bounded ring of
+        recent events to stderr (no-op under `NullRecorder`)."""
+        rec = self.obs.recorder
+        rec.note("error", repr(exc))
+        lines = rec.flight_lines()
+        if lines:
+            print(f"--- serve flight recorder ({len(lines)} events, "
+                  f"most recent last) ---", file=sys.stderr)
+            for line in lines:
+                print(line, file=sys.stderr)
+            print("--- end flight recorder ---", file=sys.stderr)
+
     # -- introspection -------------------------------------------------
-    def compile_stats(self) -> Dict[str, int]:
+    @property
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Legacy per-kind stats view, now read from the registry
+        (``serve_*_total{kind}``).  ``seconds`` are dispatch times only;
+        the synced drain wall clock is ``stats_wall``."""
+        out = {}
+        for k in _OP_STATE:
+            out[k] = {key: int(self._m[key].labels(kind=k).value)
+                      for key in _STAT_KEYS}
+            out[k]["seconds"] = float(
+                self._m["dispatch_s"].labels(kind=k).value)
+        return out
+
+    @property
+    def stats_wall(self) -> float:
+        """Synchronized wall seconds across all drains (registry view of
+        ``serve_wall_seconds_total``)."""
+        return float(self._m["wall_s"].value)
+
+    def compile_stats(self, clamped: bool = False) -> Dict[str, int]:
         """Compiled-program count per op kind (recompile-churn metric),
-        summed over the masked/unmasked step variants; -1 when the jit
-        cache size is unavailable (private API) — unmeasured, not zero."""
+        summed over the masked/unmasked step variants.
+
+        A kind whose jit cache size is unavailable (private
+        ``_cache_size`` API missing) reports the sentinel ``-1`` —
+        *unmeasured*, not zero.  ``clamped=True`` maps that sentinel to
+        0 so totals can be summed; this is the ONE place the clamp
+        happens (callers must not re-clamp)."""
         out: Dict[str, int] = {}
         for (op, _), fn in self._steps.items():
             n = fn._cache_size() if hasattr(fn, "_cache_size") else -1
             prev = out.get(op, 0)
             out[op] = -1 if (n < 0 or prev < 0) else prev + n
+        if clamped:
+            out = {k: max(v, 0) for k, v in out.items()}
         return out
 
     def compiled_programs(self) -> int:
         """Total compiled programs across op kinds (compile-cache churn:
         compare exact-length vs token-bucketed scheduling on the same
-        traffic)."""
-        return sum(max(v, 0) for v in self.compile_stats().values())
+        traffic).  Unmeasured kinds count as 0 (see ``compile_stats``)."""
+        return sum(self.compile_stats(clamped=True).values())
 
     def batch_occupancy(self) -> Dict[str, float]:
         """Mean fraction of batch lanes holding a real request, per op
@@ -386,4 +585,58 @@ class ServeEngine:
         """Overall tokens/s across all drains (synced wall clock).
         Per-kind ``stats[kind]['seconds']`` are dispatch times only."""
         total = sum(s["tokens"] for s in self.stats.values())
-        return total / self.stats_wall if self.stats_wall else 0.0
+        wall = self.stats_wall
+        return total / wall if wall else 0.0
+
+    # -- metrics export ------------------------------------------------
+    def _sample_gauges(self) -> None:
+        """Refresh point-in-time gauges and run the arena free-list
+        integrity probe (probe/error counters) — called on every
+        snapshot/export so gauges are current at read time."""
+        g, probe = self._g, self._probe
+        for kind, mgr in self._mgr.items():
+            arena = mgr.arena
+            sample = arena.metrics_sample()
+            g["occupancy"].labels(arena=kind).set(sample["occupancy"])
+            g["slots"].labels(arena=kind, state="live").set(sample["live"])
+            g["slots"].labels(arena=kind, state="free").set(sample["free"])
+            g["resident"].labels(arena=kind).set(mgr.n_resident)
+            errs = arena.consistency_errors()
+            probe["probes"].labels(arena=kind).inc()
+            if errs:
+                probe["errors"].labels(arena=kind).inc(len(errs))
+                self.obs.recorder.note(
+                    "arena-integrity", f"{kind}: {errs}")
+        g["queue_depth"].set(self.scheduler.pending)
+        g["backlog_depth"].set(len(self.admission.backlog))
+        for tenant, quota in self.admission.quotas.items():
+            if quota.max_queued_tokens:
+                g["quota_pressure"].labels(tenant=tenant).set(
+                    self.admission.queued_tokens(tenant)
+                    / quota.max_queued_tokens)
+
+    def metrics_snapshot(self) -> dict:
+        """Full JSON-ready metrics export: every registry family plus a
+        ``derived`` block of ratios the registry cannot express
+        (throughput, occupancy, compile stats).  See
+        docs/OBSERVABILITY.md for the catalog."""
+        self._sample_gauges()
+        return {
+            "metrics": self.obs.registry.snapshot(),
+            "derived": {
+                "throughput_tok_per_s": self.throughput(),
+                "batch_occupancy": self.batch_occupancy(),
+                "arena_occupancy": self.occupancy(),
+                "resident": self.resident(),
+                "queue_depth": self.queue_depth(),
+                "compile_stats": self.compile_stats(),
+                "admission": dict(self.admission.stats),
+            },
+        }
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of the registry (gauges freshly
+        sampled).  Derived ratios are JSON-snapshot-only — Prometheus
+        consumers compute rates from the raw counters."""
+        self._sample_gauges()
+        return self.obs.registry.to_prometheus()

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
                                 batch_bucket, token_bucket)
+from repro.obs import MetricsRegistry
 
 _KINDS = ("ingest", "query", "stream")
 
@@ -84,7 +85,8 @@ class Scheduler:
                  max_batch=None,
                  token_buckets: Optional[Sequence[int]] = SERVE_TOKEN_BUCKETS,
                  max_token_len: Union[int, Dict[str, int], None] = None,
-                 aging: Optional[int] = 32):
+                 aging: Optional[int] = 32,
+                 metrics: Optional[MetricsRegistry] = None):
         """``max_batch``: int cap for every op kind, or a dict
         ``{kind: cap}`` (a kind's batch must fit its arena).
 
@@ -114,6 +116,14 @@ class Scheduler:
         self._queue: List[Request] = []
         self._seq = itertools.count()
         self._round = 0
+        reg = metrics or MetricsRegistry()
+        self._m_aged = reg.counter(
+            "sched_aging_promotions_total",
+            "requests popped into a batch with an aged (improved) "
+            "effective priority — the anti-starvation mechanism firing")
+        self._m_popped = reg.counter(
+            "sched_batches_popped_total",
+            "batches popped from the queue (the aging clock)")
 
     def make_request(self, sid: str, kind: str, tokens, priority: int = 0,
                      tenant: str = "default") -> Request:
@@ -243,7 +253,9 @@ class Scheduler:
         elig = self._eligible()
         if not elig:
             return None
-        self._round += 1
+        round0 = self._round     # the round the eligible order was built
+        self._round += 1         # under, BEFORE this pop advanced aging
+        self._m_popped.inc()
         head = elig[0]
         tlen = self._head_token_len(head)
         cap = self.max_batch.get(head.kind, self.batch_buckets[-1])
@@ -264,6 +276,9 @@ class Scheduler:
                     continue
             taken.append(r)
             lanes_of[r.tenant] = lanes_of.get(r.tenant, 0) + 1
+        if self.aging:
+            self._m_aged.inc(sum(
+                1 for r in taken if (round0 - r.round) // self.aging > 0))
         taken_set = set(id(r) for r in taken)
         self._queue = [r for r in self._queue if id(r) not in taken_set]
         bucket = min(batch_bucket(len(taken), self.batch_buckets), cap)

@@ -39,6 +39,7 @@ import jax
 import numpy as np
 
 from repro.launch.specs import batch_bucket
+from repro.obs import Observability
 from repro.serve.arena import ArenaFull, SessionArena
 
 
@@ -109,7 +110,8 @@ class SessionManager:
                  replay_fn: Optional[Callable] = None,
                  resident_quota_of: Optional[Callable[[str],
                                                       Optional[int]]] = None,
-                 pack_buckets: Optional[Sequence[int]] = None):
+                 pack_buckets: Optional[Sequence[int]] = None,
+                 obs: Optional[Observability] = None):
         """``batched_offload``: move k victims with one gather + one
         `device_put` each way (False = per-victim transfers).
         ``async_offload``: don't block on the device->host copy; the
@@ -141,6 +143,61 @@ class SessionManager:
         self._state_bytes = sum(
             math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
             for leaf in jax.tree.leaves(arena.template))
+        self.obs = obs if obs is not None else Observability()
+        reg = self.obs.registry
+        # engines with several arenas (online + stream) share one
+        # registry; declaration is idempotent so these families
+        # aggregate across managers
+        self._m_bytes = reg.counter(
+            "offload_bytes_total",
+            "state bytes transferred device<->host, pack padding "
+            "included (actual wire bytes)", labels=("dir",))
+        self._m_seconds = reg.counter(
+            "offload_transfer_seconds_total",
+            "host seconds around the transfer: true (blocked) time on "
+            "synchronous offloads, dispatch time on async offloads and "
+            "restores", labels=("dir",))
+        self._m_sessions = reg.counter(
+            "offload_sessions_total",
+            "sessions moved device<->host", labels=("dir",))
+        self._m_decisions = reg.counter(
+            "offload_decisions_total",
+            "cost-model offload decisions (transfer vs recompute); "
+            "absent when no cost model is wired", labels=("decision",))
+        self._m_replays = reg.counter(
+            "offload_replay_sessions_total",
+            "recompute-dropped sessions rebuilt from request history")
+        self._m_replay_tokens = reg.counter(
+            "offload_replay_tokens_total",
+            "tokens re-executed by restore replays")
+        self._m_sync_s = reg.counter(
+            "offload_sync_seconds_total",
+            "seconds blocked in sync() barriers on async transfers")
+        self._g_bw = reg.gauge(
+            "offload_measured_bandwidth_bytes_per_s",
+            "device->host bandwidth measured on the last synchronous "
+            "offload transfer (calibrates OffloadCostModel "
+            "host_bandwidth; 0 until the first blocking transfer)")
+        for d in ("offload", "restore"):
+            self._m_bytes.labels(dir=d)
+            self._m_seconds.labels(dir=d)
+            self._m_sessions.labels(dir=d)
+
+    def _count_transfer(self, direction: str, n_rows: int, n_sessions: int,
+                        seconds: float, measured: bool) -> None:
+        """Book one device<->host transfer; ``measured`` marks a blocked
+        (true wall time) transfer, which also updates the bandwidth
+        gauge the cost model can be calibrated against."""
+        n_bytes = n_rows * self._state_bytes
+        self._m_bytes.labels(dir=direction).inc(n_bytes)
+        self._m_seconds.labels(dir=direction).inc(seconds)
+        self._m_sessions.labels(dir=direction).inc(n_sessions)
+        if measured and seconds > 0:
+            self._g_bw.set(n_bytes / seconds)
+        self.obs.recorder.note(
+            direction, f"sessions={n_sessions} rows={n_rows} "
+                       f"bytes={n_bytes} seconds={seconds:.6f}"
+                       + (" (dispatch)" if not measured else ""))
 
     # -- lifecycle -----------------------------------------------------
     def create(self, sid: str, tenant: str = "default") -> Session:
@@ -263,6 +320,10 @@ class SessionManager:
                     "is wired (cost model dropped its state)")
             self.replay_fn(sess.sid, sess.slot, sess.history or [])
             sess.needs_replay = False
+            self._m_replays.inc()
+            self._m_replay_tokens.inc(sess.history_tokens)
+            self.obs.recorder.note(
+                "replay", f"sid={sess.sid} tokens={sess.history_tokens}")
         return [self.sessions[sid].slot for sid in sids]
 
     # -- offload -------------------------------------------------------
@@ -290,7 +351,9 @@ class SessionManager:
             # token arrays and stop recording (bounds host memory; the
             # session is transfer-only from here on)
             sess.history = None
+            self._m_decisions.labels(decision="transfer").inc()
             return False
+        self._m_decisions.labels(decision="recompute").inc()
         self.arena.free(sess.slot)
         sess.slot = None
         sess.host_state = None
@@ -309,11 +372,14 @@ class SessionManager:
         if self._drop_for_recompute(sess):
             return OffloadResult(sid, "recompute")
         state = self.arena.read_slot(sess.slot)
+        t0 = self.obs.clock.now()
         host = jax.device_put(state, self._host)
         if self.async_offload:
             self._inflight.append(host)
         else:
             host = jax.block_until_ready(host)
+        self._count_transfer("offload", 1, 1, self.obs.clock.now() - t0,
+                             measured=not self.async_offload)
         sess.host_state = host
         self.arena.free(sess.slot)
         sess.slot = None
@@ -348,11 +414,15 @@ class SessionManager:
             n = self._bucket(len(slots))
             ids = slots + [self.arena.pad_slot] * (n - len(slots))
             packed = self.arena.pack(ids)
+            t0 = self.obs.clock.now()
             host = jax.device_put(packed, self._host)
             if self.async_offload:
                 self._inflight.append(host)
             else:
                 host = jax.block_until_ready(host)
+            self._count_transfer("offload", n, len(todo),
+                                 self.obs.clock.now() - t0,
+                                 measured=not self.async_offload)
             for i, sess in enumerate(todo):
                 sess.host_state = jax.tree.map(lambda x, i=i: x[i], host)
                 self.arena.free(sess.slot)
@@ -390,13 +460,22 @@ class SessionManager:
             return np.stack(rows)
 
         stacked = jax.tree.map(stack, *hosts)
+        t0 = self.obs.clock.now()
         dev = jax.device_put(stacked, self._device)
         self.arena.unpack(ids, dev)
+        # dispatch time only: blocking here to measure the true copy
+        # would serialize restore against the batch that triggered it
+        self._count_transfer("restore", n, len(sess_list),
+                             self.obs.clock.now() - t0, measured=False)
         for sess in sess_list:
             sess.host_state = None
 
     def sync(self) -> None:
         """Barrier for ``async_offload`` transfers still in flight."""
+        if not self._inflight:
+            return
+        t0 = self.obs.clock.now()
         for t in self._inflight:
             jax.block_until_ready(t)
         self._inflight.clear()
+        self._m_sync_s.inc(self.obs.clock.now() - t0)

@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.launch.serve import make_null_step
+from repro.obs import ManualClock, Observability
 from repro.serve import ServeEngine, TenantQuota
 from repro.serve.scheduler import Request
 
@@ -56,6 +57,7 @@ class Snapshot:
     true_queued_tokens: Dict[str, int]    # recomputed from the raw queue
     backlog: int
     consistency: List[str]                # arena free-list violations
+    admission_counters: Dict[str, int]    # registry verdict counters
 
 
 @dataclasses.dataclass
@@ -83,7 +85,15 @@ class ServeSimulation:
                  batched_offload: bool = True,
                  async_offload: bool = False,
                  offload_cost_model=None,
-                 params=None):
+                 params=None,
+                 obs: Optional[Observability] = None):
+        # tracing on a ManualClock by default: event application advances
+        # the clock by exactly 1.0s, so every span timestamp — and
+        # therefore every latency histogram bucket — is reproducible
+        # run-to-run (the obs property suite depends on this)
+        self.obs = obs if obs is not None \
+            else Observability.tracing(clock=ManualClock())
+        self.clock = self.obs.clock
         self.engine = ServeEngine(
             params, cfg, n_slots=n_slots, cache_len=cache_len,
             max_resident=max_resident, batch_buckets=batch_buckets,
@@ -93,7 +103,8 @@ class ServeSimulation:
             tenant_quotas=quotas, default_quota=default_quota,
             batched_offload=batched_offload, async_offload=async_offload,
             offload_cost_model=offload_cost_model,
-            step_factory=None if params is not None else make_null_step)
+            step_factory=None if params is not None else make_null_step,
+            obs=self.obs)
         self.cache_len = cache_len
         self.verdicts: List[Tuple[Tuple, Any]] = []
         self.snapshots: List[Snapshot] = []
@@ -132,6 +143,8 @@ class ServeSimulation:
         return True
 
     def apply(self, event: Tuple) -> Snapshot:
+        if hasattr(self.clock, "advance"):
+            self.clock.advance(1.0)       # one simulated second per event
         kind = event[0]
         if kind == "create":
             _, sid, tenant = event
@@ -208,7 +221,8 @@ class ServeSimulation:
                            for t in tenants},
             true_queued_tokens=true_q,
             backlog=len(eng.admission.backlog),
-            consistency=mgr.arena.consistency_errors())
+            consistency=mgr.arena.consistency_errors(),
+            admission_counters=dict(eng.admission.stats))
 
     def accounting(self) -> Accounting:
         return Accounting(

@@ -143,9 +143,18 @@ def run_trace(cfg, events, conf) -> None:
     `ArenaFull` (or any other exception) escaping the engine fails the
     trace — overflow must always resolve to a structured verdict."""
     sim = build_sim(cfg, conf)
+    prev_counters = None
     for ev in events:
         snap = sim.apply(_expand(ev))
         check_snapshot(snap, conf)
+        # 7. admission counters are MONOTONIC across events (the pump
+        # counts under 'pumped' instead of mutating 'admitted')
+        if prev_counters is not None:
+            for k, v in snap.admission_counters.items():
+                assert v >= prev_counters[k], (
+                    f"counter {k} went backwards: "
+                    f"{prev_counters[k]} -> {v}")
+        prev_counters = snap.admission_counters
     check_snapshot(sim.finish(), conf)
 
     # 5. backpressure liveness: a final drain empties queue AND backlog
