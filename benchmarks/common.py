@@ -123,9 +123,14 @@ def _graft_lora(params: Dict, fresh: Dict) -> Dict:
 
 def eval_at_timesteps(params: Dict, cfg: ModelConfig,
                       ts=(1, 2, 4), n_batches: int = 6,
-                      seed: int = 99,
+                      seed: int = 99, query_pool: str = "ctx",
                       unconditional: bool = False) -> Dict[int, float]:
-    """Accuracy of value prediction at each online time step t."""
+    """Accuracy of value prediction at each online time step t.
+
+    ``query_pool="ctx"`` (default) queries only keys shown in context —
+    per-retrieval fidelity.  ``query_pool="all"`` queries the whole key
+    space — mapping COVERAGE, the quantity the paper's Fig. 7 trend is
+    about (see `sample_kv_batch`)."""
     out = {}
     for t in ts:
         layout = layout_for(t, cfg.ccm.comp_len)
@@ -134,7 +139,8 @@ def eval_at_timesteps(params: Dict, cfg: ModelConfig,
         correct = total = 0
         for b in range(n_batches):
             batch = sample_kv_batch(jax.random.fold_in(
-                jax.random.PRNGKey(seed), t * 100 + b), layout, 16, TASK)
+                jax.random.PRNGKey(seed), t * 100 + b), layout, 16, TASK,
+                query_pool=query_pool)
             logits = fn(batch["tokens"])
             tail = batch["tokens"][:, layout.seq_len - layout.tail_len:]
             pred = jnp.argmax(logits[:, :-1], axis=-1)

@@ -32,6 +32,13 @@ across modes — only the transfer batching changes throughput).
 engine's full metrics snapshot as PREFIX.json + PREFIX.prom (the CI
 artifact).
 
+A fourth scenario drives the same saturating ingest traffic under a
+tight DEVICE-MEMORY budget (`PressurePolicy.capacity_tokens`) twice:
+memory-pressure controller on (recompress -> offload -> shed ladder)
+vs levers off (every deficit goes straight to shed).  The acceptance
+invariant — recorded as ``pressure.controller_reduces_shed`` — is a
+strictly lower shed count with the controller on at EQUAL capacity.
+
 Also checks the LRU offload path end-to-end: a session offloaded to host
 and restored must reproduce its query logits EXACTLY (allclose) vs a
 never-offloaded run.
@@ -62,7 +69,7 @@ from benchmarks import common as C
 from repro.core import inference as I
 from repro.models import transformer as T
 from repro.obs import Observability
-from repro.serve import ServeEngine
+from repro.serve import PressurePolicy, ServeEngine
 
 
 def _workload(n_sessions, turns, chunk, qlen, vocab, seed=0):
@@ -259,6 +266,58 @@ def run_open_loop(params, cfg, *, mode, rounds, arrivals_per_round=4,
     }, eng
 
 
+def run_pressure(params, cfg, *, on, rounds, capacity_tokens=48,
+                 arrivals_per_round=4, n_sessions=12, n_slots=6,
+                 max_resident=5, seed=13):
+    """Open-loop saturation under a DEVICE-MEMORY budget: identical
+    ingest-heavy traffic against the same ``capacity_tokens``, with the
+    pressure controller's cheap levers enabled (``on=True``: recompress
+    -> offload -> shed ladder) or disabled (``on=False``: every budget
+    deficit falls straight through to the shed policy).  The acceptance
+    criterion is a strictly lower shed rate with the controller on —
+    degradation (coarser compressed memory, offloaded idle sessions)
+    traded for dropped requests at EQUAL capacity."""
+    policy = PressurePolicy(capacity_tokens=capacity_tokens,
+                            enable_recompress=on, enable_offload=on)
+    eng = ServeEngine(params, cfg, n_slots=n_slots,
+                      max_resident=max_resident, cache_len=64,
+                      batch_buckets=(1, 2, 4),
+                      admission_policy="shed-lowest-priority",
+                      batched_offload=True, pressure_policy=policy)
+    rng = np.random.RandomState(seed)
+    for s in range(n_sessions):
+        eng.create_session(f"u{s}")
+    submitted = 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for _ in range(arrivals_per_round):
+            s = rng.randint(n_sessions)
+            ln = (3, 5, 8)[rng.randint(3)]
+            toks = rng.randint(0, cfg.vocab_size, size=ln).astype(np.int32)
+            eng.ingest(f"u{s}", toks, priority=int(rng.randint(3)))
+            submitted += 1
+        eng.run(max_batches=1)          # service rate < arrival rate
+    eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.admission.stats
+    shed = st["shed_new"] + st["shed_victims"]
+    ctl = eng.pressure
+    levers = {lv: int(ctl._m_decisions.labels(lever=lv).value)
+              for lv in ("recompress", "offload", "shed")}
+    freed = {lv: float(ctl._m_freed.labels(lever=lv).value)
+             for lv in ("recompress", "offload")}
+    toks_served = sum(s_["tokens"] for s_ in eng.stats.values())
+    return {
+        "controller": "on" if on else "off",
+        "capacity_tokens": capacity_tokens,
+        "submitted": submitted, "shed": shed,
+        "shed_rate": shed / submitted,
+        "lever_decisions": levers, "tokens_freed": freed,
+        "used_tokens_final": ctl.used_tokens(),
+        "tok_per_s": toks_served / wall, "wall_s": wall,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, default=96)
@@ -378,6 +437,26 @@ def main():
         r["tok_per_s"] for r in open_loop[1:])
     print(f"batched-offload speedup under churn: {best / base:.2f}x")
 
+    # -- memory-pressure ladder: controller on vs off, equal capacity ----
+    pressure = {}
+    for arm in (True, False):
+        r = run_pressure(params, cfg, on=arm, rounds=args.open_rounds)
+        pressure["on" if arm else "off"] = r
+        lv = r["lever_decisions"]
+        print(f"\npressure [{r['controller']:3s}] capacity="
+              f"{r['capacity_tokens']}: shed rate {r['shed_rate']:.2f} "
+              f"({r['shed']}/{r['submitted']}), levers "
+              f"recompress={lv['recompress']} offload={lv['offload']} "
+              f"shed-handoff={lv['shed']}, {r['tok_per_s']:7.0f} tok/s")
+        C.csv_row(f"serve_pressure_{r['controller']}", r["wall_s"] * 1e6,
+                  f"shed {r['shed_rate']:.2f} @cap {r['capacity_tokens']}")
+    reduces = pressure["on"]["shed"] < pressure["off"]["shed"]
+    print(f"controller reduces shed at equal capacity: {reduces} "
+          f"({pressure['on']['shed']} vs {pressure['off']['shed']})")
+    if not reduces:
+        print("WARNING: pressure controller must shed strictly less than "
+              "levers-off at equal capacity")
+
     results = {
         "config": {"sessions": args.sessions, "turns": args.turns,
                    "chunk": args.chunk, "qlen": args.qlen,
@@ -397,6 +476,8 @@ def main():
             "ragged_matches_exact": bool(same)},
         "open_loop": open_loop,
         "open_loop_control_plane_deterministic": deterministic,
+        "pressure": {**pressure,
+                     "controller_reduces_shed": bool(reduces)},
     }
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)

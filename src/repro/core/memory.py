@@ -97,3 +97,51 @@ def evict_oldest(mem: MemState, comp_len: int) -> MemState:
     k = jnp.roll(mem.k, -comp_len, axis=2)
     v = jnp.roll(mem.v, -comp_len, axis=2)
     return mem._replace(k=k, v=v, slots=jnp.maximum(mem.slots - 1, 0))
+
+
+def recompress_memory(cfg: ModelConfig, mem: MemState,
+                      group: int) -> MemState:
+    """Re-run the merge over EXISTING memory slots at a higher ratio:
+    every ``group`` consecutive filled <COMP> groups collapse into one
+    (position-aligned arithmetic mean, the same g_update reduction that
+    merge mode applies across time steps), shrinking a g-group memory to
+    ceil(g / group) groups in place.
+
+    This is the memory-pressure controller's cheapest lever
+    (`serve.pressure`): trade reconstruction fidelity for slots without
+    touching the host — quality degrades like a coarser ``comp_len``
+    would have, but the state stays resident and attendable.
+
+    Fixed-shape and jit-safe under a DYNAMIC ``slots`` scalar: the
+    grouped mean is one einsum against a (G, G) one-hot/weight matrix
+    built from ``slots``, so the same compiled program serves any fill
+    level.  Groups at or past the new count are zeroed (they are
+    invalid — ``valid_len`` masks them out of attention).  Merge mode
+    (1 slot) and ``group == 1`` return the state unchanged; lanes that
+    must stay BIT-exact (e.g. not-selected lanes of a serve batch,
+    whose invalid region may hold stale evicted groups) go through
+    `streaming.recompress_memory_lanes`, which re-selects them wholesale.
+    ``steps`` / ``stream_pos`` are unchanged — recompression rewrites
+    the memory's *representation*, not the stream timeline."""
+    if group < 1:
+        raise ValueError(f"recompress group must be >= 1, got {group}")
+    m = cfg.ccm.comp_len
+    G = mem.k.shape[2] // m
+    if cfg.ccm.mode == "merge" or G <= 1 or group == 1:
+        return mem
+    g = mem.slots
+    new_g = -(-g // group)                        # ceil(g / group)
+    gi = jnp.arange(G, dtype=jnp.int32)
+    owner = gi // group                           # new group owning old i
+    w = ((owner[None, :] == gi[:, None]) & (gi < g)[None, :])
+    cnt = w.sum(axis=1, keepdims=True)
+    wn = (w / jnp.maximum(cnt, 1)).astype(jnp.float32)
+
+    def regroup(x):
+        L, B, _, H, D = x.shape
+        xg = x.reshape(L, B, G, m, H, D).astype(jnp.float32)
+        out = jnp.einsum("ji,lbimhd->lbjmhd", wn, xg)
+        return out.reshape(L, B, G * m, H, D).astype(x.dtype)
+
+    return mem._replace(k=regroup(mem.k), v=regroup(mem.v),
+                        slots=new_g.astype(jnp.int32))

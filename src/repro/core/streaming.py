@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masks as M
-from repro.core.memory import MemState, evict_oldest, init_memory, update_memory
+from repro.core.memory import (MemState, evict_oldest, init_memory,
+                               recompress_memory, update_memory)
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as MOE
@@ -245,6 +246,30 @@ def eviction_pending(cfg: ModelConfig, st: StreamState,
     the lane's valid length, not the padded bucket width)."""
     return st.win_len + jnp.asarray(incoming, jnp.int32) \
         > cfg.ccm.stream_window
+
+
+def recompress_memory_lanes(cfg: ModelConfig, mem: MemState, group: int,
+                            do) -> MemState:
+    """Masked per-lane memory recompression over N stacked lanes (the
+    arena-gather layout: every `MemState` leaf carries a leading lane
+    axis, inner batch 1).
+
+    ``do`` (N,) bool selects the lanes to recompress
+    (`core.memory.recompress_memory` at ratio ``group``); every other
+    lane's state is re-selected BIT-exactly (`jnp.where` on all leaves —
+    the `stream_step_lanes` eviction-gating pattern), and a batch with
+    no selected lane skips the regroup einsum entirely behind one
+    scalar `lax.cond`.  Used by the serve engine's pressure-controller
+    recompress step (`launch.serve.recompress_arena_slots`)."""
+    do = jnp.asarray(do, bool)
+
+    def regroup_masked(m: MemState) -> MemState:
+        def one(lane: MemState, p) -> MemState:
+            rc = recompress_memory(cfg, lane, group)
+            return jax.tree.map(lambda n, o: jnp.where(p, n, o), rc, lane)
+        return jax.vmap(one)(m, do)
+
+    return jax.lax.cond(jnp.any(do), regroup_masked, lambda m: m, mem)
 
 
 def stream_step_lanes(params, cfg: ModelConfig, st: StreamState,

@@ -42,12 +42,21 @@ class KVTaskConfig:
 
 
 def sample_kv_batch(key: jax.Array, layout: SegmentLayout, batch: int,
-                    task: KVTaskConfig = KVTaskConfig()) -> Dict[str, jnp.ndarray]:
+                    task: KVTaskConfig = KVTaskConfig(),
+                    query_pool: str = "ctx") -> Dict[str, jnp.ndarray]:
     """Returns {'tokens': (B,S) i32, 'loss_mask': (B, tail-1) f32}.
 
     loss positions: tail even offsets (predict the value following each
-    query key). Keys queried in the tail are drawn from keys shown in the
-    context chunks, so the answer is in Mem — compressible signal.
+    query key). With ``query_pool="ctx"`` (default, the training
+    distribution) keys queried in the tail are drawn from keys shown in
+    the context chunks, so the answer is in Mem — compressible signal.
+    ``query_pool="all"`` draws query keys uniformly from the WHOLE key
+    space instead: unseen keys are unanswerable (chance), so accuracy
+    measures how much of the identity's mapping the accumulated context
+    covers — the paper's accuracy-improves-over-time-steps claim (more
+    chunks -> more keys demonstrated), rather than per-retrieval
+    fidelity (which *falls* with t as queries spread over more
+    compressed material).
     """
     t, lc, m, tail = (layout.t_steps, layout.chunk_len, layout.comp_len,
                       layout.tail_len)
@@ -71,17 +80,25 @@ def sample_kv_batch(key: jax.Array, layout: SegmentLayout, batch: int,
     body = jnp.concatenate([chunk, comp_toks], axis=-1).reshape(batch, -1)
     # tail: query keys = DISTINCT positions of keys seen in context
     # (sampling with replacement would let later tail queries copy earlier
-    # tail answers, contaminating the no-context control)
+    # tail answers, contaminating the no-context control); "all" draws
+    # distinct keys from the whole space instead (see docstring)
     n_q = tail // 2
-    flat_ctx = ctx_keys.reshape(batch, -1)
-    reps = -(-n_q // flat_ctx.shape[1])   # tile if more queries than context
+    if query_pool == "all":
+        q_keys = jax.vmap(
+            lambda k: jax.random.permutation(k, task.n_keys)[:n_q])(
+            jax.random.split(kq, batch))
+    elif query_pool == "ctx":
+        flat_ctx = ctx_keys.reshape(batch, -1)
+        reps = -(-n_q // flat_ctx.shape[1])  # tile if more queries than ctx
 
-    def _pick(k):
-        perm = jax.random.permutation(k, flat_ctx.shape[1])
-        return jnp.tile(perm, reps)[:n_q]
+        def _pick(k):
+            perm = jax.random.permutation(k, flat_ctx.shape[1])
+            return jnp.tile(perm, reps)[:n_q]
 
-    pick = jax.vmap(_pick)(jax.random.split(kq, batch))
-    q_keys = jnp.take_along_axis(flat_ctx, pick, axis=1)
+        pick = jax.vmap(_pick)(jax.random.split(kq, batch))
+        q_keys = jnp.take_along_axis(flat_ctx, pick, axis=1)
+    else:
+        raise ValueError(f"unknown query_pool {query_pool!r}")
     q_vals = jnp.take_along_axis(mapping, q_keys, axis=1)
     qa = jnp.stack([task.key_id(q_keys), task.val_id(q_vals)],
                    axis=-1).reshape(batch, 2 * n_q)

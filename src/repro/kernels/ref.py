@@ -162,6 +162,24 @@ def kv_merge_ref(mem, h, t):
     return mem * (1 - a) + h * a
 
 
+def recompress_memory_ref(x, slots: int, comp_len: int, group: int):
+    """Oracle for core.memory.recompress_memory (one of k/v at a time):
+    collapse every ``group`` consecutive filled <COMP> groups of
+    ``x`` (L, B, M, Hkv, hd) into their position-aligned arithmetic
+    mean; groups at or past ceil(slots/group) are zeroed.  ``slots`` is
+    a CONCRETE fill count (the jit path handles it dynamically)."""
+    L, B, M, H, D = x.shape
+    G = M // comp_len
+    xg = x.reshape(L, B, G, comp_len, H, D)
+    out = jnp.zeros_like(xg)
+    new_g = -(-slots // group)
+    for j in range(new_g):
+        lo, hi = j * group, min((j + 1) * group, slots)
+        mean = jnp.mean(xg[:, :, lo:hi].astype(jnp.float32), axis=2)
+        out = out.at[:, :, j].set(mean.astype(x.dtype))
+    return out.reshape(L, B, M, H, D)
+
+
 def kv_cummean_ref(h):
     """h (T, ...) -> running means along axis 0 (merge-mode training)."""
     csum = jnp.cumsum(h.astype(jnp.float32), axis=0)

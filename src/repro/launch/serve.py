@@ -208,6 +208,31 @@ def make_arena_step(cfg: ModelConfig, op: str,
     return jax.jit(fn, donate_argnums=(1,))
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "group"),
+                   donate_argnums=(0,))
+def recompress_arena_slots(mem_slabs, ids, cfg: ModelConfig, group: int):
+    """Arena-resident memory recompression: gather the ``ids`` rows of
+    the slabs' `MemState` subtree, collapse every ``group`` consecutive
+    filled <COMP> groups per lane (`core.memory.recompress_memory`,
+    masked per lane via `streaming.recompress_memory_lanes`), and
+    scatter the shrunk memories back — one jitted program over the
+    donated mem slabs, no model params touched (it runs unchanged under
+    the null-step simulation harness).
+
+    Lanes whose memory would not shrink (fewer than two filled groups,
+    or pad lanes gathering the scratch row) are re-selected bit-exactly.
+    Module-level jit: `ModelConfig` is hashable, so every engine —
+    and every fuzzed simulation trace — shares one compile per
+    (shape, cfg, group)."""
+    from repro.kernels import ops as KOPS
+    mem = jax.tree.map(lambda s: KOPS.session_gather(s, ids), mem_slabs)
+    # shrink only when it frees at least one group: ceil(g/r) < g
+    do = -(-mem.slots // group) < mem.slots
+    new = STR.recompress_memory_lanes(cfg, mem, group, do)
+    return jax.tree.map(
+        lambda s, r: KOPS.session_scatter(s, ids, r), mem_slabs, new)
+
+
 def make_null_step(cfg: ModelConfig, op: str, ragged: bool = False
                    ) -> Callable:
     """Control-plane-only arena step with `make_arena_step`'s exact

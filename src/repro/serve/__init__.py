@@ -15,7 +15,11 @@ device feasible.  This package is that serving layer:
                  valid_len; priorities age to prevent starvation), pad
                  to bucketed batch sizes
   session.py   — session lifecycle + batched/async LRU host offload
-                 (restore-vs-recompute cost model)
+                 (restore-vs-recompute cost model, optionally calibrated
+                 from measured transfer/replay rates)
+  pressure.py  — unified memory-pressure controller: a logical token
+                 budget walked down the recompress -> offload -> shed
+                 degradation ladder (cheapest lever first)
   engine.py    — the driver loop wiring admission -> scheduler ->
                  jitted steps
 """
@@ -23,11 +27,13 @@ from repro.serve.admission import (Admitted, AdmissionController, Queued,
                                    Shed, TenantQuota, Verdict)
 from repro.serve.arena import ArenaFull, SessionArena
 from repro.serve.engine import ServeEngine
+from repro.serve.pressure import MemoryPressureController, PressurePolicy
 from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
-from repro.serve.session import (OffloadCostModel, OffloadResult,
-                                 SessionManager)
+from repro.serve.session import (CloseResult, OffloadCostModel,
+                                 OffloadResult, SessionManager)
 
-__all__ = ["Admitted", "AdmissionController", "ArenaFull",
-           "OffloadCostModel", "OffloadResult", "Queued", "Request",
+__all__ = ["Admitted", "AdmissionController", "ArenaFull", "CloseResult",
+           "MemoryPressureController", "OffloadCostModel",
+           "OffloadResult", "PressurePolicy", "Queued", "Request",
            "ScheduledBatch", "Scheduler", "ServeEngine", "SessionArena",
            "SessionManager", "Shed", "TenantQuota", "Verdict"]

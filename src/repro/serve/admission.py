@@ -61,6 +61,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.obs import MetricsRegistry
+from repro.serve.pressure import MemoryPressureController
 from repro.serve.scheduler import Request, Scheduler
 
 POLICIES = ("block", "shed-lowest-priority", "reject-new")
@@ -117,12 +118,20 @@ class AdmissionController:
                  default_quota: Optional[TenantQuota] = None,
                  on_shed: Optional[Callable[[Request], None]] = None,
                  max_backlog: Optional[int] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 pressure: Optional[MemoryPressureController] = None):
         """``max_backlog``: cap on ``block``-policy backlog ENTRIES —
         beyond it even the block policy sheds newcomers, so a producer
         that ignores ``Queued`` verdicts cannot grow host memory without
         bound.  None (default) leaves the backlog unbounded (the
-        caller's waiters are then the backstop)."""
+        caller's waiters are then the backstop).
+
+        ``pressure``: a `serve.pressure.MemoryPressureController` adds
+        the device-memory budget as one more admission bound — and,
+        crucially, a memory deficit is handed to the controller's
+        degradation ladder (recompress -> offload) BEFORE any overflow
+        policy sheds work; only an unrelievable remainder reaches the
+        shed path."""
         if policy not in POLICIES:
             raise ValueError(f"unknown overflow policy {policy!r}; "
                              f"pick one of {POLICIES}")
@@ -132,6 +141,7 @@ class AdmissionController:
         self.max_backlog = max_backlog
         self.quotas = dict(quotas or {})
         self.default_quota = default_quota or TenantQuota()
+        self.pressure = pressure
         self._on_shed = on_shed
         self._queued_tokens: Dict[str, int] = {}   # per tenant, in queue
         self._queued_total = 0
@@ -203,6 +213,11 @@ class AdmissionController:
             if room is None or g < room:
                 room, bound = g, (f"global queued-token bound "
                                   f"({self.max_queued_tokens})")
+        if self.pressure is not None:
+            m = self.pressure.headroom()
+            if room is None or m < room:
+                room, bound = m, (f"device-memory budget "
+                                  f"({self.pressure.capacity} tokens)")
         return room, bound
 
     def _hard_cap(self, tenant: str) -> Optional[int]:
@@ -210,6 +225,8 @@ class AdmissionController:
         empty queue); None = unbounded."""
         caps = [c for c in (self.quota(tenant).max_queued_tokens,
                             self.max_queued_tokens) if c is not None]
+        if self.pressure is not None:
+            caps.append(self.pressure.capacity)
         return min(caps) if caps else None
 
     # -- submit --------------------------------------------------------
@@ -230,6 +247,15 @@ class AdmissionController:
                 req, f"request ({req.token_len} tokens) exceeds the "
                      f"smallest applicable queued-token bound ({hard}); "
                      "it could never be admitted")
+        if self.pressure is not None:
+            # THE LADDER: a memory deficit goes to the degradation
+            # controller (recompress, then offload) before any policy
+            # is allowed to shed or backpressure for memory.  Only the
+            # memory bound is relievable — queued-token bounds are not
+            # about device memory and fall through untouched.
+            mh = self.pressure.headroom()
+            if req.token_len > mh:
+                self.pressure.relieve(req.token_len - mh)
         room, bound = self._headroom(tenant)
         blocked_behind = self.policy == "block" and any(
             r.tenant == tenant for r in self._backlog)
@@ -291,6 +317,13 @@ class AdmissionController:
             0, self.queued_tokens(req.tenant) + req.token_len - tq)
         need_g = 0 if self.max_queued_tokens is None else max(
             0, self._queued_total + req.token_len - self.max_queued_tokens)
+        if self.pressure is not None:
+            # residual memory deficit (the ladder already did what it
+            # could in submit_request) — shedding queued tokens frees
+            # budget 1:1 from any tenant, so it folds into the global
+            # pass
+            need_g = max(need_g,
+                         req.token_len - self.pressure.headroom())
         cands = [r for r in self.scheduler.session_tails(
                      self.scheduler.queued())
                  if self.scheduler.effective_priority(r) > new_eff

@@ -51,9 +51,10 @@ from repro.obs import Observability
 from repro.serve.admission import (AdmissionController, TenantQuota,
                                    Verdict)
 from repro.serve.arena import SessionArena
+from repro.serve.pressure import MemoryPressureController, PressurePolicy
 from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
-from repro.serve.session import (OffloadCostModel, OffloadResult,
-                                 SessionManager)
+from repro.serve.session import (CloseResult, OffloadCostModel,
+                                 OffloadResult, SessionManager)
 
 _OP_STATE = {"ingest": "online", "query": "online", "stream": "stream"}
 _STAT_KEYS = ("requests", "tokens", "pad_lanes", "pad_tokens", "lanes",
@@ -75,6 +76,7 @@ class ServeEngine:
                  batched_offload: bool = True,
                  async_offload: bool = False,
                  offload_cost_model: Optional[OffloadCostModel] = None,
+                 pressure_policy: Optional[PressurePolicy] = None,
                  step_factory: Optional[Callable] = None,
                  obs: Optional[Observability] = None):
         """``token_buckets``: ragged-batching token buckets ("auto" picks
@@ -95,6 +97,14 @@ class ServeEngine:
         per transfer, ``async_offload`` overlaps the device->host copy
         with scheduling, ``offload_cost_model`` drops state and replays
         request history when that is cheaper than the round trip.
+
+        Pressure (`serve.pressure`): a ``pressure_policy`` turns on the
+        unified memory-pressure controller over the ONLINE arena — a
+        logical token budget (``capacity_tokens``) enforced at
+        admission, with deficits walked down the recompress -> offload
+        -> shed degradation ladder instead of shedding outright; the
+        drain loop additionally relieves past the high watermark.  See
+        docs/SERVING.md "Memory pressure".
 
         ``step_factory(cfg, op, masked)``: override the fused arena step
         builder (default `launch.serve.make_arena_step`); the serve
@@ -154,11 +164,30 @@ class ServeEngine:
             batch_buckets, max_batch=caps, token_buckets=token_buckets,
             max_token_len={"stream": cfg.ccm.stream_chunk}, aging=aging,
             metrics=self.obs.registry)
+        # the budget is scoped to the ONLINE arena (memory + KV cache —
+        # the states the ladder's levers act on); merge mode pins every
+        # session at one group, so only concat memories can recompress
+        self._max_mem_groups = 1 if cfg.ccm.mode == "merge" else \
+            (mem_slots if mem_slots is not None else cfg.ccm.mem_slots)
+        self.pressure: Optional[MemoryPressureController] = None
+        if pressure_policy is not None:
+            self.pressure = MemoryPressureController(
+                pressure_policy,
+                sessions_fn=lambda: list(
+                    self._mgr["online"].sessions.values()),
+                footprint_fn=self._session_footprint,
+                queued_tokens_fn=lambda: self.admission.queued_tokens(),
+                has_queued_fn=self._has_pending_work,
+                recompress_fn=self._recompress_session,
+                offload_fn=lambda sid:
+                    self._mgr["online"].offload_batch([sid])[0],
+                obs=self.obs)
         self.admission = AdmissionController(
             self.scheduler, policy=admission_policy,
             max_queued_tokens=max_queued_tokens, quotas=tenant_quotas,
             default_quota=default_quota, on_shed=self._on_shed,
-            max_backlog=max_backlog, metrics=self.obs.registry)
+            max_backlog=max_backlog, metrics=self.obs.registry,
+            pressure=self.pressure)
         self._steps = {}               # op kind -> jitted fn
         self._seen_shapes = set()      # (kind, lanes, token_len, masked)
         self._kind: Dict[str, str] = {}   # sid -> 'online' | 'stream'
@@ -254,14 +283,22 @@ class ServeEngine:
         self._kind[sid] = kind
         self._tenant[sid] = tenant
 
-    def close_session(self, sid: str) -> None:
+    def close_session(self, sid: str) -> CloseResult:
+        """Tear a session down everywhere (queue, backlog, side tables,
+        manager).  Closing an unknown (or already-closed) sid is a
+        structured no-op — it used to KeyError out of ``self._kind``
+        AFTER cancelling queue entries, leaving a double-close half
+        applied."""
+        kind = self._kind.pop(sid, None)
+        if kind is None:
+            return CloseResult(sid, "unknown")
         dropped = self.admission.cancel(sid)  # backlog + queue
         rec = self.obs.recorder
         for r in dropped:                     # terminal span: cancelled
             rec.cancelled(r)
         self._cached.pop(sid, None)
         self._tenant.pop(sid, None)
-        self._mgr[self._kind.pop(sid)].close(sid)
+        return self._mgr[kind].close(sid)
 
     def offload_session(self, sid: str) -> OffloadResult:
         """Explicitly push a session's state to host.  A no-op with a
@@ -271,6 +308,47 @@ class ServeEngine:
         if kind is None:
             return OffloadResult(sid, "unknown")
         return self._mgr[kind].offload_batch([sid])[0]
+
+    # -- memory-pressure plumbing (serve.pressure callbacks) -----------
+    def _session_footprint(self, sid: str) -> int:
+        """Logical device-memory tokens a resident ONLINE session holds:
+        its filled compressed-memory groups times comp_len, plus its
+        live KV-cache tokens."""
+        sess = self._mgr["online"].sessions.get(sid)
+        if sess is None or not sess.resident:
+            return 0
+        return (sess.mem_groups * self.cfg.ccm.comp_len
+                + self._cached.get(sid, 0))
+
+    def _has_pending_work(self, sid: str) -> bool:
+        """Whether the session has work anywhere (scheduler queue or
+        admission backlog) — the pressure controller never offloads
+        such sessions: they would restore on the very next batch."""
+        if self.scheduler.queued(sid=sid):
+            return True
+        return any(r.sid == sid for r in self.admission.backlog)
+
+    def _recompress_session(self, sid: str) -> int:
+        """Pressure lever 1: collapse the session's resident compressed
+        memory at ``recompress_group`` (one jitted gather -> masked
+        recompress -> scatter over the mem slabs); returns logical
+        tokens freed (0 when nothing would shrink)."""
+        mgr = self._mgr["online"]
+        sess = mgr.sessions.get(sid)
+        if sess is None or not sess.resident:
+            return 0
+        group = self.pressure.policy.recompress_group
+        new_groups = -(-sess.mem_groups // group)
+        freed = (sess.mem_groups - new_groups) * self.cfg.ccm.comp_len
+        if freed <= 0:
+            return 0
+        arena = mgr.arena
+        arena.slabs = arena.slabs._replace(mem=SRV.recompress_arena_slots(
+            arena.slabs.mem, jnp.asarray([sess.slot], jnp.int32),
+            cfg=self.cfg, group=group))
+        arena.mark_dirty([sess.slot])
+        sess.mem_groups = new_groups
+        return freed
 
     # -- request submission -------------------------------------------
     def _on_shed(self, req: Request) -> None:
@@ -392,6 +470,13 @@ class ServeEngine:
                 _, arena.slabs = step(self.params, arena.slabs, ids, buf,
                                       np.asarray([L], np.int32))
             arena.mark_dirty([slot])
+            if state_kind == "online":
+                # a replay rebuilds memory at the BASE ratio: the group
+                # count is the replayed ingests (capped), regardless of
+                # any recompression the dropped state had absorbed
+                mgr.sessions[sid].mem_groups = min(
+                    sum(1 for op, _ in history if op == "ingest"),
+                    self._max_mem_groups)
         return replay
 
     def _run_batch(self, batch: ScheduledBatch) -> None:
@@ -430,7 +515,14 @@ class ServeEngine:
         shape = f"{batch.bucket}x{batch.token_len}" \
             + ("/masked" if masked else "")
         for r in batch.requests:
-            mgr.sessions[r.sid].n_ops += 1
+            sess = mgr.sessions[r.sid]
+            sess.n_ops += 1
+            if batch.kind == "ingest":
+                # host mirror of the slot's MemState.slots (concat mode
+                # caps at max_slots; merge pins at 1) — the pressure
+                # controller's footprint accounting
+                sess.mem_groups = min(sess.mem_groups + 1,
+                                      self._max_mem_groups)
             mgr.record(r.sid, r.kind, r.tokens[0])
             rec.executed(r, shape)
         rec.note("batch", f"kind={batch.kind} shape={shape} "
@@ -481,6 +573,12 @@ class ServeEngine:
             for r in batch.requests:
                 rec.popped(r)
             self._run_batch(batch)
+            if self.pressure is not None:
+                # drain hook: footprints grew by the batch's ingest
+                # groups / query cache writes AFTER their admission
+                # check — re-absorb past the high watermark so the next
+                # submit doesn't start from a deep deficit
+                self.pressure.maybe_relieve()
             for r in self.admission.pump():
                 rec.pumped(r)
             n += 1
@@ -609,6 +707,8 @@ class ServeEngine:
                     "arena-integrity", f"{kind}: {errs}")
         g["queue_depth"].set(self.scheduler.pending)
         g["backlog_depth"].set(len(self.admission.backlog))
+        if self.pressure is not None:
+            self.pressure.sample_gauges()
         for tenant, quota in self.admission.quotas.items():
             if quota.max_queued_tokens:
                 g["quota_pressure"].labels(tenant=tenant).set(

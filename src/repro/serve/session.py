@@ -56,6 +56,10 @@ class Session:
     last_used: int = 0             # logical LRU clock
     n_ops: int = 0
     n_offloads: int = 0
+    mem_groups: int = 0            # filled <COMP> groups (host mirror of
+    #                                the slot's MemState.slots; the
+    #                                pressure controller's footprint and
+    #                                recompress-candidate accounting)
 
     @property
     def resident(self) -> bool:
@@ -77,6 +81,22 @@ class OffloadResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class CloseResult:
+    """Structured outcome of closing a session.  Closing an unknown sid
+    is a NO-OP with a telling status — it used to KeyError out of the
+    manager (and out of `ServeEngine.close_session`) after the caller
+    had already cancelled queue entries, leaving the engine's side
+    tables half-torn-down."""
+    sid: str
+    status: str                 # closed | unknown
+    was_resident: bool = False
+
+    @property
+    def closed(self) -> bool:
+        return self.status == "closed"
+
+
+@dataclasses.dataclass(frozen=True)
 class OffloadCostModel:
     """Restore-from-host vs recompute-from-history, per session.
 
@@ -85,9 +105,26 @@ class OffloadCostModel:
     nothing at offload time and replays the session's recorded requests
     at restore time (``history_tokens / replay_tokens_per_s``).  Both
     rates are workload constants the operator calibrates (defaults are
-    a PCIe-ish bandwidth and a small-model CPU replay rate)."""
+    a PCIe-ish bandwidth and a small-model CPU replay rate).
+
+    ``calibrated=True`` folds MEASURED rates back in at decision time:
+    `SessionManager.effective_cost_model` overrides ``host_bandwidth``
+    with the bandwidth gauge and ``replay_tokens_per_s`` with the replay
+    token/seconds counters once those sensors have data, so the
+    transfer-vs-recompute tradeoff tracks the hardware actually
+    underneath instead of the operator's guess.
+
+    ``latch_history``: whether a transfer-wins decision permanently
+    drops the session's replay history.  Sound for static rates (history
+    only grows, state bytes are constant — transfer keeps winning) but
+    WRONG under calibration or any bandwidth change at runtime: a
+    degraded link can flip the decision back to recompute, which needs
+    the history that the latch threw away.  Set False to keep recording
+    (costs host memory proportional to history)."""
     host_bandwidth: float = 8e9          # bytes/s, device<->host
     replay_tokens_per_s: float = 2e4
+    calibrated: bool = False
+    latch_history: bool = True
 
     def transfer_seconds(self, state_bytes: int) -> float:
         return 2.0 * state_bytes / self.host_bandwidth
@@ -137,7 +174,7 @@ class SessionManager:
         self.resident_quota_of = resident_quota_of or (lambda tenant: None)
         self.sessions: Dict[str, Session] = {}
         self._clock = 0
-        self._inflight: List[Any] = []
+        self._inflight: List[Any] = []   # (host buffer, n transfer rows)
         self._host = jax.devices("cpu")[0]
         self._device = jax.local_devices()[0]
         self._state_bytes = sum(
@@ -170,6 +207,12 @@ class SessionManager:
         self._m_replay_tokens = reg.counter(
             "offload_replay_tokens_total",
             "tokens re-executed by restore replays")
+        self._m_replay_s = reg.counter(
+            "offload_replay_seconds_total",
+            "seconds blocked re-executing restore replays (with "
+            "offload_replay_tokens_total this measures the achieved "
+            "replay rate, calibrating OffloadCostModel "
+            "replay_tokens_per_s)")
         self._m_sync_s = reg.counter(
             "offload_sync_seconds_total",
             "seconds blocked in sync() barriers on async transfers")
@@ -208,10 +251,25 @@ class SessionManager:
         self.sessions[sid] = sess
         return sess
 
-    def close(self, sid: str) -> None:
-        sess = self.sessions.pop(sid)
-        if sess.resident:
+    def close(self, sid: str) -> CloseResult:
+        """Tear a session down; unknown sids are a structured no-op
+        (`CloseResult(status="unknown")`), not a KeyError.  Host-side
+        references — an async-offloaded state buffer still in flight, a
+        retained replay history — are dropped NOW rather than riding
+        along until the dict entry is garbage-collected, so closing an
+        offloaded session actually releases its host memory at the next
+        `sync()` instead of stranding it."""
+        sess = self.sessions.pop(sid, None)
+        if sess is None:
+            return CloseResult(sid, "unknown")
+        was_resident = sess.resident
+        if was_resident:
             self.arena.free(sess.slot)
+            sess.slot = None
+        sess.host_state = None
+        sess.history = None
+        sess.needs_replay = False
+        return CloseResult(sid, "closed", was_resident=was_resident)
 
     @property
     def n_resident(self) -> int:
@@ -318,7 +376,13 @@ class SessionManager:
                 raise RuntimeError(
                     f"session {sess.sid!r} needs replay but no replay_fn "
                     "is wired (cost model dropped its state)")
+            t0 = self.obs.clock.now()
             self.replay_fn(sess.sid, sess.slot, sess.history or [])
+            # replay steps donate+replace slab buffers, so blocking on a
+            # current leaf bounds the whole replay — the seconds counter
+            # must see true time or the calibrated replay rate inflates
+            jax.block_until_ready(jax.tree.leaves(self.arena.slabs)[0])
+            self._m_replay_s.inc(self.obs.clock.now() - t0)
             sess.needs_replay = False
             self._m_replays.inc()
             self._m_replay_tokens.inc(sess.history_tokens)
@@ -338,19 +402,44 @@ class SessionManager:
             return OffloadResult(sid, "already-offloaded")
         return OffloadResult(sid, "fresh")
 
+    def effective_cost_model(self) -> Optional[OffloadCostModel]:
+        """The cost model with measured rates folded in.  With
+        ``calibrated=False`` (or no model) this is ``cost_model``
+        verbatim; with ``calibrated=True`` the operator constants are
+        only the cold-start fallback — ``host_bandwidth`` comes from the
+        bandwidth gauge and ``replay_tokens_per_s`` from the replay
+        token/seconds counters once each sensor has data."""
+        cm = self.cost_model
+        if cm is None or not cm.calibrated:
+            return cm
+        kw = {}
+        bw = float(self._g_bw.value)
+        if bw > 0:
+            kw["host_bandwidth"] = bw
+        tokens = float(self._m_replay_tokens.value)
+        seconds = float(self._m_replay_s.value)
+        if tokens > 0 and seconds > 0:
+            kw["replay_tokens_per_s"] = tokens / seconds
+        return dataclasses.replace(cm, **kw) if kw else cm
+
     def _drop_for_recompute(self, sess: Session) -> bool:
         """True when the cost model chose recompute: state dropped, slot
         freed, nothing transferred."""
         if (self.cost_model is None or self.replay_fn is None
                 or sess.history is None):
             return False
-        if not self.cost_model.prefers_recompute(self._state_bytes,
-                                                 sess.history_tokens):
-            # history only grows and state bytes are constant, so once
-            # the transfer wins it wins forever — drop the retained
-            # token arrays and stop recording (bounds host memory; the
-            # session is transfer-only from here on)
-            sess.history = None
+        cm = self.effective_cost_model()
+        if not cm.prefers_recompute(self._state_bytes,
+                                    sess.history_tokens):
+            if cm.latch_history:
+                # history only grows and state bytes are constant, so
+                # under STATIC rates once the transfer wins it wins
+                # forever — drop the retained token arrays and stop
+                # recording (bounds host memory; the session is
+                # transfer-only from here on).  Calibrated rates move at
+                # runtime — a degraded link can flip the decision back —
+                # so latching is policy-controlled via ``latch_history``.
+                sess.history = None
             self._m_decisions.labels(decision="transfer").inc()
             return False
         self._m_decisions.labels(decision="recompute").inc()
@@ -375,7 +464,7 @@ class SessionManager:
         t0 = self.obs.clock.now()
         host = jax.device_put(state, self._host)
         if self.async_offload:
-            self._inflight.append(host)
+            self._inflight.append((host, 1))
         else:
             host = jax.block_until_ready(host)
         self._count_transfer("offload", 1, 1, self.obs.clock.now() - t0,
@@ -417,7 +506,7 @@ class SessionManager:
             t0 = self.obs.clock.now()
             host = jax.device_put(packed, self._host)
             if self.async_offload:
-                self._inflight.append(host)
+                self._inflight.append((host, n))
             else:
                 host = jax.block_until_ready(host)
             self._count_transfer("offload", n, len(todo),
@@ -471,11 +560,28 @@ class SessionManager:
             sess.host_state = None
 
     def sync(self) -> None:
-        """Barrier for ``async_offload`` transfers still in flight."""
+        """Barrier for ``async_offload`` transfers still in flight.
+
+        Also the async path's bandwidth sensor: dispatch timestamps say
+        nothing about the wire, so async transfers used to never touch
+        the bandwidth gauge and a ``calibrated`` cost model ran blind on
+        exactly the configuration built for throughput.  The barrier is
+        the one place async transfer time is actually observed — we
+        attribute the in-flight bytes over the blocked interval.  Since
+        copies overlap engine compute before the barrier, blocked time
+        can be shorter than wire time, making this an EFFECTIVE
+        (overlap-discounted) bandwidth rather than raw link speed —
+        which is the cost the async engine actually pays per transfer,
+        i.e. the right quantity for the transfer-vs-recompute call."""
         if not self._inflight:
             return
         t0 = self.obs.clock.now()
-        for t in self._inflight:
+        rows = 0
+        for t, n in self._inflight:
             jax.block_until_ready(t)
+            rows += n
         self._inflight.clear()
-        self._m_sync_s.inc(self.obs.clock.now() - t0)
+        dt = self.obs.clock.now() - t0
+        self._m_sync_s.inc(dt)
+        if dt > 0 and rows:
+            self._g_bw.set(rows * self._state_bytes / dt)

@@ -58,6 +58,9 @@ class Snapshot:
     backlog: int
     consistency: List[str]                # arena free-list violations
     admission_counters: Dict[str, int]    # registry verdict counters
+    pressure_used: Optional[int] = None   # controller's used_tokens()
+    pressure_capacity: Optional[int] = None
+    pressure_decisions: int = 0           # ladder log length so far
 
 
 @dataclasses.dataclass
@@ -85,6 +88,7 @@ class ServeSimulation:
                  batched_offload: bool = True,
                  async_offload: bool = False,
                  offload_cost_model=None,
+                 pressure_policy=None,
                  params=None,
                  obs: Optional[Observability] = None):
         # tracing on a ManualClock by default: event application advances
@@ -103,6 +107,7 @@ class ServeSimulation:
             tenant_quotas=quotas, default_quota=default_quota,
             batched_offload=batched_offload, async_offload=async_offload,
             offload_cost_model=offload_cost_model,
+            pressure_policy=pressure_policy,
             step_factory=None if params is not None else make_null_step,
             obs=self.obs)
         self.cache_len = cache_len
@@ -222,7 +227,13 @@ class ServeSimulation:
             true_queued_tokens=true_q,
             backlog=len(eng.admission.backlog),
             consistency=mgr.arena.consistency_errors(),
-            admission_counters=dict(eng.admission.stats))
+            admission_counters=dict(eng.admission.stats),
+            pressure_used=(eng.pressure.used_tokens()
+                           if eng.pressure is not None else None),
+            pressure_capacity=(eng.pressure.capacity
+                               if eng.pressure is not None else None),
+            pressure_decisions=(len(eng.pressure.decisions)
+                                if eng.pressure is not None else 0))
 
     def accounting(self) -> Accounting:
         return Accounting(

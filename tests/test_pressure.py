@@ -1,0 +1,504 @@
+"""Memory-pressure controller: recompression numerics + ladder +
+serve-lifecycle regressions (PR 7).
+
+Four clusters:
+
+  1. `core.memory.recompress_memory` vs the `kernels/ref.py` oracle —
+     including the COMMUTATION equality the lever's soundness rests on:
+     recompressing a built memory at ratio r and attending over it is
+     bit-identical (f32) to having compressed the original h(t) stream
+     at the grouped ratio directly.
+  2. `launch.serve.recompress_arena_slots` — masked-lane arena path:
+     selected lanes shrink per the oracle, unselected lanes (and lanes
+     with nothing to free) stay BIT-exact.
+  3. The degradation ladder end-to-end on the deterministic simulation
+     harness: controller-on sheds strictly less than levers-off at the
+     same capacity, ladder order is recompress -> offload -> shed.
+  4. Serve-lifecycle bugfix regressions: structured close (unknown sid,
+     async-inflight buffers), policy-controlled recompute latch,
+     async-offload bandwidth gauge, calibrated cost model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.memory import init_memory, recompress_memory, update_memory
+from repro.core.streaming import recompress_memory_lanes
+from repro.kernels import ref
+from repro.launch.serve import recompress_arena_slots
+from repro.obs import ManualClock, Observability
+from repro.serve import (CloseResult, OffloadCostModel, PressurePolicy,
+                         SessionArena, SessionManager)
+from repro.serve.pressure import MemoryPressureController
+
+from simulation import ServeSimulation
+
+
+def _rand_h(cfg, key, scale=1.0):
+    shp = (2, 1, cfg.ccm.comp_len, cfg.n_kv_heads, cfg.hd)
+    k1, k2 = jax.random.split(key)
+    return (scale * jax.random.normal(k1, shp),
+            scale * jax.random.normal(k2, shp))
+
+
+def _build_mem(cfg, n_groups, key=None, dtype=jnp.float32):
+    """Memory with ``n_groups`` filled groups from random h(t) states;
+    returns (mem, [h_k...], [h_v...])."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    mem = init_memory(cfg, 1, dtype=dtype)
+    hks, hvs = [], []
+    for t in range(n_groups):
+        key, sub = jax.random.split(key)
+        hk, hv = _rand_h(cfg, sub)
+        hks.append(hk)
+        hvs.append(hv)
+        mem = update_memory(cfg, mem, hk, hv, jnp.asarray(8, jnp.int32))
+    return mem, hks, hvs
+
+
+# -- 1. recompress_memory vs oracle ------------------------------------
+
+@pytest.mark.parametrize("n_groups,group", [(2, 2), (3, 2), (4, 2),
+                                            (3, 3), (4, 3)])
+def test_recompress_matches_oracle(tiny_cfg, n_groups, group):
+    cfg = tiny_cfg
+    mem, _, _ = _build_mem(cfg, n_groups)
+    rc = recompress_memory(cfg, mem, group)
+    assert int(rc.slots) == -(-n_groups // group)
+    want_k = ref.recompress_memory_ref(np.asarray(mem.k), n_groups,
+                                       cfg.ccm.comp_len, group)
+    want_v = ref.recompress_memory_ref(np.asarray(mem.v), n_groups,
+                                       cfg.ccm.comp_len, group)
+    # group=2 means are exact in f32 (halving is exact); odd groups
+    # differ only in summation order
+    tol = 0 if group == 2 else 1e-6
+    np.testing.assert_allclose(np.asarray(rc.k), want_k, atol=tol)
+    np.testing.assert_allclose(np.asarray(rc.v), want_v, atol=tol)
+    # timeline counters untouched: representation changed, history didn't
+    assert int(rc.steps) == int(mem.steps)
+    assert int(rc.stream_pos) == int(mem.stream_pos)
+
+
+def test_recompress_identity_cases(tiny_cfg):
+    cfg = tiny_cfg
+    mem, _, _ = _build_mem(cfg, 3)
+    same = recompress_memory(cfg, mem, 1)          # group=1: no-op
+    assert same is mem
+    merge_cfg = dataclasses.replace(
+        cfg, ccm=dataclasses.replace(cfg.ccm, mode="merge"))
+    mmem = init_memory(merge_cfg, 1, dtype=jnp.float32)
+    assert recompress_memory(merge_cfg, mmem, 2) is mmem
+    with pytest.raises(ValueError):
+        recompress_memory(cfg, mem, 0)
+
+
+def test_recompress_then_attend_equals_direct_grouped(tiny_cfg):
+    """THE soundness equality: recompress(mem(h1..h4), r=2) ==
+    memory built from the grouped stream (mean(h1,h2), mean(h3,h4)) —
+    bit-exact in f32 — and so is attending over either."""
+    cfg = tiny_cfg
+    m = cfg.ccm.comp_len
+    mem, hks, hvs = _build_mem(cfg, 4)
+    rc = recompress_memory(cfg, mem, 2)
+
+    direct = init_memory(cfg, 1, dtype=jnp.float32)
+    for i in range(0, 4, 2):
+        hk = (hks[i] + hks[i + 1]) / 2
+        hv = (hvs[i] + hvs[i + 1]) / 2
+        direct = update_memory(cfg, direct, hk, hv,
+                               jnp.asarray(16, jnp.int32))
+    assert int(rc.slots) == int(direct.slots) == 2
+    # a*0.5 + b*0.5 and (a+b)*0.5 both round once, to the same value;
+    # invalid tail groups are zero on both sides (recompress zeroes, the
+    # direct build never wrote them) — whole-array bit equality
+    assert jnp.array_equal(rc.k, direct.k)
+    assert jnp.array_equal(rc.v, direct.v)
+
+    # and the attend: memory segment metadata (idx=-1 precedes
+    # everything, comp=True crosses segments, valid = slots*m)
+    M = mem.k.shape[2]
+    Sq = 4
+    q = jax.random.normal(jax.random.PRNGKey(7),
+                          (1, cfg.n_heads, Sq, cfg.hd))
+    valid = np.arange(M) < int(rc.slots) * m
+    meta = dict(q_idx=jnp.arange(100, 100 + Sq, dtype=jnp.int32),
+                q_seg=jnp.full((Sq,), 9, jnp.int32),
+                k_idx=jnp.full((M,), -1, jnp.int32),
+                k_seg=jnp.zeros((M,), jnp.int32),
+                k_comp=jnp.ones((M,), bool),
+                k_valid=jnp.asarray(valid))
+    def attend(mm):
+        # memory layout (B, M, Hkv, hd) -> ref layout (B, Hkv, Sk, D)
+        k = jnp.transpose(mm.k[0], (0, 2, 1, 3))
+        v = jnp.transpose(mm.v[0], (0, 2, 1, 3))
+        return ref.ccm_attention_ref(q, k, v, scale=0.125, **meta)
+
+    outs = [attend(mm) for mm in (rc, direct)]
+    assert jnp.array_equal(outs[0], outs[1])
+
+
+def test_recompress_bf16_close_to_f32_oracle(tiny_cfg):
+    """Default-dtype (cfg.cdtype) memories recompress within one ulp of
+    the f32 oracle — the arithmetic runs in f32 and rounds once."""
+    cfg = tiny_cfg
+    mem, _, _ = _build_mem(cfg, 3, dtype=cfg.cdtype)
+    rc = recompress_memory(cfg, mem, 2)
+    want = ref.recompress_memory_ref(np.asarray(mem.k, np.float32), 3,
+                                     cfg.ccm.comp_len, 2)
+    tol = 2e-2 if cfg.cdtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(rc.k, np.float32), want,
+                               atol=tol)
+
+
+# -- 2. masked arena lanes ---------------------------------------------
+
+def test_recompress_arena_slots_masked_lanes(tiny_cfg):
+    """Stacked-lane arena path: each selected lane shrinks per the
+    per-lane oracle; lanes with nothing to free are bit-exact, and
+    un-gathered rows never change."""
+    cfg = tiny_cfg
+    fills = [0, 1, 2, 3, 4]                # per-lane filled groups
+    lanes = [_build_mem(cfg, n, key=jax.random.PRNGKey(10 + n))[0]
+             for n in fills]
+    n_rows = len(lanes) + 1                # + scratch row
+    slabs = jax.tree.map(
+        lambda *xs: jnp.stack(list(xs) + [jnp.zeros_like(xs[0])]), *lanes)
+    before = jax.tree.map(np.asarray, slabs)
+    ids = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)   # gather all real rows
+    out = recompress_arena_slots(slabs, ids, cfg=cfg, group=2)
+    for i, n in enumerate(fills):
+        row_k = np.asarray(jax.tree.map(lambda x: x[i], out).k)
+        new_g = -(-n // 2)
+        if new_g < n:                      # lane actually shrank
+            want = ref.recompress_memory_ref(
+                np.asarray(before.k[i]), n, cfg.ccm.comp_len, 2)
+            np.testing.assert_allclose(row_k, want, atol=0)
+            assert int(out.slots[i]) == new_g
+        else:                              # nothing to free: BIT-exact
+            np.testing.assert_array_equal(row_k, before.k[i])
+            assert int(out.slots[i]) == n
+    # scratch row untouched
+    np.testing.assert_array_equal(np.asarray(out.k[n_rows - 1]),
+                                  before.k[n_rows - 1])
+
+
+def test_recompress_memory_lanes_reselects_unselected_bitexact(tiny_cfg):
+    cfg = tiny_cfg
+    lanes = [_build_mem(cfg, n, key=jax.random.PRNGKey(n))[0]
+             for n in (4, 4, 3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+    do = jnp.asarray([True, False, True])
+    out = recompress_memory_lanes(cfg, stacked, 2, do)
+    assert [int(s) for s in out.slots] == [2, 4, 2]
+    # the masked-out lane is re-selected wholesale, not recomputed
+    np.testing.assert_array_equal(np.asarray(out.k[1]),
+                                  np.asarray(stacked.k[1]))
+    # nothing-selected batches skip behind the scalar cond
+    none = recompress_memory_lanes(cfg, stacked,
+                                   2, jnp.zeros((3,), bool))
+    assert jnp.array_equal(none.k, stacked.k)
+
+
+# -- 3. the ladder on the simulation harness ----------------------------
+
+def _drive_pressure(cfg, policy):
+    sim = ServeSimulation(cfg, n_slots=4, cache_len=32,
+                          policy="shed-lowest-priority",
+                          pressure_policy=policy)
+    for sid in ("a", "b", "c"):
+        sim.apply(("create", sid, "default"))
+    for _ in range(8):
+        for sid in ("a", "b", "c"):
+            sim.apply(("submit", sid, "ingest", 8, 0, "default"))
+        sim.apply(("run", 8))
+    sim.finish()
+    return sim
+
+
+def test_ladder_beats_shedding_at_equal_capacity(tiny_cfg):
+    on = _drive_pressure(tiny_cfg, PressurePolicy(capacity_tokens=26))
+    off = _drive_pressure(tiny_cfg, PressurePolicy(
+        capacity_tokens=26, enable_recompress=False, enable_offload=False))
+    shed_on = sum(1 for r in on._submitted if r.shed)
+    shed_off = sum(1 for r in off._submitted if r.shed)
+    assert shed_on < shed_off, (shed_on, shed_off)
+    levers = {lv: int(on.engine.pressure._m_decisions
+                      .labels(lever=lv).value)
+              for lv in ("recompress", "offload", "shed")}
+    assert levers["recompress"] > 0
+    # levers-off arm never recompressed or offloaded
+    for lv in ("recompress", "offload"):
+        assert int(off.engine.pressure._m_decisions
+                   .labels(lever=lv).value) == 0
+
+
+def test_ladder_monotonicity_in_decision_log(tiny_cfg):
+    """No shed decision while a cheaper lever had candidates left."""
+    sim = _drive_pressure(tiny_cfg, PressurePolicy(capacity_tokens=26))
+    log = list(sim.engine.pressure.decisions)
+    assert log, "pressure never fired — scenario lost its bite"
+    for d in log:
+        if d["lever"] == "shed":
+            assert d["recompress_candidates"] == 0
+            assert d["offload_candidates"] == 0
+            assert d["unmet"] > 0
+
+
+def test_recompress_lever_updates_session_and_metrics(tiny_cfg):
+    sim = _drive_pressure(tiny_cfg, PressurePolicy(capacity_tokens=26))
+    eng = sim.engine
+    assert any(s.mem_groups < 4
+               for s in eng._mgr["online"].sessions.values())
+    freed = eng.pressure._m_freed.labels(lever="recompress").value
+    assert freed > 0
+    snap = eng.metrics_snapshot()["metrics"]
+    assert "pressure_decisions_total" in snap
+    assert "pressure_memory_used_tokens" in snap
+
+
+def test_mem_groups_tracks_ingests_and_survives_offload(tiny_cfg):
+    sim = ServeSimulation(tiny_cfg, n_slots=3, cache_len=32)
+    eng = sim.engine
+    sim.apply(("create", "a", "default"))
+    for _ in range(3):
+        sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))
+    sess = eng._mgr["online"].sessions["a"]
+    assert sess.mem_groups == 3
+    sim.apply(("offload", "a"))
+    assert sess.mem_groups == 3              # host mirror rides along
+    sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))
+    assert sess.mem_groups == 4              # restored + one more
+    # capped at the arena's mem_slots (tiny_cfg: max_steps=4)
+    sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))
+    assert sess.mem_groups == 4
+
+
+def test_replay_recounts_mem_groups(tiny_cfg):
+    """A recompute-dropped session rebuilds at the BASE ratio: group
+    count = replayed ingests, not whatever recompression had shrunk."""
+    sim = ServeSimulation(
+        tiny_cfg, n_slots=3, cache_len=32,
+        offload_cost_model=OffloadCostModel(host_bandwidth=1.0,
+                                            replay_tokens_per_s=1e12))
+    eng = sim.engine
+    sim.apply(("create", "a", "default"))
+    for _ in range(3):
+        sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))
+    res = eng.offload_session("a")
+    assert res.status == "recompute"
+    sess = eng._mgr["online"].sessions["a"]
+    sess.mem_groups = 1                      # pretend pressure shrank it
+    sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))                    # replays 3 ingests + runs 1
+    assert sess.mem_groups == 4
+
+
+# -- 4. lifecycle regressions ------------------------------------------
+
+def _mk_mgr(cfg, **kw):
+    arena = SessionArena.for_online(cfg, n_slots=3, cache_len=8,
+                                    mem_slots=2)
+    return SessionManager(arena, **kw)
+
+
+def test_close_unknown_sid_is_structured_noop(tiny_cfg):
+    mgr = _mk_mgr(tiny_cfg)
+    res = mgr.close("ghost")
+    assert isinstance(res, CloseResult)
+    assert res.status == "unknown" and not res.closed
+    mgr.create("a")
+    mgr.activate("a")
+    first = mgr.close("a")
+    assert first.closed and first.was_resident
+    assert mgr.close("a").status == "unknown"    # double close: no-op
+    assert mgr.arena.n_free == 3                 # slot actually freed
+
+
+def test_engine_close_unknown_sid(tiny_cfg):
+    sim = ServeSimulation(tiny_cfg)
+    res = sim.engine.close_session("ghost")
+    assert res.status == "unknown"
+    sim.apply(("create", "a", "default"))
+    sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    assert sim.engine.close_session("a").closed
+    assert sim.engine.close_session("a").status == "unknown"
+    # queued work was cancelled, side tables cleared
+    assert not sim.engine.scheduler.queued(sid="a")
+    assert "a" not in sim.engine._kind and "a" not in sim.engine._tenant
+
+
+def test_close_drops_async_inflight_references(tiny_cfg):
+    """Closing a session whose async offload is still in flight must
+    drop its host references and leave sync() safe (it used to strand
+    the buffer: the session dict entry kept the per-row view alive)."""
+    mgr = _mk_mgr(tiny_cfg, async_offload=True)
+    mgr.create("a")
+    mgr.activate("a")
+    res = mgr.offload("a")
+    assert res.status == "offloaded" and len(mgr._inflight) == 1
+    out = mgr.close("a")
+    assert out.closed and not out.was_resident
+    assert "a" not in mgr.sessions
+    mgr.sync()                               # barrier still clean
+    assert not mgr._inflight
+
+
+def test_async_offload_sets_bandwidth_gauge(tiny_cfg):
+    """Async transfers must feed the bandwidth gauge at the sync()
+    barrier — they used to leave it at 0 (only measured=True sync
+    offloads set it), blinding calibration exactly when async was on."""
+    mgr = _mk_mgr(tiny_cfg, async_offload=True, batched_offload=True)
+    for sid in ("a", "b"):
+        mgr.create(sid)
+    mgr.activate_batch(["a", "b"])
+    mgr.offload_batch(["a", "b"])
+    assert float(mgr._g_bw.value) == 0.0     # nothing measured yet
+    mgr.sync()
+    assert float(mgr._g_bw.value) > 0.0
+    assert float(mgr._m_sync_s.value) > 0.0
+
+
+def test_latch_history_policy(tiny_cfg):
+    """latch_history=True drops history on a transfer-wins decision
+    (old behavior, now opt-out); False keeps recording so a later rate
+    change can still flip to recompute."""
+    def one(latch):
+        mgr = _mk_mgr(tiny_cfg,
+                      cost_model=OffloadCostModel(host_bandwidth=1e15,
+                                                  replay_tokens_per_s=1.0,
+                                                  latch_history=latch),
+                      replay_fn=lambda sid, slot, hist: None)
+        mgr.create("a")
+        mgr.activate("a")
+        mgr.record("a", "ingest", np.zeros(4, np.int32))
+        assert mgr.offload("a").status == "offloaded"   # transfer won
+        return mgr.sessions["a"].history
+
+    assert one(True) is None
+    assert one(False) is not None
+
+
+def test_calibrated_model_flips_latch_free_session_to_recompute(tiny_cfg):
+    """Bandwidth degrading mid-run: with ``calibrated=True`` and the
+    latch off, the decision tracks the measured gauge — transfer while
+    the link is fast, recompute once it collapses.  With the (default)
+    latch ON the first transfer-wins decision would have thrown the
+    history away and pinned the session to the transfer path forever."""
+    mgr = _mk_mgr(tiny_cfg,
+                  cost_model=OffloadCostModel(host_bandwidth=1e15,
+                                              replay_tokens_per_s=1.0,
+                                              calibrated=True,
+                                              latch_history=False),
+                  replay_fn=lambda sid, slot, hist: None)
+    mgr.create("a")
+    mgr.record("a", "ingest", np.zeros(8, np.int32))
+    mgr.activate("a")
+    mgr._g_bw.set(1e15)                      # fast link measured
+    assert mgr.offload("a").status == "offloaded"
+    assert mgr.sessions["a"].history is not None
+    mgr.activate("a")                        # restore
+    mgr._g_bw.set(1.0)                       # link collapsed
+    assert mgr.effective_cost_model().host_bandwidth == 1.0
+    assert mgr.offload("a").status == "recompute"
+    assert mgr.sessions["a"].needs_replay
+
+
+def test_effective_cost_model_calibration_sources(tiny_cfg):
+    base = OffloadCostModel(host_bandwidth=123.0, replay_tokens_per_s=7.0,
+                            calibrated=True)
+    mgr = _mk_mgr(tiny_cfg, cost_model=base)
+    # no sensor data yet: operator constants pass through
+    assert mgr.effective_cost_model() == base
+    mgr._g_bw.set(5e8)
+    mgr._m_replay_tokens.inc(1000)
+    mgr._m_replay_s.inc(2.0)
+    eff = mgr.effective_cost_model()
+    assert eff.host_bandwidth == 5e8
+    assert eff.replay_tokens_per_s == 500.0
+    assert eff.calibrated and base.host_bandwidth == 123.0
+    # uncalibrated models never substitute
+    mgr2 = _mk_mgr(tiny_cfg,
+                   cost_model=OffloadCostModel(host_bandwidth=123.0))
+    mgr2._g_bw.set(5e8)
+    assert mgr2.effective_cost_model().host_bandwidth == 123.0
+
+
+def test_replay_seconds_counter_ticks(tiny_cfg):
+    """The replay path books blocked seconds so calibration can derive
+    an achieved tokens/s (new offload_replay_seconds_total family)."""
+    sim = ServeSimulation(
+        tiny_cfg, n_slots=3, cache_len=32,
+        obs=Observability.tracing(clock=ManualClock()),
+        offload_cost_model=OffloadCostModel(host_bandwidth=1.0,
+                                            replay_tokens_per_s=1e12))
+    eng = sim.engine
+    sim.apply(("create", "a", "default"))
+    sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))
+    assert eng.offload_session("a").status == "recompute"
+    sim.apply(("submit", "a", "ingest", 4, 0, "default"))
+    sim.apply(("run", 8))                    # triggers the replay
+    mgr = eng._mgr["online"]
+    assert int(mgr._m_replays.value) == 1
+    # ManualClock never advances inside activate, so the counter exists
+    # but stays 0 here; the live-clock property is covered by
+    # test_async_offload_sets_bandwidth_gauge's real-clock pattern
+    assert float(mgr._m_replay_s.value) >= 0.0
+    assert "offload_replay_seconds_total" in eng.obs.registry.snapshot()
+
+
+def test_controller_unit_ladder_with_synthetic_callbacks():
+    """The controller is pure control plane: drive it with lambdas over
+    a synthetic table (no engine, no device)."""
+    table = {
+        "old": dict(resident=True, last_used=1, mem_groups=4, kv=0),
+        "new": dict(resident=True, last_used=2, mem_groups=4, kv=0),
+    }
+
+    class Row:
+        def __init__(self, sid, d):
+            self.sid, self.resident = sid, d["resident"]
+            self.last_used, self.mem_groups = d["last_used"], d["mem_groups"]
+
+    def recompress(sid):
+        g = table[sid]["mem_groups"]
+        ng = -(-g // 2)
+        table[sid]["mem_groups"] = ng
+        return (g - ng) * 2
+
+    def offload(sid):
+        table[sid]["resident"] = False
+        return type("R", (), {"moved": True})()
+
+    ctl = MemoryPressureController(
+        PressurePolicy(capacity_tokens=100),
+        sessions_fn=lambda: [Row(s, d) for s, d in table.items()],
+        footprint_fn=lambda s: table[s]["mem_groups"] * 2 + table[s]["kv"],
+        queued_tokens_fn=lambda: 0,
+        has_queued_fn=lambda s: False,
+        recompress_fn=recompress,
+        offload_fn=offload)
+    assert ctl.used_tokens() == 16
+    # small deficit: one LRU recompression suffices, offload untouched
+    assert ctl.relieve(3) == 4
+    assert table["old"]["mem_groups"] == 2 and table["new"]["mem_groups"] == 4
+    assert [d["lever"] for d in ctl.decisions] == ["recompress"]
+    # big deficit: recompress to fixpoint (re-enumerated per round, so
+    # "new" takes two steps: 4 -> 2 -> 1), then offload LRU-first, then
+    # a shed handoff for the unmeetable remainder
+    freed = ctl.relieve(1000)
+    levers = [d["lever"] for d in ctl.decisions]
+    assert levers == ["recompress",                       # first call
+                      "recompress", "recompress", "recompress",
+                      "offload", "offload", "shed"]
+    assert freed == sum(d["freed"] for d in list(ctl.decisions)[1:-1])
+    shed = list(ctl.decisions)[-1]
+    assert shed["recompress_candidates"] == 0
+    assert shed["offload_candidates"] == 0

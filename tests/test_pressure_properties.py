@@ -1,0 +1,308 @@
+"""Pressure-ladder property suite: monotonicity proven on synthetic
+tables AND on the real serve simulation.
+
+The ISSUE-7 acceptance invariant is LADDER MONOTONICITY — the
+controller never sheds while a cheaper lever was available.  Three
+layers of evidence:
+
+  1. a hypothesis fuzz over the PURE controller (synthetic session
+     tables behind plain lambdas, no engine, no device): within every
+     `relieve()` slice, all recompressions precede all offloads, a shed
+     handoff appears only last and only with BOTH candidate lists empty
+     at decision time; returned `freed` equals the sum the decision log
+     claims; offload never victimizes a session with queued work;
+     counters in the metrics registry match the log;
+  2. a hypothesis fuzz over random traces through `ServeSimulation`
+     with the controller wired into the REAL engine: every shed entry
+     in the ladder log has zero remaining candidates, the seq numbers
+     are strictly increasing, the arena free-list stays consistent, and
+     at quiescence the drain hook has done its job (usage above the
+     high watermark implies the levers are genuinely exhausted);
+  3. a deterministic capacity sweep (runs even without hypothesis):
+     controller-on sheds no more than levers-off at every capacity, and
+     strictly less where the ladder has room to work — the bench
+     acceptance criterion in miniature.
+
+CI runs the derandomized "ci" hypothesis profile (conftest.py);
+failures print a `@reproduce_failure` blob that replays locally.
+"""
+import math
+
+import pytest
+
+from repro.serve import PressurePolicy
+from repro.serve.pressure import MemoryPressureController
+
+from simulation import ServeSimulation
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+COMP_LEN = 2           # token value of one memory group in the model
+SIDS = tuple(f"s{i}" for i in range(5))
+
+
+# -- 1. pure-controller model checker -----------------------------------
+
+class _Row:
+    def __init__(self, sid, resident, last_used, mem_groups, kv, queued):
+        self.sid = sid
+        self.resident = resident
+        self.last_used = last_used
+        self.mem_groups = mem_groups
+        self.kv = kv
+        self.queued = queued
+
+
+def _drive_synthetic(rows, queued_tokens, policy, deficits):
+    """Run `relieve()` over a mutable synthetic table, checking every
+    slice of the decision log against the ladder contract."""
+    table = {r.sid: r for r in rows}
+
+    def recompress(sid):
+        r = table[sid]
+        new_g = -(-r.mem_groups // policy.recompress_group)
+        freed = (r.mem_groups - new_g) * COMP_LEN
+        r.mem_groups = new_g
+        return freed
+
+    def offload(sid):
+        table[sid].resident = False
+        return type("R", (), {"moved": True})()
+
+    ctl = MemoryPressureController(
+        policy,
+        sessions_fn=lambda: list(table.values()),
+        footprint_fn=lambda s: table[s].mem_groups * COMP_LEN + table[s].kv,
+        queued_tokens_fn=lambda: queued_tokens,
+        has_queued_fn=lambda s: table[s].queued,
+        recompress_fn=recompress,
+        offload_fn=offload)
+
+    # accounting recount
+    want_used = queued_tokens + sum(
+        r.mem_groups * COMP_LEN + r.kv for r in table.values() if r.resident)
+    assert ctl.used_tokens() == want_used
+
+    for deficit in deficits:
+        before = len(ctl.decisions)
+        groups_before = {s: r.mem_groups for s, r in table.items()}
+        freed = ctl.relieve(deficit)
+        slice_ = list(ctl.decisions)[before:]
+
+        if deficit <= 0:
+            assert freed == 0 and not slice_
+            continue
+
+        levers = [d["lever"] for d in slice_]
+        # strict ladder order within the slice: recompress* offload* shed?
+        order = {"recompress": 0, "offload": 1, "shed": 2}
+        assert levers == sorted(levers, key=order.__getitem__), levers
+        assert levers.count("shed") <= 1
+        if "shed" in levers:
+            assert levers[-1] == "shed"
+
+        work = [d for d in slice_ if d["lever"] != "shed"]
+        assert freed == sum(d["freed"] for d in work)
+        for d in work:
+            assert d["freed"] > 0
+            if d["lever"] == "offload":
+                r = table[d["sid"]]
+                assert not r.queued, "offloaded a session with queued work"
+                assert not r.resident        # the lever actually fired
+            else:
+                assert groups_before[d["sid"]] >= policy.min_groups
+                assert table[d["sid"]].mem_groups < groups_before[d["sid"]]
+
+        if freed >= deficit:
+            assert "shed" not in levers
+        else:
+            # the monotonicity witness: the shed entry itself records
+            # that no cheaper lever remained at decision time
+            shed = slice_[-1]
+            assert shed["lever"] == "shed"
+            assert shed["recompress_candidates"] == 0
+            assert shed["offload_candidates"] == 0
+            assert shed["unmet"] == deficit - freed
+            assert not ctl.recompress_candidates()
+            assert not ctl.offload_candidates()
+
+    # registry counters agree with the full log
+    log = list(ctl.decisions)
+    for lever in ("recompress", "offload", "shed"):
+        got = int(ctl._m_decisions.labels(lever=lever).value)
+        assert got == sum(1 for d in log if d["lever"] == lever)
+    for lever in ("recompress", "offload"):
+        got = ctl._m_freed.labels(lever=lever).value
+        assert got == sum(d["freed"] for d in log
+                          if d["lever"] == lever)
+    # seq strictly increasing
+    seqs = [d["seq"] for d in log]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    return ctl
+
+
+if HAVE_HYPOTHESIS:
+    rows_st = st.lists(
+        st.builds(_Row,
+                  sid=st.sampled_from(SIDS),
+                  resident=st.booleans(),
+                  last_used=st.integers(0, 50),
+                  mem_groups=st.integers(0, 6),
+                  kv=st.integers(0, 12),
+                  queued=st.booleans()),
+        min_size=0, max_size=5,
+        unique_by=lambda r: r.sid)
+    policy_st = st.builds(
+        PressurePolicy,
+        capacity_tokens=st.integers(1, 120),
+        recompress_group=st.integers(2, 4),
+        min_groups=st.integers(1, 3),
+        enable_recompress=st.booleans(),
+        enable_offload=st.booleans())
+
+    @settings(max_examples=200, deadline=None)
+    @given(rows=rows_st,
+           queued_tokens=st.integers(0, 40),
+           policy=policy_st,
+           deficits=st.lists(st.integers(-5, 200), min_size=1,
+                             max_size=6))
+    def test_ladder_contract_synthetic(rows, queued_tokens, policy,
+                                       deficits):
+        _drive_synthetic(rows, queued_tokens, policy, deficits)
+
+
+def test_ladder_contract_deterministic_sweep():
+    """Hypothesis-free fallback: a seeded sweep through the same model
+    checker (always runs, even where hypothesis is absent)."""
+    import random
+    rng = random.Random(1234)
+    for _ in range(60):
+        sids = rng.sample(SIDS, rng.randint(0, 5))
+        rows = [_Row(s, rng.random() < 0.7, rng.randrange(50),
+                     rng.randrange(7), rng.randrange(13),
+                     rng.random() < 0.3) for s in sids]
+        policy = PressurePolicy(
+            capacity_tokens=rng.randint(1, 120),
+            recompress_group=rng.randint(2, 4),
+            min_groups=rng.randint(1, 3),
+            enable_recompress=rng.random() < 0.8,
+            enable_offload=rng.random() < 0.8)
+        deficits = [rng.randint(-5, 200)
+                    for _ in range(rng.randint(1, 6))]
+        _drive_synthetic(rows, rng.randrange(40), policy, deficits)
+
+
+# -- 2. real-engine fuzz -------------------------------------------------
+
+def _check_pressure_trace(sim):
+    eng = sim.engine
+    ctl = eng.pressure
+    for snap in sim.snapshots:
+        assert not snap.consistency, snap.consistency
+        assert snap.pressure_capacity == ctl.capacity
+    log = list(ctl.decisions)
+    seqs = [d["seq"] for d in log]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    for d in log:
+        if d["lever"] == "shed":
+            assert d["recompress_candidates"] == 0, d
+            assert d["offload_candidates"] == 0, d
+            assert d["unmet"] > 0
+        else:
+            assert d["freed"] > 0
+    # mem_groups bookkeeping stays within the arena's representable range
+    for s in eng._mgr["online"].sessions.values():
+        assert 0 <= s.mem_groups <= eng._max_mem_groups
+    # drain-hook liveness at quiescence: above the high watermark, the
+    # cheap levers must be genuinely exhausted (else maybe_relieve would
+    # have consumed them after the last batch)
+    used = ctl.used_tokens()
+    if used > ctl.policy.high_watermark * ctl.capacity:
+        assert not ctl.recompress_candidates()
+        assert not ctl.offload_candidates()
+
+
+def _run_pressure_sim(cfg, conf, events):
+    sim = ServeSimulation(
+        cfg, n_slots=conf["n_slots"], cache_len=32,
+        policy=conf["policy"],
+        pressure_policy=PressurePolicy(
+            capacity_tokens=conf["capacity"],
+            enable_recompress=conf["recompress"],
+            enable_offload=conf["offload"]))
+    for ev in events:
+        sim.apply(ev)
+    sim.finish()
+    _check_pressure_trace(sim)
+    return sim
+
+
+if HAVE_HYPOTHESIS:
+    event_st = st.one_of(
+        st.tuples(st.just("submit"), st.sampled_from(SIDS),
+                  st.sampled_from(("ingest", "query")),
+                  st.sampled_from((2, 4, 8)), st.integers(0, 3),
+                  st.just("default")),
+        st.tuples(st.just("run"), st.integers(1, 4)),
+        st.tuples(st.just("offload"), st.sampled_from(SIDS)),
+        st.tuples(st.just("close"), st.sampled_from(SIDS)))
+    conf_st = st.fixed_dictionaries({
+        "n_slots": st.integers(3, 5),
+        "policy": st.sampled_from(("block", "shed-lowest-priority",
+                                   "reject-new")),
+        "capacity": st.integers(12, 64),
+        "recompress": st.booleans(),
+        "offload": st.booleans()})
+
+    @settings(max_examples=60, deadline=None)
+    @given(conf=conf_st,
+           events=st.lists(event_st, min_size=4, max_size=30))
+    def test_pressure_invariants_on_real_engine(tiny_cfg, conf, events):
+        _run_pressure_sim(tiny_cfg, conf, events)
+
+
+def test_pressure_invariants_deterministic_trace(tiny_cfg):
+    """Hypothesis-free real-engine check: a fixed trace that exercises
+    every lever (saturating ingest across 3 sessions, tight budget)."""
+    events = [("create", s, "default") for s in ("s0", "s1", "s2")]
+    for _ in range(8):
+        events += [("submit", s, "ingest", 8, 0, "default")
+                   for s in ("s0", "s1", "s2")]
+        events += [("run", 8)]
+    sim = _run_pressure_sim(
+        tiny_cfg, {"n_slots": 4, "policy": "shed-lowest-priority",
+                   "capacity": 26, "recompress": True, "offload": True},
+        events)
+    fired = {d["lever"] for d in sim.engine.pressure.decisions}
+    assert "recompress" in fired and "shed" in fired
+
+
+# -- 3. on/off capacity sweep (the bench criterion in miniature) ---------
+
+@pytest.mark.parametrize("capacity", [20, 26, 32])
+def test_controller_never_sheds_more_than_levers_off(tiny_cfg, capacity):
+    def drive(on):
+        sim = ServeSimulation(
+            tiny_cfg, n_slots=4, cache_len=32,
+            policy="shed-lowest-priority",
+            pressure_policy=PressurePolicy(
+                capacity_tokens=capacity,
+                enable_recompress=on, enable_offload=on))
+        for s in ("s0", "s1", "s2"):
+            sim.apply(("create", s, "default"))
+        for _ in range(8):
+            for s in ("s0", "s1", "s2"):
+                sim.apply(("submit", s, "ingest", 8, 0, "default"))
+            sim.apply(("run", 8))
+        sim.finish()
+        _check_pressure_trace(sim)
+        return sum(1 for r in sim._submitted if r.shed)
+
+    shed_on, shed_off = drive(True), drive(False)
+    assert shed_on <= shed_off, (capacity, shed_on, shed_off)
+    if capacity == 26:                    # the bench's operating point
+        assert shed_on < shed_off, (shed_on, shed_off)

@@ -35,10 +35,29 @@ def test_compression_beats_no_context(trained):
 
 
 def test_accuracy_improves_with_time_steps(trained):
-    """More compressed context -> better answers (paper Fig. 7 trend)."""
+    """More compressed context -> better answers (paper Fig. 7 trend).
+
+    Two fixes over the old seed-sensitive assertion:
+
+    - queries are drawn from the WHOLE key space (``query_pool="all"``),
+      so accumulating chunks adds answerable evidence — the quantity the
+      paper's trend is about.  The old eval queried only keys already
+      shown in context, which measures per-retrieval fidelity and
+      *falls* with t for any lossy memory (each query reads 4x more
+      compressed material at t=4 with zero added evidence), inverting
+      the trend at every seed.
+    - the trend is averaged over several eval seeds: a single 96-example
+      draw is noisy enough to blur it; the paper's claim is about the
+      expectation."""
     _, cfg, params = trained
-    accs = C.eval_at_timesteps(params, cfg, ts=(1, 4))
-    assert accs[4] >= accs[1] - 0.05, accs
+    seeds = (99, 100, 101, 102, 103)
+    acc1 = acc4 = 0.0
+    for seed in seeds:
+        accs = C.eval_at_timesteps(params, cfg, ts=(1, 4), seed=seed,
+                                   query_pool="all")
+        acc1 += accs[1] / len(seeds)
+        acc4 += accs[4] / len(seeds)
+    assert acc4 >= acc1 + 0.02, (acc1, acc4)
 
 
 def test_online_inference_matches_training_eval(trained):
