@@ -39,6 +39,17 @@ vs levers off (every deficit goes straight to shed).  The acceptance
 invariant — recorded as ``pressure.controller_reduces_shed`` — is a
 strictly lower shed count with the controller on at EQUAL capacity.
 
+A fifth scenario drives IDENTICAL seeded traffic through a single-shard
+engine and a session-sharded one (``n_shards=4``, mesh-native over the
+``shards`` axis when >= 4 devices are visible — CI forces them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — else the
+per-shard loop path).  The invariants, recorded in the JSON, are
+bit-exact query logits vs the single shard and ZERO steady-state
+cross-device session moves (``serve_cross_shard_moves_total``);
+tok/s at 1 vs 4 shards is reported for trend tracking (on a 2-core
+CPU container the forced devices share cores, so the ratio is noise —
+the exactness/no-transfer invariants are the signal).
+
 Also checks the LRU offload path end-to-end: a session offloaded to host
 and restored must reproduce its query logits EXACTLY (allclose) vs a
 never-offloaded run.
@@ -204,6 +215,34 @@ def offload_roundtrip_check(params, cfg, work, cache_len):
         eng.run()
         outs.append(np.asarray(r.result))
     return np.allclose(outs[0], outs[1], atol=0.0)
+
+
+def run_sharded(params, cfg, work, cache_len, n_shards, mesh):
+    """Drive ``work`` through an ``n_shards``-way engine: two warm
+    passes compile the per-shard programs (and the recycled-slot zeroing
+    scatter) outside the clock, then best-of-2 timed passes with fresh
+    sessions.  ``mesh=None`` at ``n_shards>1`` exercises the per-shard
+    loop path instead of the fused `shard_map` program."""
+    eng = ServeEngine(params, cfg, n_slots=len(work), cache_len=cache_len,
+                      n_shards=n_shards, mesh=mesh)
+    best, outs = None, None
+    for rep in range(4):                   # reps 0-1 warm, 2-3 timed
+        t0 = time.perf_counter()
+        for s in range(len(work)):
+            eng.create_session(f"r{rep}_{s}")
+        for t in range(len(work[0]["chunks"])):
+            for s, w in enumerate(work):
+                eng.ingest(f"r{rep}_{s}", w["chunks"][t])
+        rr = [eng.query(f"r{rep}_{s}", w["query"]).request
+              for s, w in enumerate(work)]
+        eng.run()
+        dt = time.perf_counter() - t0
+        res = [np.asarray(r.result) for r in rr]
+        for s in range(len(work)):
+            eng.close_session(f"r{rep}_{s}")
+        if rep >= 2 and (best is None or dt < best):
+            best, outs = dt, res
+    return best, outs, eng
 
 
 def run_open_loop(params, cfg, *, mode, rounds, arrivals_per_round=4,
@@ -457,6 +496,41 @@ def main():
         print("WARNING: pressure controller must shed strictly less than "
               "levers-off at equal capacity")
 
+    # -- session-sharded serving: 1 vs 4 shards, identical traffic ------
+    n_sh = 4
+    sh_sessions = 8 if args.smoke else 16
+    sh_work = _workload(sh_sessions, args.turns, args.chunk, args.qlen,
+                        cfg.vocab_size, seed=21)
+    sh_tok = sh_sessions * (args.turns * args.chunk + args.qlen)
+    mesh = None
+    if jax.device_count() >= n_sh:
+        from repro.launch.mesh import make_session_mesh
+        mesh = make_session_mesh(n_sh)
+    t_one, out_one, _ = run_sharded(params, cfg, sh_work, cache_len, 1, None)
+    t_sh, out_sh, eng_sh = run_sharded(params, cfg, sh_work, cache_len,
+                                       n_sh, mesh)
+    bit_exact = all(np.array_equal(a, b)
+                    for a, b in zip(out_one, out_sh))
+    moves = int(eng_sh._m_cross_shard.value)
+    path = "shard_map mesh" if mesh is not None else "per-shard loop"
+    print(f"\nsharded serving ({sh_sessions} sessions, {n_sh} shards, "
+          f"{path}, {jax.device_count()} devices)")
+    print(f"1 shard                : {t_one:7.3f} s  "
+          f"{sh_tok / t_one:9.0f} tok/s")
+    print(f"{n_sh} shards               : {t_sh:7.3f} s  "
+          f"{sh_tok / t_sh:9.0f} tok/s")
+    print(f"sharded == 1-shard     : {bit_exact} (bit-exact)")
+    print(f"cross-shard moves      : {moves}")
+    if not bit_exact:
+        print("WARNING: sharded engine must be bit-exact vs single shard "
+              "on identical traffic")
+    if moves != 0:
+        print("WARNING: steady-state serving must not move sessions "
+              "across shards")
+    C.csv_row("serve_shard_1", t_one * 1e6, f"{sh_tok / t_one:.0f} tok/s")
+    C.csv_row(f"serve_shard_{n_sh}", t_sh * 1e6,
+              f"{sh_tok / t_sh:.0f} tok/s, {path}")
+
     results = {
         "config": {"sessions": args.sessions, "turns": args.turns,
                    "chunk": args.chunk, "qlen": args.qlen,
@@ -478,6 +552,14 @@ def main():
         "open_loop_control_plane_deterministic": deterministic,
         "pressure": {**pressure,
                      "controller_reduces_shed": bool(reduces)},
+        "sharded": {
+            "n_shards": n_sh, "sessions": sh_sessions,
+            "mesh": mesh is not None,
+            "n_devices": jax.device_count(),
+            "one_shard_tok_per_s": sh_tok / t_one,
+            "sharded_tok_per_s": sh_tok / t_sh,
+            "bit_exact_vs_single_shard": bool(bit_exact),
+            "cross_shard_moves": moves},
     }
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)

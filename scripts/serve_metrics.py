@@ -33,7 +33,8 @@ sys.path.insert(0, "src")
 def demo_engine():
     """Small seeded workload exercising every instrumented path:
     batching, padding waste, offload/restore churn, admission
-    backpressure + pump, and request tracing."""
+    backpressure + pump, request tracing, and (n_shards=2) the
+    per-shard gauge/counter labels of the sharded serve path."""
     import jax
     import numpy as np
 
@@ -48,7 +49,7 @@ def demo_engine():
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(
         params, cfg, n_slots=4, max_resident=3, cache_len=64,
-        batch_buckets=(1, 2, 4), admission_policy="block",
+        n_shards=2, batch_buckets=(1, 2, 4), admission_policy="block",
         max_queued_tokens=64,
         tenant_quotas={"small": TenantQuota(max_queued_tokens=16)},
         obs=Observability.tracing())

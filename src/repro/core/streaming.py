@@ -272,10 +272,51 @@ def recompress_memory_lanes(cfg: ModelConfig, mem: MemState, group: int,
     return jax.lax.cond(jnp.any(do), regroup_masked, lambda m: m, mem)
 
 
+def _evict_compact(params, cfg: ModelConfig, st: StreamState, pending,
+                   ccm_on: bool, impl: Optional[str]) -> StreamState:
+    """Dense-sub-batch eviction: gather the pending lanes to the front
+    (stable argsort on the flags), run the compression pass on the
+    smallest power-of-2 bucket that covers them, scatter the results
+    back.  The masked path (`stream_step_lanes(compact=False)`) pays
+    O(N) compressions whenever ANY lane overflows; this pays
+    O(round_pow2(k)) for k pending lanes.  Bit-exact with the masked
+    path: each lane's eviction is computed from identical per-lane
+    state (vmap, no cross-lane reduction) and non-pending rows inside a
+    rounded-up bucket are re-selected with `jnp.where` before the
+    scatter."""
+    n = pending.shape[0]
+    buckets = []
+    b = 1
+    while b < n:
+        buckets.append(b)
+        b *= 2
+    buckets.append(n)
+    order = jnp.argsort(~pending)        # stable: pending lanes first
+    k = jnp.sum(pending)
+
+    def branch(K):
+        def run(s):
+            idx = order[:K]              # static bucket width
+            rows = jax.tree.map(lambda a: a[idx], s)
+            sel = pending[idx]
+
+            def one(lane: StreamState, p) -> StreamState:
+                ev = _evict_once(params, cfg, lane, ccm_on, impl)
+                return jax.tree.map(lambda nw, o: jnp.where(p, nw, o),
+                                    ev, lane)
+            rows = jax.vmap(one)(rows, sel)
+            return jax.tree.map(lambda f, r: f.at[idx].set(r), s, rows)
+        return run
+
+    bidx = jnp.searchsorted(jnp.asarray(buckets, jnp.int32), k)
+    return jax.lax.switch(bidx, [branch(K) for K in buckets], st)
+
+
 def stream_step_lanes(params, cfg: ModelConfig, st: StreamState,
                       chunk_tokens: jnp.ndarray, lengths=None,
                       ccm_on: bool = True,
-                      impl: Optional[str] = None
+                      impl: Optional[str] = None,
+                      compact: bool = True
                       ) -> Tuple[jnp.ndarray, StreamState]:
     """Serve-batch streaming step over N stacked lanes with PER-LANE
     eviction gating.
@@ -296,6 +337,12 @@ def stream_step_lanes(params, cfg: ModelConfig, st: StreamState,
     per-token prefill then runs with ``evict=False``.  Cost of the
     compression pass is therefore proportional to how often windows
     actually overflow, not to steps * lanes.
+
+    ``compact=True`` (default) additionally gathers the pending lanes
+    into a dense power-of-2 sub-batch before the pass (`_evict_compact`)
+    so a 64-lane batch with 3 overflowing lanes compresses 4 lanes, not
+    64.  ``compact=False`` keeps the all-lanes masked pass — the
+    reference oracle for the bit-exactness test.
     """
     c = chunk_tokens.shape[-1]
     vl = jnp.full((chunk_tokens.shape[0],), c, jnp.int32) \
@@ -308,7 +355,10 @@ def stream_step_lanes(params, cfg: ModelConfig, st: StreamState,
             return jax.tree.map(lambda n, o: jnp.where(p, n, o), ev, lane)
         return jax.vmap(one)(s, pending)
 
-    st = jax.lax.cond(jnp.any(pending), evict_masked, lambda s: s, st)
+    evict = (lambda s: _evict_compact(params, cfg, s, pending,
+                                      ccm_on, impl)) \
+        if compact else evict_masked
+    st = jax.lax.cond(jnp.any(pending), evict, lambda s: s, st)
 
     def one_step(lane: StreamState, tk, v):
         return stream_step(params, cfg, lane, tk, ccm_on=ccm_on,

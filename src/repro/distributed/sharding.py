@@ -218,3 +218,24 @@ def named(mesh, spec_tree):
     return jax.tree.map(
         lambda s: None if s is None else NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+# ---------------------------------------------------------------------------
+# serve-arena specs (session-axis sharding)
+# ---------------------------------------------------------------------------
+
+def arena_pspecs(template: Any, axis: str = "shards") -> Any:
+    """PartitionSpec tree for a serve arena's slabs: every leaf is the
+    session template with a leading ROW axis (`serve.arena`), sharded
+    over ``axis`` — one contiguous row block (slots + scratch row) per
+    device.  All other dims replicate; per-session state is already
+    model-replicated on the serve path."""
+    return jax.tree.map(lambda _: P(axis), template)
+
+
+def arena_sharding(mesh, template: Any, axis: str = "shards") -> Any:
+    """NamedSharding tree for `arena_pspecs` — pass as the arena's
+    ``place`` hook: ``SessionArena(..., place=lambda slabs:
+    jax.device_put(slabs, arena_sharding(mesh, template)))`` pins shard
+    ``s``'s rows to mesh device ``s``."""
+    return named(mesh, arena_pspecs(template, axis))

@@ -38,6 +38,19 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return _mk((n_data, n_model), ("data", "model"))
 
 
+def make_session_mesh(n_shards: Optional[int] = None):
+    """1-D mesh over the SESSION axis for the sharded serve engine: each
+    device owns one arena shard (a contiguous block of session rows —
+    see `serve.arena`).  Per-session CCM state is tiny and independent,
+    so the session axis is the embarrassingly-parallel one; model
+    parallelism composes separately (ROADMAP).  Defaults to every alive
+    device."""
+    n = n_shards if n_shards is not None else jax.device_count()
+    if n < 1:
+        raise ValueError("session mesh needs at least one device")
+    return _mk((n,), ("shards",))
+
+
 def available_mesh(model_parallel: int = 1):
     """Elastic: build the best mesh from whatever devices are alive."""
     n = jax.device_count()

@@ -102,8 +102,11 @@ def make_stream_step(cfg: ModelConfig, params_shapes,
 # counters.  `make_arena_step` fuses arena gather -> vmapped op -> scatter
 # into one jit per op kind; distinct (B, token_len) shapes each compile
 # once, so `fn._cache_size()` is the recompile-churn metric the serve
-# engine reports.  Single-host only for now (dist sharding of the session
-# axis is an open ROADMAP item).
+# engine reports.  `make_sharded_arena_step` is the multi-device variant:
+# the arena's session axis is partitioned one row block per device
+# (serve.arena) and the same fused step runs under shard_map on every
+# shard's local rows — per-session state is independent, so the program
+# has NO cross-device collectives on the steady path.
 # ---------------------------------------------------------------------------
 
 def ragged_family(cfg: ModelConfig) -> bool:
@@ -205,6 +208,72 @@ def make_arena_step(cfg: ModelConfig, op: str,
             else KOPS.session_scatter(s, ids, r),
             slabs, state, new)
         return out, slabs
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+def make_sharded_arena_step(cfg: ModelConfig, op: str, mesh,
+                            ragged: bool = False) -> Callable:
+    """`make_arena_step` partitioned over the SESSION axis: one arena
+    shard (contiguous row block, `serve.arena`) per device of the 1-D
+    ``mesh`` (axis ``"shards"``, `launch.mesh.make_session_mesh`).
+
+    Call contract:
+    (params, slabs, ids (S, B), tokens (S, B, 1, l), lengths (S, B)) ->
+    (logits (S, B, 1, l, V) or None for ingest, slabs).
+
+    ``slabs`` leaves carry the arena's full ``(n_rows, ...)`` row axis
+    sharded ``P("shards")`` (each device holds its shard's
+    ``slots_per_shard + 1`` rows); ``ids`` row ``s`` holds shard ``s``'s
+    LOCAL row indices (``SessionArena.local_row`` — every shard's
+    scratch row is ``slots_per_shard`` — NOT global slot ids); params
+    are replicated.  Inside `shard_map` each device runs the exact fused
+    gather -> vmapped-op -> scatter of `make_arena_step` on its own row
+    block: per-session CCM state is independent, so the program contains
+    NO cross-device collectives — session state never crosses a device
+    boundary on the steady path (the serve engine's
+    ``serve_cross_shard_moves_total`` counter stays 0).  Slabs are
+    donated, so each shard's rows update in place on their own device.
+
+    One jit per (op, ragged) like the single-shard builder; distinct
+    (S, B, token_len) shapes each compile once."""
+    from repro.distributed.context import shard_map_compat
+    from repro.kernels import ops as KOPS
+    vf = session_vmap(cfg, op, ragged)
+
+    def body(params, slabs, ids, tokens, lengths):
+        # per-device view: slabs leaves hold this shard's row block;
+        # ids/tokens/lengths arrive (1, ...) — drop the shard dim
+        ids, tokens, lengths = ids[0], tokens[0], lengths[0]
+        state = jax.tree.map(lambda s: KOPS.session_gather(s, ids), slabs)
+        state = jax.lax.optimization_barrier(state)
+        if op == "ingest":
+            new = vf(params, state, tokens, lengths)
+        else:
+            out, new = vf(params, state, tokens, lengths)
+        slabs = jax.tree.map(
+            lambda s, old, r: s if r is old
+            else KOPS.session_scatter(s, ids, r),
+            slabs, state, new)
+        if op == "ingest":
+            # shard_map outputs must be arrays; logits=None stays outside
+            return slabs
+        return out[None], slabs       # re-attach the shard dim
+
+    shard = P("shards")
+    out_specs = shard if op == "ingest" else (shard, shard)
+    sharded = shard_map_compat(
+        body, mesh,
+        in_specs=(P(), shard, shard, shard, shard),
+        out_specs=out_specs,
+        # per-lane counters make leaves device-varying in ways the
+        # static replication checker cannot prove; correctness is pinned
+        # by the single-shard bit-exactness tests instead
+        check_vma=False)
+
+    def fn(params, slabs, ids, tokens, lengths):
+        if op == "ingest":
+            return None, sharded(params, slabs, ids, tokens, lengths)
+        return sharded(params, slabs, ids, tokens, lengths)
     return jax.jit(fn, donate_argnums=(1,))
 
 

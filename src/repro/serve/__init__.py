@@ -21,14 +21,16 @@ device feasible.  This package is that serving layer:
                  budget walked down the recompress -> offload -> shed
                  degradation ladder (cheapest lever first)
   engine.py    — the driver loop wiring admission -> scheduler ->
-                 jitted steps
+                 jitted steps (optionally session-sharded: one arena
+                 shard per device, `shard_map` hot path)
 """
 from repro.serve.admission import (Admitted, AdmissionController, Queued,
                                    Shed, TenantQuota, Verdict)
 from repro.serve.arena import ArenaFull, SessionArena
 from repro.serve.engine import ServeEngine
 from repro.serve.pressure import MemoryPressureController, PressurePolicy
-from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
+from repro.serve.scheduler import (Request, ScheduledBatch, Scheduler,
+                                   ShardedBatch)
 from repro.serve.session import (CloseResult, OffloadCostModel,
                                  OffloadResult, SessionManager)
 
@@ -36,4 +38,5 @@ __all__ = ["Admitted", "AdmissionController", "ArenaFull", "CloseResult",
            "MemoryPressureController", "OffloadCostModel",
            "OffloadResult", "PressurePolicy", "Queued", "Request",
            "ScheduledBatch", "Scheduler", "ServeEngine", "SessionArena",
-           "SessionManager", "Shed", "TenantQuota", "Verdict"]
+           "SessionManager", "ShardedBatch", "Shed", "TenantQuota",
+           "Verdict"]

@@ -84,8 +84,15 @@ class TenantQuota:
 @dataclasses.dataclass(frozen=True)
 class Verdict:
     """Structured outcome of an engine submit; ``request`` is the live
-    handle (poll ``request.done`` / read ``request.result``)."""
+    handle (poll ``request.done`` / read ``request.result``).
+
+    ``shard`` is the arena shard that owns the request's session (the
+    engine fills it in from the session's fixed placement) — callers on
+    a sharded engine can route follow-up control calls
+    (`close_session` / `offload_session`) with it; it is ``None`` when
+    the controller is used standalone."""
     request: Request
+    shard: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,27 +3,42 @@
 Every session's state (``OnlineState`` for ingest/query sessions,
 ``StreamState`` for streaming ones) is one *row* of a set of preallocated
 slabs: each pytree leaf of the single-session template (inner batch dim
-1) becomes a slab with a leading ``(n_slots + 1,)`` axis.  Slot ids are
-handed out from a free-list; nothing is ever reallocated per session.
+1) becomes a slab with a leading row axis.  Slot ids are handed out from
+a free-list; nothing is ever reallocated per session.
+
+SHARDING (session-axis partitioning): the arena is split into
+``n_shards`` equal contiguous row blocks along the leading axis — one
+block per device when the engine runs mesh-native.  Shard ``s`` owns
+rows ``[s * (slots_per_shard + 1), (s + 1) * (slots_per_shard + 1))``:
+``slots_per_shard`` data rows handed out by the shard's OWN free-list,
+plus one reserved *scratch* row at the block's end (``pad_slot_of(s)``).
+Slot ids stay GLOBAL row indices, so every jitted gather/scatter —
+``pack``/``unpack`` here, the engine's fused step, the pressure
+controller's recompression — works verbatim on a sharded arena; when the
+slabs carry a `NamedSharding` over the row axis the block boundaries
+coincide with device boundaries and shard-local batches never touch
+another device's rows.  ``n_shards=1`` reproduces the original layout
+exactly (``n_slots + 1`` rows, scratch at ``n_slots``).
 
 ``pack`` gathers any set of active slot ids into a contiguous batch for
 the vmapped session ops (`launch.serve.session_vmap`), and ``unpack``
 scatters the updated batch back — both one jitted gather/scatter over
 donated buffers (`kernels.ops.session_gather` / `session_scatter`,
 Pallas DMA on TPU).  The engine's hot path fuses all three into one
-program via `launch.serve.make_arena_step`; pack/unpack here serve the
-offload/restore and single-slot paths.
+program via `launch.serve.make_arena_step` (or, sharded, one
+`shard_map` program via `make_sharded_arena_step`); pack/unpack here
+serve the offload/restore and single-slot paths.
 
-Row ``n_slots`` is a reserved *scratch* slot: the scheduler pads a
-short batch up to its bucket size with ``pad_slot`` ids, so padding
-lanes gather scratch, compute garbage, and scatter the garbage back to
-scratch — shapes stay bucketed with no semantic effect.
+The scheduler pads a short batch up to its bucket size with the owning
+shard's scratch row, so padding lanes gather scratch, compute garbage,
+and scatter the garbage back to scratch — shapes stay bucketed with no
+semantic effect and pad traffic stays shard-local.
 """
 from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Any, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,17 +87,41 @@ def stream_template(cfg: ModelConfig):
 
 
 class SessionArena:
-    """Slab allocator + jitted pack/unpack for one state template."""
+    """Slab allocator + jitted pack/unpack for one state template.
 
-    def __init__(self, template: Any, n_slots: int):
+    ``n_shards``: partition the slots into equal contiguous row blocks,
+    each with its own free-list and scratch row (see module docstring).
+    ``place``: optional callable applied to the freshly-zeroed slabs
+    (e.g. ``lambda t: jax.device_put(t, NamedSharding(mesh, P("shards")))``
+    to pin one row block per device)."""
+
+    def __init__(self, template: Any, n_slots: int, n_shards: int = 1,
+                 place: Optional[Callable] = None):
         if n_slots < 1:
             raise ValueError("arena needs at least one slot")
+        if n_shards < 1:
+            raise ValueError("arena needs at least one shard")
+        if n_slots % n_shards:
+            raise ValueError(
+                f"n_slots ({n_slots}) must divide evenly into n_shards "
+                f"({n_shards}) so every device owns an equal block")
         self.template = template
         self.n_slots = n_slots
-        self.pad_slot = n_slots          # reserved scratch row
+        self.n_shards = n_shards
+        self.slots_per_shard = n_slots // n_shards
+        self._stride = self.slots_per_shard + 1   # rows per shard block
+        self.n_rows = n_shards * self._stride
         self.slabs = jax.tree.map(
-            lambda s: jnp.zeros((n_slots + 1,) + s.shape, s.dtype), template)
-        self._free = deque(range(n_slots))
+            lambda s: jnp.zeros((self.n_rows,) + s.shape, s.dtype), template)
+        # placed (mesh-sharded) slabs span several devices: callers that
+        # stage data for pack/unpack must NOT commit it to one device
+        # (committed single-device operands conflict with the sharded
+        # slab inside the jitted gather/scatter) — see
+        # `SessionManager._restore_batch`
+        self.placed = place is not None
+        if place is not None:
+            self.slabs = place(self.slabs)
+        self._free = [deque(self.shard_slots(s)) for s in range(n_shards)]
         self._live = set()
         self._dirty = set()           # slots that have ever been written
         self._pack = _pack_slabs
@@ -91,25 +130,61 @@ class SessionArena:
     # -- allocation ----------------------------------------------------
     @classmethod
     def for_online(cls, cfg: ModelConfig, n_slots: int, cache_len: int,
-                   mem_slots: Optional[int] = None) -> "SessionArena":
-        return cls(online_template(cfg, cache_len, mem_slots), n_slots)
+                   mem_slots: Optional[int] = None, n_shards: int = 1,
+                   place: Optional[Callable] = None) -> "SessionArena":
+        return cls(online_template(cfg, cache_len, mem_slots), n_slots,
+                   n_shards, place)
 
     @classmethod
-    def for_stream(cls, cfg: ModelConfig, n_slots: int) -> "SessionArena":
-        return cls(stream_template(cfg), n_slots)
+    def for_stream(cls, cfg: ModelConfig, n_slots: int, n_shards: int = 1,
+                   place: Optional[Callable] = None) -> "SessionArena":
+        return cls(stream_template(cfg), n_slots, n_shards, place)
+
+    # -- shard geometry ------------------------------------------------
+    def shard_slots(self, shard: int) -> range:
+        """The data rows shard ``shard`` owns (its scratch row excluded)."""
+        base = shard * self._stride
+        return range(base, base + self.slots_per_shard)
+
+    def pad_slot_of(self, shard: int) -> int:
+        """The shard's reserved scratch row (batch padding lanes)."""
+        return shard * self._stride + self.slots_per_shard
+
+    @property
+    def pad_slot(self) -> int:
+        """Shard 0's scratch row — with ``n_shards == 1`` this is row
+        ``n_slots``, the original single-arena scratch slot."""
+        return self.pad_slot_of(0)
+
+    def shard_of(self, slot: int) -> int:
+        """Owning shard of a global slot/row id."""
+        return slot // self._stride
+
+    def local_row(self, slot: int) -> int:
+        """Row index within the owning shard's block (what a device sees
+        under `shard_map`: ``slots_per_shard`` is every shard's local
+        scratch row)."""
+        return slot % self._stride
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
+
+    def shard_free(self, shard: int) -> int:
+        return len(self._free[shard])
 
     @property
     def occupancy(self) -> float:
-        return 1.0 - len(self._free) / self.n_slots
+        return 1.0 - self.n_free / self.n_slots
 
-    def alloc(self) -> int:
-        if not self._free:
-            raise ArenaFull(f"all {self.n_slots} slots in use")
-        slot = self._free.popleft()
+    def alloc(self, shard: int = 0) -> int:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range "
+                             f"[0, {self.n_shards})")
+        if not self._free[shard]:
+            raise ArenaFull(
+                f"all {self.slots_per_shard} slots of shard {shard} in use")
+        slot = self._free[shard].popleft()
         self._live.add(slot)
         return slot
 
@@ -117,32 +192,53 @@ class SessionArena:
         if slot not in self._live:
             raise ValueError(f"slot {slot} is not allocated")
         self._live.remove(slot)
-        self._free.append(slot)
+        self._free[self.shard_of(slot)].append(slot)
 
     def metrics_sample(self) -> dict:
         """Point-in-time occupancy sample for gauge export (the engine's
-        ``_sample_gauges`` reads this on every metrics snapshot)."""
+        ``_sample_gauges`` reads this on every metrics snapshot).  The
+        ``shards`` list carries the same sample per shard block."""
         return {"n_slots": self.n_slots, "live": self.n_slots - self.n_free,
-                "free": self.n_free, "occupancy": self.occupancy}
+                "free": self.n_free, "occupancy": self.occupancy,
+                "shards": [
+                    {"n_slots": self.slots_per_shard,
+                     "live": self.slots_per_shard - len(self._free[s]),
+                     "free": len(self._free[s]),
+                     "occupancy": 1.0 - (len(self._free[s])
+                                         / self.slots_per_shard)}
+                    for s in range(self.n_shards)]}
 
     def consistency_errors(self) -> list:
         """Free-list / live-set invariant violations (empty = healthy):
-        no slot both free and live, no duplicates in the free list, and
-        every slot accounted exactly once.  The serve property suite
-        asserts this after every simulated event (double-free / leak
-        detection)."""
+        no slot both free and live, no duplicates in any shard's free
+        list, every data row of every shard accounted exactly once, and
+        no slot parked on the wrong shard's free-list.  The serve
+        property suite asserts this after every simulated event
+        (double-free / leak / cross-shard corruption detection)."""
         errs = []
-        free = list(self._free)
-        if len(free) != len(set(free)):
-            errs.append(f"duplicate slots in free list: {sorted(free)}")
-        overlap = set(free) & self._live
+        all_free = []
+        for shard in range(self.n_shards):
+            free = list(self._free[shard])
+            owned = set(self.shard_slots(shard))
+            stray = [s for s in free if s not in owned]
+            if stray:
+                errs.append(f"shard {shard} free list holds foreign "
+                            f"slots: {sorted(stray)}")
+            all_free.extend(free)
+        if len(all_free) != len(set(all_free)):
+            errs.append(f"duplicate slots in free lists: "
+                        f"{sorted(all_free)}")
+        overlap = set(all_free) & self._live
         if overlap:
             errs.append(f"slots both free and live: {sorted(overlap)}")
-        missing = set(range(self.n_slots)) - set(free) - self._live
+        data_rows = set()
+        for shard in range(self.n_shards):
+            data_rows.update(self.shard_slots(shard))
+        missing = data_rows - set(all_free) - self._live
         if missing:
             errs.append(f"slots leaked (neither free nor live): "
                         f"{sorted(missing)}")
-        bogus = (set(free) | self._live) - set(range(self.n_slots))
+        bogus = (set(all_free) | self._live) - data_rows
         if bogus:
             errs.append(f"out-of-range slots tracked: {sorted(bogus)}")
         return errs

@@ -33,11 +33,27 @@ the difference.
 Online sessions (ingest/query over ``OnlineState``) and streaming
 sessions (``stream`` over ``StreamState``) live in separate arenas since
 their state templates differ; ``stream_slots=0`` skips the second arena.
+
+SHARDED SERVING (``n_shards > 1`` / ``mesh=``): the arenas partition
+into one shard per device along the SESSION axis (`serve.arena`) and
+sessions are placed on a shard at creation (least-loaded, deterministic)
+and pinned there for life.  The drain pops one `ShardedBatch` per
+iteration — a same-shape sub-batch per shard — and runs all shards as
+ONE fused program: under `shard_map` on a ``mesh``
+(`launch.serve.make_sharded_arena_step`, zero cross-device collectives),
+or as a per-shard loop over the single-device step when no mesh is given
+(the control-plane-identical path the simulation harness and the
+bit-exactness tests drive).  Offload/restore stage host transfers per
+shard, pressure levers act on sessions wherever they live (all state
+row ids are global), and occupancy/resident/queue/shed metrics gain a
+``shard`` label.  Session state NEVER moves between shards —
+``serve_cross_shard_moves_total`` exists to prove it stays 0.
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +68,8 @@ from repro.serve.admission import (AdmissionController, TenantQuota,
                                    Verdict)
 from repro.serve.arena import SessionArena
 from repro.serve.pressure import MemoryPressureController, PressurePolicy
-from repro.serve.scheduler import Request, ScheduledBatch, Scheduler
+from repro.serve.scheduler import (Request, ScheduledBatch, Scheduler,
+                                   ShardedBatch)
 from repro.serve.session import (CloseResult, OffloadCostModel,
                                  OffloadResult, SessionManager)
 
@@ -78,6 +95,7 @@ class ServeEngine:
                  offload_cost_model: Optional[OffloadCostModel] = None,
                  pressure_policy: Optional[PressurePolicy] = None,
                  step_factory: Optional[Callable] = None,
+                 n_shards: int = 1, mesh=None,
                  obs: Optional[Observability] = None):
         """``token_buckets``: ragged-batching token buckets ("auto" picks
         `launch.specs.SERVE_TOKEN_BUCKETS` for attention archs and exact-
@@ -110,6 +128,18 @@ class ServeEngine:
         builder (default `launch.serve.make_arena_step`); the serve
         simulation harness injects a control-plane-only null step.
 
+        Sharding: ``n_shards > 1`` partitions both arenas into that
+        many session shards (``n_slots`` and ``stream_slots`` must
+        divide evenly) and switches the drain to sharded pops; with a
+        ``mesh`` (1-D over axis ``"shards"``,
+        `launch.mesh.make_session_mesh`) the slabs are placed one shard
+        per device and the hot path runs under `shard_map`
+        (``n_shards`` defaults to the mesh size).  Without a mesh the
+        sharded engine runs each shard's sub-batch through the
+        single-device step — same control plane, same results; that is
+        also the only sharded mode compatible with a custom
+        ``step_factory``.
+
         ``obs``: `repro.obs.Observability` bundle.  Default = live
         metrics registry + monotonic clock + `NullRecorder` (no traces,
         no flight buffer, bit-exact with pre-obs behavior).  Pass
@@ -129,6 +159,29 @@ class ServeEngine:
         self.ragged = token_buckets is not None
         self._token_buckets = token_buckets
         self._step_factory = step_factory or SRV.make_arena_step
+        if mesh is not None:
+            if "shards" not in getattr(mesh, "axis_names", ()):
+                raise ValueError(
+                    "serve mesh needs a 'shards' axis "
+                    "(launch.mesh.make_session_mesh)")
+            mesh_n = int(mesh.shape["shards"])
+            if n_shards not in (1, mesh_n):
+                raise ValueError(
+                    f"n_shards ({n_shards}) disagrees with the mesh's "
+                    f"'shards' axis size ({mesh_n})")
+            n_shards = mesh_n
+            if step_factory is not None:
+                raise ValueError(
+                    "mesh execution uses make_sharded_arena_step; a "
+                    "custom step_factory only composes with the "
+                    "loop-over-shards mode (omit mesh)")
+        self.n_shards = n_shards
+        self.mesh = mesh
+        place = None
+        if mesh is not None:
+            from repro.distributed import sharding as SH
+            place = lambda slabs: jax.device_put(        # noqa: E731
+                slabs, SH.named(mesh, SH.arena_pspecs(slabs)))
         self.obs = obs if obs is not None else Observability()
         self._build_metrics()
         mgr_kw = dict(batched_offload=batched_offload,
@@ -139,7 +192,8 @@ class ServeEngine:
                       obs=self.obs)
         self._mgr: Dict[str, SessionManager] = {
             "online": SessionManager(
-                SessionArena.for_online(cfg, n_slots, cache_len, mem_slots),
+                SessionArena.for_online(cfg, n_slots, cache_len, mem_slots,
+                                        n_shards=n_shards, place=place),
                 max_resident, replay_fn=self._make_replay("online"),
                 **mgr_kw),
         }
@@ -153,11 +207,20 @@ class ServeEngine:
                     f"({c.stream_chunk}) exceeds stream_window "
                     f"({c.stream_window})")
             self._mgr["stream"] = SessionManager(
-                SessionArena.for_stream(cfg, stream_slots),
+                SessionArena.for_stream(cfg, stream_slots,
+                                        n_shards=n_shards, place=place),
                 stream_max_resident, replay_fn=self._make_replay("stream"),
                 **mgr_kw)
         caps = {op: self._mgr[kind].max_resident
                 for op, kind in _OP_STATE.items() if kind in self._mgr}
+        # sharded-pop caps: a pop must fit one activate_batch call —
+        # per shard no more lanes than the shard's slots, and in total
+        # no more than the arena's resident budget
+        self._per_shard_cap = {
+            op: min(self._mgr[kind].max_resident,
+                    self._mgr[kind].arena.slots_per_shard)
+            for op, kind in _OP_STATE.items() if kind in self._mgr}
+        self._max_total = dict(caps)
         # a stream op must never pad past the eviction quantum — one
         # eviction per step keeps the window bounded (stream_step guard)
         self.scheduler = Scheduler(
@@ -188,9 +251,11 @@ class ServeEngine:
             default_quota=default_quota, on_shed=self._on_shed,
             max_backlog=max_backlog, metrics=self.obs.registry,
             pressure=self.pressure)
-        self._steps = {}               # op kind -> jitted fn
+        self._steps = {}               # (op, masked) -> jitted fn
+        self._sharded_steps = {}       # (op, masked) -> shard_map'd fn
         self._seen_shapes = set()      # (kind, lanes, token_len, masked)
         self._kind: Dict[str, str] = {}   # sid -> 'online' | 'stream'
+        self._shard: Dict[str, int] = {}  # sid -> owning arena shard
         self._tenant: Dict[str, str] = {}  # sid -> tenant
         self._cached: Dict[str, int] = {}  # sid -> KV-cache tokens used
         self._undelivered = []         # [(requests, device out)] per batch
@@ -268,27 +333,91 @@ class ServeEngine:
                 "free-list integrity violations found (must stay 0)",
                 labels=("arena",)),
         }
+        # per-shard visibility (one shard per device under a mesh) —
+        # populated for n_shards == 1 too, so dashboards are uniform
+        self._g_shard = {
+            "occupancy": reg.gauge(
+                "serve_shard_occupancy",
+                "fraction of one arena shard's slots allocated",
+                labels=("arena", "shard")),
+            "resident": reg.gauge(
+                "serve_shard_resident_sessions",
+                "device-resident sessions per arena shard",
+                labels=("arena", "shard")),
+            "queue_depth": reg.gauge(
+                "serve_shard_queue_depth",
+                "scheduler-queued requests routed to each shard",
+                labels=("shard",)),
+        }
+        self._m_shard_shed = reg.counter(
+            "serve_shard_shed_total",
+            "requests shed by admission, by the shard that owned their "
+            "session (placement-fairness signal: one shard shedding "
+            "while another idles means placement is skewed)",
+            labels=("shard",))
+        self._m_cross_shard = reg.counter(
+            "serve_cross_shard_moves_total",
+            "session states moved between shards — there is NO "
+            "mechanism for this on the steady path (sessions are "
+            "pinned to their shard at creation), so this counter "
+            "exists to PROVE it stays 0; the sharded benchmark and CI "
+            "gate assert exactly that")
+        for s in range(self.n_shards):
+            for kind in ("online", "stream"):
+                self._g_shard["occupancy"].labels(arena=kind, shard=str(s))
+                self._g_shard["resident"].labels(arena=kind, shard=str(s))
+            self._g_shard["queue_depth"].labels(shard=str(s))
+            self._m_shard_shed.labels(shard=str(s))
 
     def _resident_quota_of(self, tenant: str) -> Optional[int]:
         return self.admission.quota(tenant).max_resident
 
     # -- session lifecycle --------------------------------------------
+    def _place(self, kind: str) -> int:
+        """Deterministic least-loaded shard placement: fewest open
+        sessions on that kind's arena, lowest shard index on ties —
+        reproducible given the same creation order, which the
+        bit-exactness tests rely on."""
+        load = self._mgr[kind].shard_load()
+        return min(range(len(load)), key=lambda s: (load[s], s))
+
     def create_session(self, sid: str, kind: str = "online",
-                       tenant: str = "default") -> None:
+                       tenant: str = "default",
+                       shard: Optional[int] = None) -> int:
+        """Open a session and return its owning shard.  ``shard=None``
+        (default) places it on the least-loaded shard of its kind's
+        arena; an explicit shard pins it there (operators co-locating a
+        tenant, tests pinning layouts).  The placement is for life —
+        session state never migrates between shards."""
         if kind not in self._mgr:
             raise ValueError(
                 f"no arena for session kind {kind!r} "
                 "(construct the engine with stream_slots > 0?)")
-        self._mgr[kind].create(sid, tenant)
+        if shard is None:
+            shard = self._place(kind)
+        self._mgr[kind].create(sid, tenant, shard=shard)
         self._kind[sid] = kind
+        self._shard[sid] = shard
         self._tenant[sid] = tenant
+        return shard
 
-    def close_session(self, sid: str) -> CloseResult:
+    def shard_of(self, sid: str) -> Optional[int]:
+        """The shard owning ``sid``'s session (None = unknown sid)."""
+        return self._shard.get(sid)
+
+    def close_session(self, sid: str,
+                      shard: Optional[int] = None) -> CloseResult:
         """Tear a session down everywhere (queue, backlog, side tables,
         manager).  Closing an unknown (or already-closed) sid is a
         structured no-op — it used to KeyError out of ``self._kind``
         AFTER cancelling queue entries, leaving a double-close half
-        applied."""
+        applied.  ``shard``: optional routing assertion — a close
+        routed to a shard that does not own the sid is a structured
+        no-op (``status="wrong-shard"``) with NOTHING torn down, so a
+        misrouted control call can never cancel another shard's
+        work."""
+        if shard is not None and self._shard.get(sid) != shard:
+            return CloseResult(sid, "wrong-shard")
         kind = self._kind.pop(sid, None)
         if kind is None:
             return CloseResult(sid, "unknown")
@@ -297,16 +426,23 @@ class ServeEngine:
         for r in dropped:                     # terminal span: cancelled
             rec.cancelled(r)
         self._cached.pop(sid, None)
+        self._shard.pop(sid, None)
         self._tenant.pop(sid, None)
         return self._mgr[kind].close(sid)
 
-    def offload_session(self, sid: str) -> OffloadResult:
+    def offload_session(self, sid: str,
+                        shard: Optional[int] = None) -> OffloadResult:
         """Explicitly push a session's state to host.  A no-op with a
         telling status for unknown / already-offloaded / never-activated
-        sessions — never raises."""
+        sessions — never raises.  ``shard``: optional routing assertion,
+        as in `close_session` — a mismatch returns
+        ``OffloadResult(status="wrong-shard")`` without touching the
+        session."""
         kind = self._kind.get(sid)
         if kind is None:
             return OffloadResult(sid, "unknown")
+        if shard is not None and self._shard.get(sid) != shard:
+            return OffloadResult(sid, "wrong-shard")
         return self._mgr[kind].offload_batch([sid])[0]
 
     # -- memory-pressure plumbing (serve.pressure callbacks) -----------
@@ -353,11 +489,13 @@ class ServeEngine:
     # -- request submission -------------------------------------------
     def _on_shed(self, req: Request) -> None:
         """Admission dropped a request: release any resources its
-        submit-time validation reserved (KV-cache token accounting)."""
+        submit-time validation reserved (KV-cache token accounting),
+        and attribute the shed to the owning shard (fairness signal)."""
         if req.kind == "query" and req.sid in self._cached:
             # plain decrement: every shed query (newcomer or queued
             # victim) carries a reservation made at its own submit
             self._cached[req.sid] -= req.token_len
+        self._m_shard_shed.labels(shard=str(req.shard)).inc()
 
     def _submit(self, sid: str, op: str, tokens, priority: int) -> Verdict:
         kind = self._kind[sid]
@@ -367,6 +505,7 @@ class ServeEngine:
         # a validation error must raise with zero side effects
         req = self.scheduler.make_request(sid, op, tokens, priority,
                                           tenant=self._tenant[sid])
+        req.shard = self._shard[sid]   # route to the session's placement
         n = req.token_len
         if op == "stream" and n > self.cfg.ccm.stream_chunk:
             # mirror the stream_step trace-time guard HERE, before the
@@ -395,7 +534,9 @@ class ServeEngine:
         rec.submit(req)
         verdict = self.admission.submit_request(req)
         self._record_verdict(verdict)
-        return verdict
+        # surface the owning shard on the verdict so callers can route
+        # follow-up control calls (close/offload) without a lookup
+        return dataclasses.replace(verdict, shard=req.shard)
 
     def _record_verdict(self, verdict: Verdict) -> None:
         """Span events for the verdict — the engine observes everything
@@ -432,6 +573,15 @@ class ServeEngine:
         if key not in self._steps:
             self._steps[key] = self._step_factory(self.cfg, op, masked)
         return self._steps[key]
+
+    def _sharded_step(self, op: str, masked: bool):
+        """`shard_map` fused step per (op, masked) — the mesh hot path
+        (`launch.serve.make_sharded_arena_step`)."""
+        key = (op, masked)
+        if key not in self._sharded_steps:
+            self._sharded_steps[key] = SRV.make_sharded_arena_step(
+                self.cfg, op, self.mesh, ragged=masked)
+        return self._sharded_steps[key]
 
     def _note_shape(self, op: str, lanes: int, token_len: int,
                     masked: bool) -> None:
@@ -538,6 +688,92 @@ class ServeEngine:
         m["batches"].labels(kind=batch.kind).inc()
         m["dispatch_s"].labels(kind=batch.kind).inc(dt)
 
+    def _run_sharded_batch(self, sb: ShardedBatch) -> None:
+        """Execute one sharded pop: activate every sub-batch's sessions
+        in ONE `activate_batch` call (shard-local slot allocation,
+        per-shard staged offload/restore), then run all shards — as one
+        `shard_map` program over (S, B, ...) lanes on a mesh, or as a
+        loop of per-shard single-device steps otherwise (identical
+        control plane; empty sub-batches are skipped on the loop path
+        since their all-pad lanes only write scratch garbage)."""
+        mgr = self._mgr[_OP_STATE[sb.kind]]
+        arena = mgr.arena
+        rec = self.obs.recorder
+        all_reqs = sb.requests                       # shard-major
+        pinned = {r.sid for r in all_reqs}
+        t0 = self.obs.clock.now()
+        slots = mgr.activate_batch([r.sid for r in all_reqs], pinned)
+        slot_of = dict(zip((r.sid for r in all_reqs), slots))
+        S, B, L = self.n_shards, sb.bucket, sb.token_len
+        use_mesh = self.mesh is not None
+        # mesh mode feeds LOCAL row ids (each device indexes its own
+        # block under shard_map); loop mode feeds global slot ids
+        ids = np.empty((S, B), np.int32)
+        toks = np.zeros((S, B, 1, L), np.int32)
+        lengths = np.full((S, B), L, np.int32)
+        gids: List[int] = []                         # global, for dirty
+        for s, sub in enumerate(sb.shards):
+            pad = arena.pad_slot_of(s)
+            ids[s, :] = arena.local_row(pad) if use_mesh else pad
+            for i, r in enumerate(sub.requests):
+                slot = slot_of[r.sid]
+                ids[s, i] = arena.local_row(slot) if use_mesh else slot
+                toks[s, i, 0, :r.token_len] = r.tokens[0]
+                lengths[s, i] = r.token_len
+                gids.append(slot)
+            gids.extend([pad] * (B - len(sub.requests)))
+        masked = self.ragged and any(r.token_len != L for r in all_reqs)
+        lanes_run = S * B
+        if use_mesh:
+            step = self._sharded_step(sb.kind, masked)
+            self._note_shape(sb.kind, B, L, masked)
+            out, arena.slabs = step(
+                self.params, arena.slabs, jnp.asarray(ids, jnp.int32),
+                toks, lengths)
+            outs = [None if out is None else out[s] for s in range(S)]
+        else:
+            step = self._step(sb.kind, masked)
+            self._note_shape(sb.kind, B, L, masked)
+            outs = []
+            lanes_run = 0
+            for s, sub in enumerate(sb.shards):
+                if not sub.requests:
+                    outs.append(None)
+                    continue
+                out_s, arena.slabs = step(
+                    self.params, arena.slabs,
+                    jnp.asarray(ids[s], jnp.int32), toks[s], lengths[s])
+                outs.append(out_s)
+                lanes_run += B
+        arena.mark_dirty(gids)
+        dt = self.obs.clock.now() - t0
+        for s, sub in enumerate(sb.shards):
+            if sub.requests:
+                self._undelivered.append((sub.requests, outs[s]))
+        shape = f"{S}x{B}x{L}" + ("/masked" if masked else "")
+        for r in all_reqs:
+            sess = mgr.sessions[r.sid]
+            sess.n_ops += 1
+            if sb.kind == "ingest":
+                sess.mem_groups = min(sess.mem_groups + 1,
+                                      self._max_mem_groups)
+            mgr.record(r.sid, r.kind, r.tokens[0])
+            rec.executed(r, shape)
+        valid = sum(r.token_len for r in all_reqs)
+        rec.note("batch", f"kind={sb.kind} shape={shape} "
+                          f"real={len(all_reqs)} "
+                          f"pad={lanes_run - len(all_reqs)} "
+                          f"dispatch_s={dt:.6f}")
+        m = self._m
+        m["requests"].labels(kind=sb.kind).inc(len(all_reqs))
+        m["tokens"].labels(kind=sb.kind).inc(valid)
+        m["pad_lanes"].labels(kind=sb.kind).inc(lanes_run - len(all_reqs))
+        m["pad_tokens"].labels(kind=sb.kind).inc(
+            len(all_reqs) * L - valid)
+        m["lanes"].labels(kind=sb.kind).inc(lanes_run)
+        m["batches"].labels(kind=sb.kind).inc()
+        m["dispatch_s"].labels(kind=sb.kind).inc(dt)
+
     def run(self, max_batches: Optional[int] = None) -> int:
         """Drain the queue (or up to ``max_batches``); returns batches
         run.  After every popped batch the admission backlog is pumped —
@@ -561,7 +797,14 @@ class ServeEngine:
         while max_batches is None or n < max_batches:
             # recomputed per pop: pumped backlog entries can introduce
             # tenants that were not queued when the drain started
-            batch = self.scheduler.next_batch(*self.admission.lane_caps())
+            caps, default_cap = self.admission.lane_caps()
+            if self.n_shards == 1:
+                batch = self.scheduler.next_batch(caps, default_cap)
+            else:
+                batch = self.scheduler.next_sharded_batches(
+                    self.n_shards, caps, default_cap,
+                    per_shard_cap=self._per_shard_cap,
+                    max_total=self._max_total)
             if batch is None:
                 pumped = self.admission.pump()
                 if pumped:
@@ -572,7 +815,10 @@ class ServeEngine:
             self.admission.note_popped(batch.requests)
             for r in batch.requests:
                 rec.popped(r)
-            self._run_batch(batch)
+            if isinstance(batch, ShardedBatch):
+                self._run_sharded_batch(batch)
+            else:
+                self._run_batch(batch)
             if self.pressure is not None:
                 # drain hook: footprints grew by the batch's ingest
                 # groups / query cache writes AFTER their admission
@@ -705,6 +951,21 @@ class ServeEngine:
                 probe["errors"].labels(arena=kind).inc(len(errs))
                 self.obs.recorder.note(
                     "arena-integrity", f"{kind}: {errs}")
+            gs = self._g_shard
+            res_by_shard = [0] * self.n_shards
+            for sess in mgr.sessions.values():
+                if sess.resident:
+                    res_by_shard[sess.shard] += 1
+            for s, sh in enumerate(sample["shards"]):
+                gs["occupancy"].labels(arena=kind, shard=str(s)).set(
+                    sh["occupancy"])
+                gs["resident"].labels(arena=kind, shard=str(s)).set(
+                    res_by_shard[s])
+        q_by_shard = [0] * self.n_shards
+        for r in self.scheduler.queued():
+            q_by_shard[r.shard] += 1
+        for s, d in enumerate(q_by_shard):
+            self._g_shard["queue_depth"].labels(shard=str(s)).set(d)
         g["queue_depth"].set(self.scheduler.pending)
         g["backlog_depth"].set(len(self.admission.backlog))
         if self.pressure is not None:

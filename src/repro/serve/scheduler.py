@@ -49,6 +49,9 @@ class Request:
     tokens: np.ndarray             # (1, token_len) int32
     priority: int = 0              # lower drains first
     tenant: str = "default"        # admission-quota group (serve.admission)
+    shard: int = 0                 # owning arena shard (set at submit from
+    #                                the session's placement; the sharded
+    #                                pop groups lanes by this)
     seq: int = -1                  # submission order (set at enqueue)
     round: int = 0                 # scheduler round at enqueue (aging clock)
     result: Any = None             # logits for query/stream; None for ingest
@@ -78,6 +81,29 @@ class ScheduledBatch:
     def valid_lens(self) -> List[int]:
         """Per-request valid token lengths (<= ``token_len``)."""
         return [r.token_len for r in self.requests]
+
+
+@dataclasses.dataclass
+class ShardedBatch:
+    """One sharded pop: a same-kind, same-token-bucket, same-BATCH-bucket
+    sub-batch PER arena shard (index = shard id).  Every sub-batch shares
+    ``token_len`` and ``bucket`` so the stacked (n_shards, bucket, ...)
+    lanes form one rectangular `shard_map` program; a shard with no
+    eligible work contributes an empty sub-batch (all lanes padded with
+    its scratch row)."""
+    kind: str
+    token_len: int                 # padded (bucketed) token length
+    bucket: int                    # padded PER-SHARD batch size
+    shards: List[ScheduledBatch]   # index s = shard s's sub-batch
+
+    @property
+    def requests(self) -> List[Request]:
+        """All requests across shards, shard-major."""
+        return [r for sb in self.shards for r in sb.requests]
+
+    @property
+    def n_requests(self) -> int:
+        return sum(len(sb.requests) for sb in self.shards)
 
 
 class Scheduler:
@@ -285,3 +311,97 @@ class Scheduler:
         bucket = max(bucket, len(taken))
         return ScheduledBatch(kind=head.kind, token_len=tlen,
                               bucket=bucket, requests=taken)
+
+    def next_sharded_batches(self, n_shards: int,
+                             tenant_lane_caps: Optional[
+                                 Dict[str, Optional[int]]] = None,
+                             default_lane_cap: Optional[int] = None,
+                             per_shard_cap: Union[int, Dict[str, int],
+                                                  None] = None,
+                             max_total: Union[int, Dict[str, int],
+                                              None] = None
+                             ) -> Optional["ShardedBatch"]:
+        """Pop ONE batch per arena shard in a single scheduling decision
+        (a `ShardedBatch`): the global eligible head defines the op kind
+        and token bucket exactly as in `next_batch`, then each shard
+        fills its own sub-batch from the eligible requests routed to it
+        (``Request.shard``), all sharing one common batch bucket — the
+        max over shards, so the stacked lanes are rectangular for the
+        `shard_map` hot path.  Shards with no eligible work of the
+        head's kind/bucket get empty sub-batches (all-pad lanes compute
+        on their scratch row).
+
+        Counts as ONE pop for the aging clock and the popped-batches
+        counter: the sharded engine retires up to ``n_shards`` sub-
+        batches per drain iteration, and aging measures drain progress,
+        not device count.
+
+        ``per_shard_cap`` bounds each shard's lane count and
+        ``max_total`` the pop's TOTAL lane count — each an int or a
+        per-kind dict (the engine passes the per-shard slot capacity
+        and the arena's ``max_resident``, so a sharded pop never pins
+        more sessions than one `activate_batch` call can hold).
+        ``tenant_lane_caps`` apply across the WHOLE sharded pop, not
+        per shard: the engine activates every sub-batch's sessions in
+        one `activate_batch` call, so the pop as a whole must not pin
+        more of a tenant's sessions than its quota allows (conservative
+        — a tenant spread over shards still gets at most its quota in
+        lanes per pop)."""
+        def _resolve(v, kind):
+            if isinstance(v, dict):
+                return v.get(kind)
+            return v
+
+        elig = self._eligible()
+        if not elig:
+            return None
+        round0 = self._round
+        self._round += 1
+        self._m_popped.inc()
+        head = elig[0]
+        tlen = self._head_token_len(head)
+        cap = self.max_batch.get(head.kind, self.batch_buckets[-1])
+        psc = _resolve(per_shard_cap, head.kind)
+        if psc is not None:
+            cap = min(cap, psc)
+        total_cap = _resolve(max_total, head.kind)
+        if self.token_buckets is None:
+            fits = [r for r in elig
+                    if r.kind == head.kind and r.token_len == tlen]
+        else:
+            fits = [r for r in elig
+                    if r.kind == head.kind and r.token_len <= tlen]
+        taken: List[List[Request]] = [[] for _ in range(n_shards)]
+        lanes_of: Dict[str, int] = {}
+        total = 0
+        for r in fits:
+            if total_cap is not None and total >= total_cap:
+                break
+            if not 0 <= r.shard < n_shards:
+                raise ValueError(
+                    f"request for session {r.sid!r} routed to shard "
+                    f"{r.shard}, but the pop spans {n_shards} shards")
+            if len(taken[r.shard]) >= cap:
+                continue             # this shard is full; others may fit
+            if tenant_lane_caps is not None or default_lane_cap is not None:
+                tcap = (tenant_lane_caps or {}).get(r.tenant,
+                                                    default_lane_cap)
+                if tcap is not None and lanes_of.get(r.tenant, 0) >= tcap:
+                    continue
+            taken[r.shard].append(r)
+            lanes_of[r.tenant] = lanes_of.get(r.tenant, 0) + 1
+            total += 1
+        if self.aging:
+            self._m_aged.inc(sum(
+                1 for g in taken for r in g
+                if (round0 - r.round) // self.aging > 0))
+        taken_set = set(id(r) for g in taken for r in g)
+        self._queue = [r for r in self._queue if id(r) not in taken_set]
+        n_max = max(len(g) for g in taken)
+        bucket = min(batch_bucket(n_max, self.batch_buckets), cap)
+        bucket = max(bucket, n_max)
+        return ShardedBatch(
+            kind=head.kind, token_len=tlen, bucket=bucket,
+            shards=[ScheduledBatch(kind=head.kind, token_len=tlen,
+                                   bucket=bucket, requests=g)
+                    for g in taken])

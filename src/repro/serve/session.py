@@ -16,6 +16,18 @@ blocking sync on the device->host copy, overlapping the transfer with
 the engine's next scheduler pop (`sync()` is the barrier; restores of
 in-flight sessions order correctly through the data dependency).
 
+On a SHARDED arena (one row block per device — see `serve.arena`) the
+manager stays global: one LRU clock, one session table, one
+``max_resident`` budget.  Shard-awareness enters at three points: a
+session is pinned to one shard for life (``Session.shard``, assigned at
+creation and never migrated — the no-cross-device-transfer invariant),
+slot scarcity is resolved PER SHARD during activation planning (a full
+shard evicts its own LRU victim even while another shard has free
+slots), and batched offload/restore stage host transfers per shard
+(each shard's rows pack and move as their own gather + `device_put`, so
+every transfer touches exactly one device; transfer counters and the
+bandwidth gauges carry a ``shard`` label).
+
 Offload -> restore is a pure device transfer of the state pytree, so a
 restored session's next logits are bit-identical to never having been
 offloaded — total sessions can exceed device HBM with no semantic
@@ -47,6 +59,7 @@ from repro.serve.arena import ArenaFull, SessionArena
 class Session:
     sid: str
     tenant: str = "default"        # admission-quota group
+    shard: int = 0                 # owning arena shard (fixed for life)
     slot: Optional[int] = None     # arena slot while resident
     host_state: Any = None         # CPU pytree while offloaded (None = zero)
     fresh: bool = True             # never activated yet
@@ -188,15 +201,15 @@ class SessionManager:
         self._m_bytes = reg.counter(
             "offload_bytes_total",
             "state bytes transferred device<->host, pack padding "
-            "included (actual wire bytes)", labels=("dir",))
+            "included (actual wire bytes)", labels=("dir", "shard"))
         self._m_seconds = reg.counter(
             "offload_transfer_seconds_total",
             "host seconds around the transfer: true (blocked) time on "
             "synchronous offloads, dispatch time on async offloads and "
-            "restores", labels=("dir",))
+            "restores", labels=("dir", "shard"))
         self._m_sessions = reg.counter(
             "offload_sessions_total",
-            "sessions moved device<->host", labels=("dir",))
+            "sessions moved device<->host", labels=("dir", "shard"))
         self._m_decisions = reg.counter(
             "offload_decisions_total",
             "cost-model offload decisions (transfer vs recompute); "
@@ -221,35 +234,65 @@ class SessionManager:
             "device->host bandwidth measured on the last synchronous "
             "offload transfer (calibrates OffloadCostModel "
             "host_bandwidth; 0 until the first blocking transfer)")
+        self._g_shard_bw = reg.gauge(
+            "offload_shard_bandwidth_bytes_per_s",
+            "device->host bandwidth of the last measured transfer PER "
+            "ARENA SHARD (each shard stages its own host copies; the "
+            "unlabeled calibration gauge above stays global)",
+            labels=("shard",))
         for d in ("offload", "restore"):
-            self._m_bytes.labels(dir=d)
-            self._m_seconds.labels(dir=d)
-            self._m_sessions.labels(dir=d)
+            for s in range(arena.n_shards):
+                self._m_bytes.labels(dir=d, shard=str(s))
+                self._m_seconds.labels(dir=d, shard=str(s))
+                self._m_sessions.labels(dir=d, shard=str(s))
+        for s in range(arena.n_shards):
+            self._g_shard_bw.labels(shard=str(s))
 
     def _count_transfer(self, direction: str, n_rows: int, n_sessions: int,
-                        seconds: float, measured: bool) -> None:
+                        seconds: float, measured: bool,
+                        shard: int = 0) -> None:
         """Book one device<->host transfer; ``measured`` marks a blocked
         (true wall time) transfer, which also updates the bandwidth
-        gauge the cost model can be calibrated against."""
+        gauges the cost model can be calibrated against.  ``shard`` is
+        the arena shard whose rows moved (batched transfers stage per
+        shard, so one call is always one shard)."""
         n_bytes = n_rows * self._state_bytes
-        self._m_bytes.labels(dir=direction).inc(n_bytes)
-        self._m_seconds.labels(dir=direction).inc(seconds)
-        self._m_sessions.labels(dir=direction).inc(n_sessions)
+        lab = dict(dir=direction, shard=str(shard))
+        self._m_bytes.labels(**lab).inc(n_bytes)
+        self._m_seconds.labels(**lab).inc(seconds)
+        self._m_sessions.labels(**lab).inc(n_sessions)
         if measured and seconds > 0:
             self._g_bw.set(n_bytes / seconds)
+            self._g_shard_bw.labels(shard=str(shard)).set(n_bytes / seconds)
         self.obs.recorder.note(
             direction, f"sessions={n_sessions} rows={n_rows} "
-                       f"bytes={n_bytes} seconds={seconds:.6f}"
+                       f"shard={shard} bytes={n_bytes} "
+                       f"seconds={seconds:.6f}"
                        + (" (dispatch)" if not measured else ""))
 
     # -- lifecycle -----------------------------------------------------
-    def create(self, sid: str, tenant: str = "default") -> Session:
+    def create(self, sid: str, tenant: str = "default",
+               shard: int = 0) -> Session:
+        """``shard``: the arena shard this session is pinned to for its
+        whole life (the engine places sessions least-loaded-first at
+        creation; state never migrates between shards)."""
         if sid in self.sessions:
             raise ValueError(f"session {sid!r} already exists")
-        sess = Session(sid=sid, tenant=tenant,
+        if not 0 <= shard < self.arena.n_shards:
+            raise ValueError(f"shard {shard} out of range "
+                             f"[0, {self.arena.n_shards})")
+        sess = Session(sid=sid, tenant=tenant, shard=shard,
                        history=[] if self.cost_model is not None else None)
         self.sessions[sid] = sess
         return sess
+
+    def shard_load(self) -> List[int]:
+        """Open sessions per shard (resident or not) — the engine's
+        least-loaded placement signal."""
+        load = [0] * self.arena.n_shards
+        for s in self.sessions.values():
+            load[s.shard] += 1
+        return load
 
     def close(self, sid: str) -> CloseResult:
         """Tear a session down; unknown sids are a structured no-op
@@ -307,26 +350,30 @@ class SessionManager:
 
         Three phases, each one device dispatch for the whole batch:
         (1) plan — walk the batch in order, picking every eviction
-        victim up front (tenant-quota LRU first, then global LRU /
-        slot-scarcity LRU); (2) evict — ONE batched offload of all
-        victims; (3) admit — allocate slots, zero fresh sessions with
-        one batched scatter, restore offloaded sessions with one
-        stacked `device_put` + scatter, and replay recompute-dropped
+        victim up front (tenant-quota LRU first, then global LRU for
+        the ``max_resident`` budget, then the owning SHARD's LRU when
+        that shard is out of free slots — a full shard evicts its own
+        victim even while other shards have room, since sessions never
+        migrate); (2) evict — ONE batched offload of all victims
+        (staged per shard inside `offload_batch`); (3) admit — allocate
+        slots on each session's own shard, zero fresh sessions with one
+        batched scatter, restore offloaded sessions with one stacked
+        `device_put` + scatter per shard, and replay recompute-dropped
         sessions from their history."""
         untouchable = set(pinned) | set(sids)
         res = {s.sid: s for s in self.sessions.values() if s.resident}
         victims: List[Session] = []
-        avail = self.arena.n_free
+        avail = [self.arena.shard_free(s)
+                 for s in range(self.arena.n_shards)]
 
-        def evict_one(pool):
+        def evict_one(pool, why="batch size exceeds arena capacity"):
             cands = [s for s in pool if s.sid not in untouchable]
             if not cands:
-                raise ArenaFull(
-                    "no evictable session: batch size exceeds arena "
-                    "capacity")
+                raise ArenaFull(f"no evictable session: {why}")
             v = min(cands, key=lambda s: s.last_used)
             victims.append(v)
             del res[v.sid]
+            avail[v.shard] += 1
             return v
 
         need: List[str] = []
@@ -342,13 +389,16 @@ class SessionManager:
                           if s.tenant == sess.tenant) >= quota:
                     evict_one([s for s in res.values()
                                if s.tenant == sess.tenant])
-                    avail += 1
-            while len(res) >= self.max_resident or avail == 0:
+            while len(res) >= self.max_resident:
                 evict_one(res.values())
-                avail += 1
+            while avail[sess.shard] == 0:
+                evict_one([s for s in res.values()
+                           if s.shard == sess.shard],
+                          why=f"shard {sess.shard} has no free slot and "
+                              "no evictable resident")
             res[sid] = sess          # planned resident
             need.append(sid)
-            avail -= 1
+            avail[sess.shard] -= 1
 
         if victims:
             self.offload_batch([v.sid for v in victims])
@@ -356,7 +406,7 @@ class SessionManager:
         fresh_slots, replay, restore = [], [], []
         for sid in need:
             sess = self.sessions[sid]
-            sess.slot = self.arena.alloc()
+            sess.slot = self.arena.alloc(sess.shard)
             if sess.host_state is not None:
                 restore.append(sess)
             elif sess.needs_replay:
@@ -464,11 +514,12 @@ class SessionManager:
         t0 = self.obs.clock.now()
         host = jax.device_put(state, self._host)
         if self.async_offload:
-            self._inflight.append((host, 1))
+            self._inflight.append((host, 1, sess.shard))
         else:
             host = jax.block_until_ready(host)
         self._count_transfer("offload", 1, 1, self.obs.clock.now() - t0,
-                             measured=not self.async_offload)
+                             measured=not self.async_offload,
+                             shard=sess.shard)
         sess.host_state = host
         self.arena.free(sess.slot)
         sess.slot = None
@@ -477,9 +528,12 @@ class SessionManager:
 
     def offload_batch(self, sids: Sequence[str]) -> List[OffloadResult]:
         """Move k resident sessions to host with ONE arena gather and
-        ONE `device_put` (vs k of each on the per-victim path).  The
-        gathered batch is padded up to a `batch_bucket` with scratch
-        rows so only bucketed pack shapes compile."""
+        ONE `device_put` per SHARD (vs k of each on the per-victim
+        path).  Victims are grouped by owning shard so every gather
+        reads one device's row block and every `device_put` moves one
+        device's bytes; each shard's batch is padded up to a
+        `batch_bucket` with that shard's scratch row so only bucketed
+        pack shapes compile."""
         if not self.batched_offload:
             return [self.offload(sid) for sid in sids]
         results: Dict[str, OffloadResult] = {}
@@ -498,21 +552,26 @@ class SessionManager:
                 results[sid] = OffloadResult(sid, "recompute")
             else:
                 todo.append(sess)
-        if todo:
-            slots = [s.slot for s in todo]
+        by_shard: Dict[int, List[Session]] = {}
+        for sess in todo:
+            by_shard.setdefault(sess.shard, []).append(sess)
+        for shard in sorted(by_shard):
+            group = by_shard[shard]
+            slots = [s.slot for s in group]
             n = self._bucket(len(slots))
-            ids = slots + [self.arena.pad_slot] * (n - len(slots))
+            ids = slots + [self.arena.pad_slot_of(shard)] * (n - len(slots))
             packed = self.arena.pack(ids)
             t0 = self.obs.clock.now()
             host = jax.device_put(packed, self._host)
             if self.async_offload:
-                self._inflight.append((host, n))
+                self._inflight.append((host, n, shard))
             else:
                 host = jax.block_until_ready(host)
-            self._count_transfer("offload", n, len(todo),
+            self._count_transfer("offload", n, len(group),
                                  self.obs.clock.now() - t0,
-                                 measured=not self.async_offload)
-            for i, sess in enumerate(todo):
+                                 measured=not self.async_offload,
+                                 shard=shard)
+            for i, sess in enumerate(group):
                 sess.host_state = jax.tree.map(lambda x, i=i: x[i], host)
                 self.arena.free(sess.slot)
                 sess.slot = None
@@ -535,29 +594,43 @@ class SessionManager:
 
     def _restore_batch(self, sess_list: List[Session]) -> None:
         """Stack k host states, move them up with ONE `device_put`, and
-        scatter them into their slots with one arena unpack (padded to a
-        bucket; pad lanes land on the scratch row)."""
-        slots = [s.slot for s in sess_list]
-        n = self._bucket(len(slots))
-        ids = slots + [self.arena.pad_slot] * (n - len(slots))
-        hosts = [s.host_state for s in sess_list]
-        pad = n - len(hosts)
-
-        def stack(*leaves):
-            rows = [np.asarray(x) for x in leaves]
-            rows += [rows[0]] * pad       # scratch lanes: content ignored
-            return np.stack(rows)
-
-        stacked = jax.tree.map(stack, *hosts)
-        t0 = self.obs.clock.now()
-        dev = jax.device_put(stacked, self._device)
-        self.arena.unpack(ids, dev)
-        # dispatch time only: blocking here to measure the true copy
-        # would serialize restore against the batch that triggered it
-        self._count_transfer("restore", n, len(sess_list),
-                             self.obs.clock.now() - t0, measured=False)
+        scatter them into their slots with one arena unpack — per SHARD
+        (each group padded to a bucket; pad lanes land on the owning
+        shard's scratch row), so every upload targets one device."""
+        by_shard: Dict[int, List[Session]] = {}
         for sess in sess_list:
-            sess.host_state = None
+            by_shard.setdefault(sess.shard, []).append(sess)
+        for shard in sorted(by_shard):
+            group = by_shard[shard]
+            slots = [s.slot for s in group]
+            n = self._bucket(len(slots))
+            ids = slots + [self.arena.pad_slot_of(shard)] * (n - len(slots))
+            hosts = [s.host_state for s in group]
+            pad = n - len(hosts)
+
+            def stack(*leaves):
+                rows = [np.asarray(x) for x in leaves]
+                rows += [rows[0]] * pad   # scratch lanes: content ignored
+                return np.stack(rows)
+
+            stacked = jax.tree.map(stack, *hosts)
+            t0 = self.obs.clock.now()
+            if self.arena.placed:
+                # mesh-sharded slabs: hand the scatter uncommitted host
+                # rows — jit moves them to the owning devices itself; a
+                # device_put committed to one device would conflict with
+                # the multi-device slab operand
+                dev = stacked
+            else:
+                dev = jax.device_put(stacked, self._device)
+            self.arena.unpack(ids, dev)
+            # dispatch time only: blocking here to measure the true copy
+            # would serialize restore against the batch that triggered it
+            self._count_transfer("restore", n, len(group),
+                                 self.obs.clock.now() - t0, measured=False,
+                                 shard=shard)
+            for sess in group:
+                sess.host_state = None
 
     def sync(self) -> None:
         """Barrier for ``async_offload`` transfers still in flight.
@@ -577,11 +650,18 @@ class SessionManager:
             return
         t0 = self.obs.clock.now()
         rows = 0
-        for t, n in self._inflight:
+        shard_rows: Dict[int, int] = {}
+        for t, n, shard in self._inflight:
             jax.block_until_ready(t)
             rows += n
+            shard_rows[shard] = shard_rows.get(shard, 0) + n
         self._inflight.clear()
         dt = self.obs.clock.now() - t0
         self._m_sync_s.inc(dt)
         if dt > 0 and rows:
             self._g_bw.set(rows * self._state_bytes / dt)
+            # attribute the blocked interval to each shard by its share
+            # of the in-flight rows (one barrier covers all shards)
+            for shard, r in shard_rows.items():
+                self._g_shard_bw.labels(shard=str(shard)).set(
+                    r * self._state_bytes / dt)

@@ -61,6 +61,10 @@ class Snapshot:
     pressure_used: Optional[int] = None   # controller's used_tokens()
     pressure_capacity: Optional[int] = None
     pressure_decisions: int = 0           # ladder log length so far
+    n_shards: int = 1
+    shard_resident: List[int] = dataclasses.field(default_factory=list)
+    shard_open: List[int] = dataclasses.field(default_factory=list)
+    shard_free: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -90,6 +94,7 @@ class ServeSimulation:
                  offload_cost_model=None,
                  pressure_policy=None,
                  params=None,
+                 n_shards: int = 1,
                  obs: Optional[Observability] = None):
         # tracing on a ManualClock by default: event application advances
         # the clock by exactly 1.0s, so every span timestamp — and
@@ -109,6 +114,7 @@ class ServeSimulation:
             offload_cost_model=offload_cost_model,
             pressure_policy=pressure_policy,
             step_factory=None if params is not None else make_null_step,
+            n_shards=n_shards,
             obs=self.obs)
         self.cache_len = cache_len
         self.verdicts: List[Tuple[Tuple, Any]] = []
@@ -122,18 +128,22 @@ class ServeSimulation:
         self._delivered: Dict[int, int] = {}
         self._skipped = 0
         self._closed_for_good: set = set()
-        # count batch deliveries at the source: wrap the scheduler pop
+        # count batch deliveries at the source: wrap BOTH scheduler pops
+        # (the engine uses next_batch at n_shards=1, next_sharded_batches
+        # otherwise — `requests` is uniform across the two return types)
         sched = self.engine.scheduler
-        orig_pop = sched.next_batch
 
-        def counting_pop(tenant_lane_caps=None, default_lane_cap=None):
-            batch = orig_pop(tenant_lane_caps, default_lane_cap)
-            if batch is not None:
-                for r in batch.requests:
-                    self._delivered[id(r)] = self._delivered.get(id(r),
-                                                                 0) + 1
-            return batch
-        sched.next_batch = counting_pop
+        def _counting(orig):
+            def pop(*a, **kw):
+                batch = orig(*a, **kw)
+                if batch is not None:
+                    for r in batch.requests:
+                        self._delivered[id(r)] = \
+                            self._delivered.get(id(r), 0) + 1
+                return batch
+            return pop
+        sched.next_batch = _counting(sched.next_batch)
+        sched.next_sharded_batches = _counting(sched.next_sharded_batches)
 
     # -- event application --------------------------------------------
     def _ensure_session(self, sid: str, tenant: str) -> bool:
@@ -233,7 +243,20 @@ class ServeSimulation:
             pressure_capacity=(eng.pressure.capacity
                                if eng.pressure is not None else None),
             pressure_decisions=(len(eng.pressure.decisions)
-                                if eng.pressure is not None else 0))
+                                if eng.pressure is not None else 0),
+            n_shards=eng.n_shards,
+            shard_resident=self._shard_resident(mgr),
+            shard_open=mgr.shard_load(),
+            shard_free=[mgr.arena.shard_free(s)
+                        for s in range(eng.n_shards)])
+
+    @staticmethod
+    def _shard_resident(mgr) -> List[int]:
+        out = [0] * mgr.arena.n_shards
+        for s in mgr.sessions.values():
+            if s.resident:
+                out[s.shard] += 1
+        return out
 
     def accounting(self) -> Accounting:
         return Accounting(

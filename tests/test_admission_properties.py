@@ -89,7 +89,8 @@ def build_sim(cfg, conf) -> ServeSimulation:
         quotas=quotas, default_quota=default_quota,
         aging=conf["aging"], batched_offload=conf["batched"],
         async_offload=conf["async"],
-        offload_cost_model=COST_MODELS[conf.get("cost_model", "none")])
+        offload_cost_model=COST_MODELS[conf.get("cost_model", "none")],
+        n_shards=conf.get("n_shards", 1))
 
 
 def check_snapshot(snap, conf) -> None:
@@ -118,6 +119,18 @@ def check_snapshot(snap, conf) -> None:
     # 3b. block-policy backlog bound (entries)
     if conf.get("max_backlog") is not None:
         assert snap.backlog <= conf["max_backlog"]
+    # 8. sharded-arena invariants: the per-shard ledgers tile the
+    # global ones exactly (sessions never migrate, so residency and
+    # free slots decompose shard-by-shard at every step)
+    n_shards = conf.get("n_shards", 1)
+    assert snap.n_shards == n_shards
+    assert len(snap.shard_resident) == n_shards
+    assert sum(snap.shard_resident) == snap.n_resident
+    spp = conf["n_slots"] // n_shards
+    for s in range(n_shards):
+        assert 0 <= snap.shard_resident[s] <= spp, (s, snap.shard_resident)
+        assert snap.shard_free[s] == spp - snap.shard_resident[s], \
+            (s, snap.shard_free, snap.shard_resident)
 
 
 def _resident_cap(tenant, conf):
@@ -228,6 +241,8 @@ def _random_conf(rng) -> dict:
         "aging": (0, 3)[rng.randint(2)],
         "cost_model": tuple(COST_MODELS)[rng.randint(len(COST_MODELS))],
         "max_backlog": (None, 2)[rng.randint(2)],
+        # n_slots is 2 or 4, so 2 shards always divide evenly
+        "n_shards": (1, 2)[rng.randint(2)],
     }
 
 
@@ -255,6 +270,46 @@ def test_seeded_traces_uphold_invariants(tiny_cfg):
     rng = np.random.RandomState(20260729)
     for _ in range(40):
         run_trace(tiny_cfg, _random_events(rng, 35), _random_conf(rng))
+
+
+def test_sharded_placement_balances_and_no_shard_starves(tiny_cfg):
+    """Seeded 2-shard sweep: least-loaded auto-placement keeps the open
+    sessions per shard within one of each other at every step (no
+    closes), and no shard starves while another sheds — every shard
+    that carried surviving traffic delivered all of it exactly once."""
+    rng = np.random.RandomState(20260808)
+    conf = {"policy": "shed-lowest-priority", "max_queued_tokens": 12,
+            "quota_resident": None, "quota_tokens": None,
+            "default_resident": None, "n_slots": 4, "max_resident": None,
+            "batched": True, "async": False, "aging": 3, "n_shards": 2}
+    for _ in range(8):
+        sim = build_sim(tiny_cfg, conf)
+        for ev in _random_events(rng, 30):
+            if ev[0] == "close":
+                continue              # closes would skew the balance probe
+            snap = sim.apply(_expand(ev))
+            check_snapshot(snap, conf)
+            assert max(snap.shard_open) - min(snap.shard_open) <= 1, \
+                snap.shard_open
+        check_snapshot(sim.finish(), conf)
+        acc = sim.accounting()
+        per_shard_delivered = [0, 0]
+        per_shard_shed = [0, 0]
+        for r in acc.submitted:
+            assert r.done
+            if r.shed:
+                per_shard_shed[r.shard] += 1
+            elif not r.cancelled:
+                assert acc.delivered.get(id(r), 0) == 1
+                per_shard_delivered[r.shard] += 1
+        # liveness across shards: wherever sheds landed, the OTHER
+        # shard's surviving work still drained (delivered above), and a
+        # shard only came up empty if it truly had nothing survive
+        for s in (0, 1):
+            survivors = sum(1 for r in acc.submitted
+                            if r.shard == s and not r.shed
+                            and not r.cancelled)
+            assert per_shard_delivered[s] == survivors
 
 
 def test_backpressure_blocks_then_drains(tiny_cfg):
@@ -346,6 +401,7 @@ if HAVE_HYPOTHESIS:
         "aging": st.sampled_from((0, 3)),
         "cost_model": st.sampled_from(tuple(COST_MODELS)),
         "max_backlog": st.sampled_from((None, 2)),
+        "n_shards": st.sampled_from((1, 2)),
     })
 
     @given(events=EVENTS, conf=CONFIGS)

@@ -182,6 +182,35 @@ def test_snapshot_and_prometheus_roundtrip():
     assert render_prometheus(snap) == text
 
 
+def test_shard_labeled_histogram_merge_keeps_percentiles_exact():
+    """The sharded serve engine keeps one histogram child per shard
+    label; merging the per-shard children (`aggregate()`) must give the
+    EXACT percentiles of a single unsharded histogram fed the same
+    stream — counts are integers, so the merge is bitwise, not
+    approximate."""
+    reg = MetricsRegistry()
+    fam = reg.histogram("lat_seconds", "latency", buckets=BOUNDS,
+                        labels=("shard",))
+    one = Histogram(BOUNDS)
+    stream = [0.5, 1.0, 1.5, 2.0, 3.0, 5.0, 7.5, 10.0, 42.0, 0.1,
+              2.5, 9.9, 1.0, 5.0]
+    for i, v in enumerate(stream):
+        fam.labels(shard=str(i % 4)).observe(v)    # round-robin placement
+        one.observe(v)
+    merged = fam.aggregate()
+    assert merged.counts == one.counts
+    assert merged.count == one.count
+    assert merged.sum == one.sum
+    for q in (0.0, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0):
+        assert merged.quantile(q) == one.quantile(q)
+    # the per-shard children render with their label and survive a
+    # snapshot round-trip
+    snap = reg.snapshot()
+    assert len(snap["lat_seconds"]["values"]) == 4
+    text = render_prometheus(snap)
+    assert 'lat_seconds_bucket{shard="0",le="+Inf"}' in text
+
+
 # -- clocks ------------------------------------------------------------
 
 def test_manual_clock():

@@ -1,0 +1,404 @@
+"""Session-sharded serving: sharded arena layout, per-shard scheduler
+pops, placement + wrong-shard routing, compacted stream-lane eviction,
+and single-shard vs multi-shard bit-exactness.
+
+The mesh (`shard_map`) hot path needs more than one device, so those
+cases run in a SUBPROCESS with --xla_force_host_platform_device_count=4
+(the test_distributed.py pattern); everything else exercises the loop
+path in-process on the single main-process device — same control plane,
+same batch formation, per-shard calls into the single-device fused step.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import streaming as ST
+from repro.launch import serve as SRV
+from repro.models import transformer as T
+from repro.serve.arena import ArenaFull, SessionArena
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Scheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def params(tiny_cfg):
+    return T.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _toks(key, n, vocab=128):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(key), (n,),
+                                         0, vocab))
+
+
+# ---------------------------------------------------------------------------
+# arena: sharded layout
+# ---------------------------------------------------------------------------
+
+def test_sharded_arena_layout(tiny_cfg):
+    arena = SessionArena.for_online(tiny_cfg, n_slots=6, cache_len=16,
+                                    n_shards=2)
+    assert arena.slots_per_shard == 3
+    assert list(arena.shard_slots(0)) == [0, 1, 2]
+    assert arena.pad_slot_of(0) == 3
+    assert list(arena.shard_slots(1)) == [4, 5, 6]
+    assert arena.pad_slot_of(1) == 7
+    # global rows: 2 * (3 slots + 1 scratch)
+    assert jax.tree.leaves(arena.slabs)[0].shape[0] == 8
+    for s in (0, 1):
+        for slot in arena.shard_slots(s):
+            assert arena.shard_of(slot) == s
+        assert arena.local_row(arena.pad_slot_of(s)) == 3
+    # per-shard free lists: shard 1 exhausts independently of shard 0
+    got = [arena.alloc(1) for _ in range(3)]
+    assert got == [4, 5, 6]
+    with pytest.raises(ArenaFull, match="shard 1"):
+        arena.alloc(1)
+    assert arena.shard_free(0) == 3 and arena.shard_free(1) == 0
+    assert arena.alloc(0) == 0
+    arena.free(5)                       # shard inferred from the slot
+    assert arena.shard_free(1) == 1 and arena.alloc(1) == 5
+    assert not arena.consistency_errors()
+    sample = arena.metrics_sample()
+    assert len(sample["shards"]) == 2
+    assert sample["shards"][1]["live"] == 3
+
+
+def test_sharded_arena_rejects_indivisible(tiny_cfg):
+    with pytest.raises(ValueError):
+        SessionArena.for_online(tiny_cfg, n_slots=5, cache_len=16,
+                                n_shards=2)
+
+
+def test_single_shard_arena_matches_seed_layout(tiny_cfg):
+    """n_shards=1 must be the exact seed layout: slots [0, n), one
+    scratch row at n — nothing downstream can tell the difference."""
+    arena = SessionArena.for_online(tiny_cfg, n_slots=3, cache_len=16)
+    assert arena.n_shards == 1 and arena.slots_per_shard == 3
+    assert arena.pad_slot == 3 and arena.pad_slot_of(0) == 3
+    assert jax.tree.leaves(arena.slabs)[0].shape[0] == 4
+    assert [arena.alloc() for _ in range(3)] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# scheduler: sharded pops
+# ---------------------------------------------------------------------------
+
+def _submit(sch, sid, kind, n, shard, **kw):
+    req = sch.make_request(sid, kind, np.zeros(n, np.int32), **kw)
+    req.shard = shard
+    return sch.enqueue(req)
+
+
+def test_sharded_pop_common_bucket_and_empty_shards():
+    sch = Scheduler(batch_buckets=(1, 2, 4), token_buckets=(8,))
+    _submit(sch, "a", "ingest", 8, 0)
+    _submit(sch, "b", "ingest", 8, 0)
+    _submit(sch, "c", "ingest", 8, 0)
+    _submit(sch, "d", "ingest", 8, 2)
+    sb = sch.next_sharded_batches(4)
+    assert sb.kind == "ingest" and sb.token_len == 8
+    # widest shard has 3 lanes -> every sub-batch padded to bucket 4
+    assert sb.bucket == 4 and len(sb.shards) == 4
+    assert [len(s.requests) for s in sb.shards] == [3, 0, 1, 0]
+    assert all(s.bucket == 4 for s in sb.shards)
+    assert [r.sid for r in sb.requests] == ["a", "b", "c", "d"]
+    assert sb.n_requests == 4 and sch.next_sharded_batches(4) is None
+
+
+def test_sharded_pop_per_shard_and_total_caps():
+    sch = Scheduler(batch_buckets=(1, 2, 4, 8), token_buckets=(4,))
+    for i in range(4):
+        _submit(sch, f"a{i}", "ingest", 4, 0)
+        _submit(sch, f"b{i}", "ingest", 4, 1)
+    sb = sch.next_sharded_batches(2, per_shard_cap=2, max_total=3)
+    assert [len(s.requests) for s in sb.shards] == [2, 1]
+    # one pop = one aging round, regardless of shard count
+    assert sch._round == 1
+    sb2 = sch.next_sharded_batches(2, per_shard_cap={"ingest": 2},
+                                   max_total={"ingest": 8})
+    assert [len(s.requests) for s in sb2.shards] == [2, 2]
+
+
+def test_sharded_pop_tenant_caps_apply_globally():
+    """A tenant's lane cap bounds its lanes across the WHOLE pop (all
+    shards sum), matching the one-activate_batch-call residency rule."""
+    sch = Scheduler(batch_buckets=(1, 2, 4), token_buckets=(4,))
+    for i, shard in enumerate((0, 0, 1, 1)):
+        _submit(sch, f"t{i}", "ingest", 4, shard, tenant="t0")
+    _submit(sch, "u", "ingest", 4, 1, tenant="t1")
+    sb = sch.next_sharded_batches(2, tenant_lane_caps={"t0": 2})
+    t0_lanes = [r.sid for r in sb.requests if r.tenant == "t0"]
+    assert len(t0_lanes) == 2
+    assert "u" in [r.sid for r in sb.requests]
+
+
+def test_sharded_pop_rejects_out_of_range_shard():
+    sch = Scheduler(batch_buckets=(1, 2), token_buckets=(4,))
+    _submit(sch, "a", "ingest", 4, 3)
+    with pytest.raises(ValueError, match="shard 3"):
+        sch.next_sharded_batches(2)
+
+
+# ---------------------------------------------------------------------------
+# engine: placement, verdict routing, wrong-shard no-ops (loop path)
+# ---------------------------------------------------------------------------
+
+def _null_engine(cfg, n_shards, n_slots=4, **kw):
+    return ServeEngine(None, cfg, n_slots=n_slots, cache_len=32,
+                       n_shards=n_shards, step_factory=SRV.make_null_step,
+                       batch_buckets=(1, 2, 4), token_buckets=(4, 8), **kw)
+
+
+def test_placement_least_loaded_and_explicit(tiny_cfg):
+    eng = _null_engine(tiny_cfg, 2)
+    assert [eng.create_session(f"s{i}") for i in range(4)] == [0, 1, 0, 1]
+    assert eng.shard_of("s2") == 0
+    eng.close_session("s0")
+    # the freed slot makes shard 0 least-loaded again
+    assert eng.create_session("s4") == 0
+    assert eng.create_session("s5", shard=1) == 1      # explicit pin
+    with pytest.raises(ValueError):
+        eng.create_session("s6", shard=2)
+
+
+def test_verdict_carries_owning_shard(tiny_cfg):
+    eng = _null_engine(tiny_cfg, 2)
+    eng.create_session("a")
+    eng.create_session("b")
+    va = eng.ingest("a", _toks(0, 4))
+    vb = eng.ingest("b", _toks(1, 4))
+    assert va.shard == eng.shard_of("a") == 0
+    assert vb.shard == eng.shard_of("b") == 1
+    assert va.request.shard == 0 and vb.request.shard == 1
+
+
+def test_wrong_shard_close_and_offload_are_structured_noops(tiny_cfg):
+    """Routing a sid to the wrong shard must come back as a structured
+    verdict — never a KeyError, never touching the session."""
+    eng = _null_engine(tiny_cfg, 2)
+    eng.create_session("a")                            # shard 0
+    eng.ingest("a", _toks(0, 4))
+    eng.run()
+    wrong = (eng.shard_of("a") + 1) % 2
+    res = eng.offload_session("a", shard=wrong)
+    assert res.status == "wrong-shard" and res.sid == "a"
+    assert eng._mgr["online"].sessions["a"].resident    # untouched
+    res = eng.close_session("a", shard=wrong)
+    assert res.status == "wrong-shard"
+    assert "a" in eng._kind                             # still open
+    # correct hint proceeds normally
+    assert eng.offload_session("a", shard=eng.shard_of("a")).status \
+        == "offloaded"
+    assert eng.close_session("a", shard=0).status == "closed"
+    assert "a" not in eng._kind
+
+
+def test_mesh_requires_matching_shards_and_stock_steps(tiny_cfg):
+    class FakeMesh:
+        axis_names = ("data",)
+        shape = {"data": 2}
+    with pytest.raises(ValueError, match="shards"):
+        ServeEngine(None, tiny_cfg, n_slots=4, mesh=FakeMesh(),
+                    step_factory=SRV.make_null_step)
+
+
+def test_sharded_gauges_render_in_prometheus(tiny_cfg):
+    eng = _null_engine(tiny_cfg, 2)
+    for i in range(3):
+        eng.create_session(f"s{i}")
+        eng.ingest(f"s{i}", _toks(i, 4))
+    eng.run()
+    text = eng.metrics_prometheus()
+    assert 'serve_shard_occupancy{arena="online",shard="0"}' in text
+    assert 'serve_shard_resident_sessions{arena="online",shard="1"}' in text
+    assert 'serve_shard_queue_depth{shard="0"}' in text
+    assert "serve_cross_shard_moves_total 0" in text
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: multi-shard vs single-shard (loop path, real params)
+# ---------------------------------------------------------------------------
+
+def _drive(params, cfg, n_shards, mesh=None):
+    eng = ServeEngine(params, cfg, n_slots=4, cache_len=32,
+                      n_shards=n_shards, mesh=mesh,
+                      batch_buckets=(1, 2, 4), token_buckets=(4, 8))
+    for i in range(4):
+        eng.create_session(f"s{i}")
+    reqs, k = [], 0
+    for _ in range(2):
+        for i in range(4):
+            reqs.append(eng.ingest(f"s{i}", _toks(k, 8)).request)
+            k += 1
+        for i in range(4):
+            reqs.append(eng.query(f"s{i}", _toks(k, 3 + i % 2)).request)
+            k += 1
+        eng.run()
+    return eng, reqs
+
+
+def test_multi_shard_loop_path_bit_exact_vs_single(params, tiny_cfg):
+    """Identical mixed ragged traffic through a 1-shard and a 2-shard
+    engine (loop path): every delivered logit row must match BIT-exactly
+    — sharding only regroups lanes, it never changes a lane's math."""
+    e1, r1 = _drive(params, tiny_cfg, 1)
+    e2, r2 = _drive(params, tiny_cfg, 2)
+    assert all(r.done for r in r1 + r2)
+    for a, b in zip(r1, r2):
+        if a.result is None:
+            assert b.result is None
+            continue
+        np.testing.assert_array_equal(np.asarray(a.result),
+                                      np.asarray(b.result))
+    # steady state never moved a session across shards
+    assert e2._m_cross_shard.value == 0
+    errs = e2._mgr["online"].arena.consistency_errors()
+    assert not errs, errs
+
+
+# ---------------------------------------------------------------------------
+# compacted stream-lane eviction (dense sub-batch) vs masked oracle
+# ---------------------------------------------------------------------------
+
+def test_compact_stream_eviction_bit_exact_vs_masked(params, tiny_cfg):
+    """`stream_step_lanes(compact=True)` gathers pending lanes into a
+    dense power-of-2 sub-batch before the compression pass; outputs and
+    every state leaf must match the all-lanes masked path bit-exactly,
+    across pending counts 0..N (each hitting a different bucket)."""
+    from repro.models.config import CCMConfig
+    cfg = tiny_cfg.replace(ccm=CCMConfig(
+        comp_len=2, max_steps=4, stream_window=16, stream_sink=2,
+        stream_chunk=4, stream_mem_slots=4))
+    cc = cfg.ccm.stream_chunk
+    n_lanes = 5
+
+    def stacked_state(n_over):
+        lanes = []
+        for i in range(n_lanes):
+            st = ST.init_stream_state(cfg, 1)
+            # 4 warm chunks fill the 16-token window -> next chunk evicts
+            for j in range(4 if i < n_over else 0):
+                _, st = ST.stream_step(params, cfg, st,
+                                       _toks(100 + i * 31 + j, cc)[None])
+            lanes.append(st)
+        return jax.tree.map(lambda *xs: np.stack(xs), *lanes)
+
+    for n_over in (0, 1, 3, n_lanes):
+        st = stacked_state(n_over)
+        toks = np.stack([_toks(7 + i, cc)[None] for i in range(n_lanes)])
+        lg_m, new_m = ST.stream_step_lanes(params, cfg, st, toks,
+                                           compact=False)
+        lg_c, new_c = ST.stream_step_lanes(params, cfg, st, toks,
+                                           compact=True)
+        np.testing.assert_array_equal(np.asarray(lg_m), np.asarray(lg_c))
+        for a, b in zip(jax.tree.leaves(new_m), jax.tree.leaves(new_c)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# mesh hot path (subprocess, 4 forced CPU devices)
+# ---------------------------------------------------------------------------
+
+def _run(body: str, devices: int = 4, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    prelude = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models.config import ModelConfig, CCMConfig
+        from repro.models import transformer as T
+        from repro.serve.engine import ServeEngine
+        from repro.launch.mesh import make_session_mesh
+
+        cfg = ModelConfig(name="tiny", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                          vocab_size=128, compute_dtype="float32",
+                          ccm=CCMConfig(comp_len=2, max_steps=4))
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+
+        def toks(key, n):
+            return np.asarray(jax.random.randint(
+                jax.random.PRNGKey(key), (n,), 0, 128))
+
+        def drive(n_shards, mesh=None, n_sessions=8):
+            eng = ServeEngine(params, cfg, n_slots=8, cache_len=32,
+                              n_shards=n_shards, mesh=mesh,
+                              batch_buckets=(1, 2, 4),
+                              token_buckets=(4, 8))
+            for i in range(n_sessions):
+                eng.create_session(f"s{i}")
+            reqs, k = [], 0
+            for _ in range(2):
+                for i in range(n_sessions):
+                    reqs.append(eng.ingest(f"s{i}", toks(k, 8)).request)
+                    k += 1
+                for i in range(n_sessions):
+                    reqs.append(
+                        eng.query(f"s{i}", toks(k, 3 + i % 2)).request)
+                    k += 1
+                eng.run()
+            return eng, reqs
+    """)
+    r = subprocess.run([sys.executable, "-c",
+                        prelude + textwrap.dedent(body)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_mesh_engine_bit_exact_vs_single_shard():
+    """THE acceptance gate: 4-shard engine on a 4-device session mesh
+    (shard_map hot path, donated shard-resident slabs) returns BIT-exact
+    results vs the 1-shard engine on identical mixed ragged traffic,
+    with zero cross-shard session moves."""
+    out = _run("""
+        assert jax.device_count() == 4
+        e1, r1 = drive(1)
+        e4, r4 = drive(4, mesh=make_session_mesh(4))
+        assert all(r.done for r in r1 + r4)
+        for a, b in zip(r1, r4):
+            if a.result is None:
+                assert b.result is None
+                continue
+            assert np.array_equal(np.asarray(a.result),
+                                  np.asarray(b.result))
+        assert e4._m_cross_shard.value == 0
+        assert [e4.shard_of(f"s{i}") for i in range(8)] \\
+            == [0, 1, 2, 3, 0, 1, 2, 3]
+        errs = e4._mgr["online"].arena.consistency_errors()
+        assert not errs, errs
+        print("BITEXACT", len(r1))
+    """)
+    assert "BITEXACT 32" in out
+
+
+def test_mesh_arena_rows_live_on_owning_devices():
+    """Each shard's row block (slots + scratch) must be resident on its
+    own mesh device, and per-shard offload must keep it there."""
+    out = _run("""
+        mesh = make_session_mesh(4)
+        eng, _ = drive(4, mesh=mesh)
+        leaf = jax.tree.leaves(eng._mgr["online"].arena.slabs)[0]
+        shardmap = {d: idx for d, idx in
+                    leaf.sharding.devices_indices_map(leaf.shape).items()}
+        assert len(shardmap) == 4
+        stride = leaf.shape[0] // 4
+        for d, idx in shardmap.items():
+            rows = idx[0]
+            assert rows.stop - rows.start == stride
+        eng.offload_session("s0")
+        eng.query("s0", toks(999, 4))   # restore via the serve path
+        eng.run()
+        leaf2 = jax.tree.leaves(eng._mgr["online"].arena.slabs)[0]
+        assert len(leaf2.sharding.device_set) == 4
+        print("PLACED")
+    """)
+    assert "PLACED" in out
