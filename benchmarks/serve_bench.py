@@ -39,7 +39,17 @@ vs levers off (every deficit goes straight to shed).  The acceptance
 invariant — recorded as ``pressure.controller_reduces_shed`` — is a
 strictly lower shed count with the controller on at EQUAL capacity.
 
-A fifth scenario drives IDENTICAL seeded traffic through a single-shard
+A fifth scenario drives DEADLINE traffic (mixed tight/loose SLOs, one
+logical second per arrival round on a manual clock) through the same
+saturated open loop twice: EDF-within-priority plus late-preferring
+shed (``edf=True``, the default) vs plain FIFO-within-priority
+(``edf=False``) at EQUAL capacity on identical seeded traffic.  The
+acceptance invariant — recorded as ``deadline.deadline_reduces_late_
+rate`` — is a strictly lower SLA-miss rate (missed deliveries + shed
+deadline-carrying requests, over all deadline-carrying submissions)
+with EDF on.
+
+A sixth scenario drives IDENTICAL seeded traffic through a single-shard
 engine and a session-sharded one (``n_shards=4``, mesh-native over the
 ``shards`` axis when >= 4 devices are visible — CI forces them with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — else the
@@ -79,7 +89,7 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import inference as I
 from repro.models import transformer as T
-from repro.obs import Observability
+from repro.obs import ManualClock, Observability
 from repro.serve import PressurePolicy, ServeEngine
 
 
@@ -357,6 +367,77 @@ def run_pressure(params, cfg, *, on, rounds, capacity_tokens=48,
     }
 
 
+def run_deadline(params, cfg, *, edf, rounds, arrivals_per_round=6,
+                 n_sessions=12, n_slots=6, max_resident=5,
+                 max_queued_tokens=96, seed=17):
+    """Open-loop deadline traffic on a MANUAL clock (one logical second
+    per arrival round, so lateness is a deterministic function of the
+    trace, not of container speed): mixed tight/loose relative
+    deadlines plus deadline-less fillers, arrival rate > service rate.
+    ``edf`` flips the scheduler between EDF-within-priority with
+    late-preferring shed (the default serve configuration) and plain
+    FIFO-within-priority — everything else, including the seeded
+    traffic, is identical across the two arms."""
+    obs = Observability.tracing(clock=ManualClock())
+    eng = ServeEngine(params, cfg, n_slots=n_slots,
+                      max_resident=max_resident, cache_len=64,
+                      batch_buckets=(1, 2, 4),
+                      admission_policy="shed-lowest-priority",
+                      max_queued_tokens=max_queued_tokens,
+                      batched_offload=True, edf=edf, obs=obs)
+    rng = np.random.RandomState(seed)
+    for s in range(n_sessions):
+        eng.create_session(f"u{s}")
+    submitted = 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        obs.clock.advance(1.0)
+        for _ in range(arrivals_per_round):
+            s = rng.randint(n_sessions)
+            ln = (3, 5, 8)[rng.randint(3)]
+            rel = (2.0, 3.0, 12.0, None)[rng.randint(4)]
+            toks = rng.randint(0, cfg.vocab_size, size=ln).astype(np.int32)
+            eng.ingest(f"u{s}", toks, priority=int(rng.randint(2)),
+                       deadline=(None if rel is None
+                                 else obs.clock.now() + rel))
+            submitted += 1
+        eng.run(max_batches=1)          # service rate < arrival rate
+    drain_rounds = 0                    # the clock keeps ticking while
+    while eng.queue_depth() or eng.admission.backlog:   # the tail drains
+        obs.clock.advance(1.0)
+        eng.run(max_batches=1)
+        drain_rounds += 1
+    wall = time.perf_counter() - t0
+    kinds = ("ingest", "query", "stream")
+    md = eng._m_deadline
+    met = sum(int(md["met"].labels(kind=k).value) for k in kinds)
+    missed = sum(int(md["missed"].labels(kind=k).value) for k in kinds)
+    dl_requests = sum(int(md["requests"].labels(kind=k).value)
+                      for k in kinds)
+    shed_late = int(md["shed"].labels(late="yes").value)
+    shed_dl = shed_late + int(md["shed"].labels(late="no").value)
+    assert met + missed + shed_dl == dl_requests, \
+        "deadline accounting leak: every deadline-carrying request is " \
+        "delivered (met|missed) or shed"
+    lateness = eng._h_lateness.labels()
+
+    def _q(q):
+        v = lateness.quantile(q)
+        return None if not np.isfinite(v) else float(v)
+
+    return {
+        "scheduler": "edf" if edf else "fifo",
+        "submitted": submitted,
+        "deadline_requests": dl_requests,
+        "met": met, "missed": missed,
+        "shed_deadline": shed_dl, "shed_late": shed_late,
+        "delivered_late_rate": missed / max(1, met + missed),
+        "sla_miss_rate": (missed + shed_dl) / max(1, dl_requests),
+        "lateness_p50_s": _q(0.50), "lateness_p99_s": _q(0.99),
+        "drain_rounds": drain_rounds, "wall_s": wall,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, default=96)
@@ -496,6 +577,28 @@ def main():
         print("WARNING: pressure controller must shed strictly less than "
               "levers-off at equal capacity")
 
+    # -- deadline scheduling: EDF + late-shed vs FIFO, equal capacity ----
+    deadline = {}
+    for arm in (True, False):
+        r = run_deadline(params, cfg, edf=arm, rounds=args.open_rounds)
+        deadline[r["scheduler"]] = r
+        print(f"\ndeadline [{r['scheduler']:4s}]: SLA miss rate "
+              f"{r['sla_miss_rate']:.2f} (missed {r['missed']} + shed "
+              f"{r['shed_deadline']} of {r['deadline_requests']} "
+              f"deadline-carrying), delivered-late rate "
+              f"{r['delivered_late_rate']:.2f}, met {r['met']}, "
+              f"drained in {r['drain_rounds']} extra rounds")
+        C.csv_row(f"serve_deadline_{r['scheduler']}", r["wall_s"] * 1e6,
+                  f"sla miss {r['sla_miss_rate']:.2f}")
+    reduces_late = (deadline["edf"]["sla_miss_rate"]
+                    < deadline["fifo"]["sla_miss_rate"])
+    print(f"EDF reduces SLA-miss rate at equal capacity: {reduces_late} "
+          f"({deadline['edf']['sla_miss_rate']:.2f} vs "
+          f"{deadline['fifo']['sla_miss_rate']:.2f})")
+    if not reduces_late:
+        print("WARNING: EDF + late-preferring shed must miss strictly "
+              "fewer SLAs than FIFO on identical traffic")
+
     # -- session-sharded serving: 1 vs 4 shards, identical traffic ------
     n_sh = 4
     sh_sessions = 8 if args.smoke else 16
@@ -552,6 +655,8 @@ def main():
         "open_loop_control_plane_deterministic": deterministic,
         "pressure": {**pressure,
                      "controller_reduces_shed": bool(reduces)},
+        "deadline": {**deadline,
+                     "deadline_reduces_late_rate": bool(reduces_late)},
         "sharded": {
             "n_shards": n_sh, "sessions": sh_sessions,
             "mesh": mesh is not None,

@@ -12,8 +12,9 @@ device feasible.  This package is that serving layer:
                  Admitted | Queued | Shed verdicts
   scheduler.py — continuous batching: queue per-session requests, group
                  by op kind + token bucket (ragged lanes carry a
-                 valid_len; priorities age to prevent starvation), pad
-                 to bucketed batch sizes
+                 valid_len; priorities age to prevent starvation;
+                 deadlines drain earliest-first within a priority
+                 class), pad to bucketed batch sizes
   session.py   — session lifecycle + batched/async LRU host offload
                  (restore-vs-recompute cost model, optionally calibrated
                  from measured transfer/replay rates)

@@ -39,7 +39,10 @@ Overflow policies (what happens when a submit would break a bound):
   shed-lowest-priority — make room by shedding queued requests whose
                          *effective* priority (aging included) is
                          STRICTLY lower than the incoming request's;
-                         victims are only ever a session's queued
+                         among those, victims that are ALREADY LATE on
+                         their deadline go first (their SLO is lost
+                         either way — `Scheduler.shed_preference_key`),
+                         and victims are only ever a session's queued
                          suffix (program order is never punctured).  If
                          no such victim frees enough room, the incoming
                          request itself is shed.
@@ -57,8 +60,9 @@ well-defined.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.obs import MetricsRegistry
 from repro.serve.pressure import MemoryPressureController
@@ -69,9 +73,16 @@ POLICIES = ("block", "shed-lowest-priority", "reject-new")
 
 @dataclasses.dataclass(frozen=True)
 class TenantQuota:
-    """Per-tenant admission bounds (None = unbounded)."""
+    """Per-tenant admission bounds (None = unbounded).
+
+    ``slo_seconds`` turns the quota into an SLO policy: a submit that
+    carries no explicit deadline gets one derived as ``now + slo``.  A
+    float applies to every op kind; a dict maps kinds (``ingest`` /
+    ``query`` / ``stream``) to their own SLO, with missing kinds left
+    deadline-less."""
     max_resident: Optional[int] = None       # resident sessions per arena
     max_queued_tokens: Optional[int] = None  # tokens in the scheduler queue
+    slo_seconds: Union[float, Dict[str, float], None] = None
 
     def __post_init__(self):
         if self.max_resident is not None and self.max_resident < 1:
@@ -79,6 +90,18 @@ class TenantQuota:
                              "(0 would make the tenant unschedulable)")
         if self.max_queued_tokens is not None and self.max_queued_tokens < 1:
             raise ValueError("max_queued_tokens quota must be >= 1")
+        slos = (self.slo_seconds.values()
+                if isinstance(self.slo_seconds, dict)
+                else (self.slo_seconds,))
+        for s in slos:
+            if s is not None and not s > 0:
+                raise ValueError(f"slo_seconds must be > 0, got {s!r}")
+
+    def slo_for(self, kind: str) -> Optional[float]:
+        """Deadline budget (seconds from submit) for an op kind."""
+        if isinstance(self.slo_seconds, dict):
+            return self.slo_seconds.get(kind)
+        return self.slo_seconds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +176,12 @@ class AdmissionController:
         self._queued_tokens: Dict[str, int] = {}   # per tenant, in queue
         self._queued_total = 0
         self._backlog: List[Request] = []          # block-policy holding pen
+        # bounded audit trail of shed-lowest-priority decisions, recorded
+        # AT decision time (candidate preference order, lateness flags,
+        # deficits, chosen victims) — the property harness replays the
+        # two-pass selection from it and asserts the victims match
+        self.shed_decisions: collections.deque = collections.deque(
+            maxlen=512)
         self._verdicts = (metrics or MetricsRegistry()).counter(
             "admission_verdicts_total",
             "admission outcomes: admitted (direct), queued "
@@ -238,10 +267,15 @@ class AdmissionController:
 
     # -- submit --------------------------------------------------------
     def submit(self, sid: str, kind: str, tokens, priority: int = 0,
-               tenant: str = "default") -> Verdict:
+               tenant: str = "default",
+               deadline: Optional[float] = None) -> Verdict:
+        if deadline is None:
+            slo = self.quota(tenant).slo_for(kind)
+            if slo is not None:
+                deadline = self.scheduler.clock.now() + slo
         return self.submit_request(
             self.scheduler.make_request(sid, kind, tokens, priority,
-                                        tenant))
+                                        tenant, deadline=deadline))
 
     def submit_request(self, req: Request) -> Verdict:
         """Admit an already-made request (the engine makes the request
@@ -310,14 +344,16 @@ class AdmissionController:
     def _shed_for(self, req: Request, bound: Optional[str]) -> Verdict:
         """shed-lowest-priority: displace queued session-tail requests
         whose effective priority is STRICTLY lower (numerically greater
-        — lower drains first) than the incoming request's.  Victim
-        selection is transactional: the set is chosen first (lowest
-        priority, youngest first) and applied only if it frees enough
-        room — otherwise NOTHING is shed except the newcomer.  A
-        tenant-quota deficit can only be covered by the same tenant's
-        work; the global bound sheds from anywhere.  Only current
-        session tails are considered (one shed never cascades into a
-        session's earlier program)."""
+        — lower drains first) than the incoming request's.  Candidates
+        are preferred in `Scheduler.shed_preference_key` order: already-
+        late requests first (their deadline is lost whether they run or
+        not), then lowest effective priority, tightest deadline,
+        youngest.  Victim selection is transactional: the set is chosen
+        first and applied only if it frees enough room — otherwise
+        NOTHING is shed except the newcomer.  A tenant-quota deficit can
+        only be covered by the same tenant's work; the global bound
+        sheds from anywhere.  Only current session tails are considered
+        (one shed never cascades into a session's earlier program)."""
         new_eff = req.priority       # just arrived: no aging yet
         tq = self.quota(req.tenant).max_queued_tokens
         need_t = 0 if tq is None else max(
@@ -336,8 +372,22 @@ class AdmissionController:
                  if self.scheduler.effective_priority(r) > new_eff
                  and r.sid != req.sid]   # never puncture the submitter's
                                          # own program to admit its tail
-        cands.sort(key=lambda r: (self.scheduler.effective_priority(r),
-                                  r.seq), reverse=True)
+        now = self.scheduler.clock.now()
+        cands.sort(key=lambda r: self.scheduler.shed_preference_key(r, now))
+        decision = {
+            "now": now,
+            "incoming": {"sid": req.sid, "tenant": req.tenant,
+                         "priority": req.priority,
+                         "token_len": req.token_len,
+                         "deadline": req.deadline},
+            "need_t": need_t, "need_g": need_g,
+            "candidates": [
+                {"seq": r.seq, "sid": r.sid, "tenant": r.tenant,
+                 "token_len": r.token_len, "deadline": r.deadline,
+                 "eff": self.scheduler.effective_priority(r),
+                 "late": self.scheduler.is_late(r, now)}
+                for r in cands],
+        }
         victims: List[Request] = []
         vset = set()
         freed_t = freed_g = 0
@@ -356,6 +406,9 @@ class AdmissionController:
                 victims.append(r)
                 vset.add(id(r))
                 freed_g += r.token_len
+        decision["victims"] = [v.seq for v in victims]
+        decision["ok"] = not (freed_t < need_t or freed_g < need_g)
+        self.shed_decisions.append(decision)
         if freed_t < need_t or freed_g < need_g:
             return self._shed_new(
                 req, f"over {bound}; no strictly-lower-priority victims "

@@ -51,9 +51,10 @@ row ids are global), and occupancy/resident/queue/shed metrics gain a
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import sys
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +62,7 @@ import numpy as np
 
 from repro.launch import serve as SRV
 from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
-                                token_bucket)
+                                derive_token_buckets, token_bucket)
 from repro.models.config import ModelConfig
 from repro.obs import Observability
 from repro.serve.admission import (AdmissionController, TenantQuota,
@@ -96,6 +97,12 @@ class ServeEngine:
                  pressure_policy: Optional[PressurePolicy] = None,
                  step_factory: Optional[Callable] = None,
                  n_shards: int = 1, mesh=None,
+                 edf: bool = True,
+                 bucket_policy: str = "static",
+                 bucket_refit_interval: int = 256,
+                 bucket_max: int = 8,
+                 bucket_compile_cost_tokens: float = 128.0,
+                 length_history: int = 4096,
                  obs: Optional[Observability] = None):
         """``token_buckets``: ragged-batching token buckets ("auto" picks
         `launch.specs.SERVE_TOKEN_BUCKETS` for attention archs and exact-
@@ -140,6 +147,28 @@ class ServeEngine:
         also the only sharded mode compatible with a custom
         ``step_factory``.
 
+        Deadlines (docs/SERVING.md "Deadlines and SLOs"): every submit
+        accepts ``deadline=`` (absolute seconds on the engine clock —
+        ``now()``); a tenant quota's ``slo_seconds`` derives one when
+        the caller passes none.  ``edf`` orders deadline-carrying
+        requests earliest-deadline-first WITHIN their effective-priority
+        class (`Scheduler.effective_key`); with no deadlines submitted
+        the schedule is bit-identical either way.  Shed and pressure
+        levers prefer already-late work (`Scheduler.shed_preference_key`,
+        `PressurePolicy.offload_late_sessions`); outcomes land in the
+        ``serve_deadline_*`` metric families.
+
+        Bucket derivation: ``bucket_policy="derived"`` refits the token-
+        bucket ladder to the observed request-length distribution every
+        ``bucket_refit_interval`` submissions
+        (`launch.specs.derive_token_buckets`: pad-waste vs compile-churn
+        DP at ``bucket_compile_cost_tokens`` per NEW shape, fed by the
+        compile-churn counter's seen shapes, never pad-regressing vs the
+        static ladder on the fitted window of the last
+        ``length_history`` lengths).  The default ``"static"`` keeps the
+        configured ladder untouched; `derived_token_buckets()` previews
+        a fit either way.
+
         ``obs``: `repro.obs.Observability` bundle.  Default = live
         metrics registry + monotonic clock + `NullRecorder` (no traces,
         no flight buffer, bit-exact with pre-obs behavior).  Pass
@@ -158,6 +187,24 @@ class ServeEngine:
                 f"family {cfg.family!r}")
         self.ragged = token_buckets is not None
         self._token_buckets = token_buckets
+        if bucket_policy not in ("static", "derived"):
+            raise ValueError(f"unknown bucket_policy {bucket_policy!r}; "
+                             "pick 'static' or 'derived'")
+        if bucket_policy == "derived" and not self.ragged:
+            raise ValueError("bucket_policy='derived' needs ragged "
+                             "batching (token_buckets is None)")
+        self.bucket_policy = bucket_policy
+        self._bucket_refit_interval = int(bucket_refit_interval)
+        self._bucket_max = int(bucket_max)
+        self._bucket_compile_cost = float(bucket_compile_cost_tokens)
+        # the fit baseline: the configured static ladder (the derived
+        # ladder is clamped to never pad WORSE than this on its window)
+        self._static_token_buckets = tuple(sorted(token_buckets)) \
+            if token_buckets is not None else None
+        self._len_history: collections.deque = collections.deque(
+            maxlen=int(length_history))
+        self._len_seen = 0             # lengths ever recorded
+        self._len_at_refit = 0         # _len_seen at the last refit
         self._step_factory = step_factory or SRV.make_arena_step
         if mesh is not None:
             if "shards" not in getattr(mesh, "axis_names", ()):
@@ -226,7 +273,7 @@ class ServeEngine:
         self.scheduler = Scheduler(
             batch_buckets, max_batch=caps, token_buckets=token_buckets,
             max_token_len={"stream": cfg.ccm.stream_chunk}, aging=aging,
-            metrics=self.obs.registry)
+            metrics=self.obs.registry, edf=edf, clock=self.obs.clock)
         # the budget is scoped to the ONLINE arena (memory + KV cache —
         # the states the ladder's levers act on); merge mode pins every
         # session at one group, so only concat memories can recompress
@@ -244,6 +291,7 @@ class ServeEngine:
                 recompress_fn=self._recompress_session,
                 offload_fn=lambda sid:
                     self._mgr["online"].offload_batch([sid])[0],
+                unsalvageable_fn=self._all_pending_late,
                 obs=self.obs)
         self.admission = AdmissionController(
             self.scheduler, policy=admission_policy,
@@ -303,6 +351,46 @@ class ServeEngine:
                     "lanes", "batches", "dispatch_s"):
             for k in _OP_STATE:
                 self._m[fam].labels(kind=k)
+        self._m_deadline = {
+            "requests": reg.counter(
+                "serve_deadline_requests_total",
+                "submitted requests carrying a deadline (explicit or "
+                "SLO-derived), per op kind", labels=("kind",)),
+            "met": reg.counter(
+                "serve_deadline_met_total",
+                "deadline-carrying requests delivered on time, per op "
+                "kind", labels=("kind",)),
+            "missed": reg.counter(
+                "serve_deadline_missed_total",
+                "deadline-carrying requests delivered PAST their "
+                "deadline, per op kind", labels=("kind",)),
+            "shed": reg.counter(
+                "serve_deadline_shed_total",
+                "deadline-carrying requests shed by admission, labeled "
+                "by whether the deadline had ALREADY passed at shed "
+                "time (late='yes' sheds lose nothing — the SLO was "
+                "gone; late='no' sheds are real SLO casualties)",
+                labels=("late",)),
+        }
+        for fam in ("requests", "met", "missed"):
+            for k in _OP_STATE:
+                self._m_deadline[fam].labels(kind=k)
+        for late in ("yes", "no"):
+            self._m_deadline["shed"].labels(late=late)
+        self._h_lateness = reg.histogram(
+            "serve_deadline_lateness_seconds",
+            "how far past its deadline a MISSED delivery landed "
+            "(delivery time - deadline; met deliveries not observed)")
+        self._m_refits = reg.counter(
+            "serve_bucket_refits_total",
+            "token-bucket ladder refits applied from the observed "
+            "length distribution (bucket_policy='derived')")
+        self._g_ladder = reg.gauge(
+            "serve_token_bucket_count",
+            "buckets in the active token-bucket ladder (0 = exact-"
+            "length grouping)")
+        self._g_ladder.set(
+            len(self._token_buckets) if self._token_buckets else 0)
         self._g = {
             "occupancy": reg.gauge(
                 "serve_arena_occupancy",
@@ -464,6 +552,19 @@ class ServeEngine:
             return True
         return any(r.sid == sid for r in self.admission.backlog)
 
+    def _all_pending_late(self, sid: str) -> bool:
+        """Whether EVERY pending request of the session (queue +
+        backlog) is already past its deadline — the pressure
+        controller's 'unsalvageable' predicate: offloading such a
+        session delays only work whose SLO is lost anyway
+        (`PressurePolicy.offload_late_sessions`)."""
+        reqs = self.scheduler.queued(sid=sid) + [
+            r for r in self.admission.backlog if r.sid == sid]
+        if not reqs:
+            return False
+        now = self.obs.clock.now()
+        return all(self.scheduler.is_late(r, now) for r in reqs)
+
     def _recompress_session(self, sid: str) -> int:
         """Pressure lever 1: collapse the session's resident compressed
         memory at ``recompress_group`` (one jitted gather -> masked
@@ -496,16 +597,34 @@ class ServeEngine:
             # victim) carries a reservation made at its own submit
             self._cached[req.sid] -= req.token_len
         self._m_shard_shed.labels(shard=str(req.shard)).inc()
+        if req.deadline is not None:
+            late = self.scheduler.is_late(req)
+            self._m_deadline["shed"].labels(
+                late="yes" if late else "no").inc()
 
-    def _submit(self, sid: str, op: str, tokens, priority: int) -> Verdict:
+    def _submit(self, sid: str, op: str, tokens, priority: int,
+                deadline: Optional[float] = None) -> Verdict:
         kind = self._kind[sid]
         if _OP_STATE[op] != kind:
             raise ValueError(f"op {op!r} invalid for {kind!r} session {sid!r}")
+        tenant = self._tenant[sid]
+        if deadline is None:
+            # SLO-derived deadline: the tenant's per-kind budget from now
+            slo = self.admission.quota(tenant).slo_for(op)
+            if slo is not None:
+                deadline = self.obs.clock.now() + slo
         # make (and shape-validate) the request BEFORE any reservation —
         # a validation error must raise with zero side effects
         req = self.scheduler.make_request(sid, op, tokens, priority,
-                                          tenant=self._tenant[sid])
+                                          tenant=tenant, deadline=deadline)
         req.shard = self._shard[sid]   # route to the session's placement
+        if deadline is not None:
+            self._m_deadline["requests"].labels(kind=op).inc()
+        # offered-traffic length sample for the bucket-derivation fit
+        # (recorded regardless of verdict: the ladder should serve what
+        # ARRIVES, not just what survived admission)
+        self._len_history.append(req.token_len)
+        self._len_seen += 1
         n = req.token_len
         if op == "stream" and n > self.cfg.ccm.stream_chunk:
             # mirror the stream_step trace-time guard HERE, before the
@@ -554,14 +673,23 @@ class ServeEngine:
         else:                                  # Shed
             rec.shed(req, verdict.reason)
 
-    def ingest(self, sid, tokens, priority: int = 0) -> Verdict:
-        return self._submit(sid, "ingest", tokens, priority)
+    def now(self) -> float:
+        """Current time on the engine's clock — the base for absolute
+        ``deadline=`` arguments (``eng.ingest(sid, toks,
+        deadline=eng.now() + 0.5)``)."""
+        return self.obs.clock.now()
 
-    def query(self, sid, tokens, priority: int = 0) -> Verdict:
-        return self._submit(sid, "query", tokens, priority)
+    def ingest(self, sid, tokens, priority: int = 0,
+               deadline: Optional[float] = None) -> Verdict:
+        return self._submit(sid, "ingest", tokens, priority, deadline)
 
-    def stream(self, sid, tokens, priority: int = 0) -> Verdict:
-        return self._submit(sid, "stream", tokens, priority)
+    def query(self, sid, tokens, priority: int = 0,
+              deadline: Optional[float] = None) -> Verdict:
+        return self._submit(sid, "query", tokens, priority, deadline)
+
+    def stream(self, sid, tokens, priority: int = 0,
+               deadline: Optional[float] = None) -> Verdict:
+        return self._submit(sid, "stream", tokens, priority, deadline)
 
     # -- execution -----------------------------------------------------
     def _step(self, op: str, masked: bool):
@@ -829,6 +957,7 @@ class ServeEngine:
                 rec.pumped(r)
             n += 1
         if n:
+            now = self.obs.clock.now()
             for reqs, out in self._undelivered:
                 out_np = np.asarray(out) if out is not None else None
                 for i, r in enumerate(reqs):
@@ -838,6 +967,14 @@ class ServeEngine:
                     r.result = out_np[i, 0, :r.token_len] \
                         if out_np is not None else None
                     r.done = True
+                    if r.deadline is not None:
+                        if now > r.deadline:
+                            self._m_deadline["missed"].labels(
+                                kind=r.kind).inc()
+                            self._h_lateness.observe(now - r.deadline)
+                        else:
+                            self._m_deadline["met"].labels(
+                                kind=r.kind).inc()
                     rec.finished(r)
             self._undelivered.clear()
         for m in self._mgr.values():
@@ -849,6 +986,12 @@ class ServeEngine:
             for m in self._mgr.values():
                 jax.block_until_ready(jax.tree.leaves(m.arena.slabs)[0])
             self._m["wall_s"].inc(self.obs.clock.now() - t0)
+        if (self.bucket_policy == "derived"
+                and self._len_seen - self._len_at_refit
+                >= self._bucket_refit_interval):
+            # off the hot path: refit between drains so the next drain's
+            # pops (and replay padding) use the updated ladder
+            self.refit_token_buckets()
         return n
 
     def _dump_flight_on_error(self, exc: BaseException) -> None:
@@ -901,6 +1044,57 @@ class ServeEngine:
         if clamped:
             out = {k: max(v, 0) for k, v in out.items()}
         return out
+
+    # -- traffic-derived token buckets ---------------------------------
+    @property
+    def token_buckets(self):
+        """The ACTIVE token-bucket ladder (None = exact-length
+        grouping).  Static by default; ``bucket_policy='derived'``
+        refits it from traffic (`refit_token_buckets`)."""
+        return self._token_buckets
+
+    def length_history(self) -> List[int]:
+        """Recent offered request token lengths (bounded window) — the
+        sample `derive_token_buckets` fits on."""
+        return list(self._len_history)
+
+    def derived_token_buckets(self,
+                              compile_cost_tokens: Optional[float] = None
+                              ) -> Tuple[int, ...]:
+        """Fit a ladder to the observed length window WITHOUT applying
+        it (`launch.specs.derive_token_buckets`).  Already-compiled
+        padded lengths (the compile-churn counter's seen shapes) cost no
+        churn, so refits gravitate to warm shapes; the result never
+        pads worse than the configured static ladder on this window.
+        With an empty window the static ladder comes back unchanged."""
+        if not self.ragged:
+            raise ValueError("bucket derivation needs ragged batching")
+        compiled = {tl for (_op, _lanes, tl, _masked) in self._seen_shapes}
+        return derive_token_buckets(
+            list(self._len_history),
+            max_buckets=self._bucket_max,
+            compile_cost_tokens=(self._bucket_compile_cost
+                                 if compile_cost_tokens is None
+                                 else compile_cost_tokens),
+            compiled_lens=compiled,
+            baseline=self._static_token_buckets)
+
+    def refit_token_buckets(self) -> Tuple[int, ...]:
+        """Apply a fresh fit as the active ladder (scheduler pops and
+        replay padding pick it up immediately; per-kind max_token_len
+        caps still apply at pop time).  Counted in
+        ``serve_bucket_refits_total``; the drain loop calls this
+        automatically under ``bucket_policy='derived'`` every
+        ``bucket_refit_interval`` submissions."""
+        ladder = self.derived_token_buckets()
+        self._token_buckets = ladder
+        self.scheduler.token_buckets = ladder
+        self._len_at_refit = self._len_seen
+        self._m_refits.inc()
+        self._g_ladder.set(len(ladder))
+        self.obs.recorder.note(
+            "buckets", f"refit token ladder -> {ladder}")
+        return ladder
 
     def compiled_programs(self) -> int:
         """Total compiled programs across op kinds (compile-cache churn:

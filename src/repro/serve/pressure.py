@@ -71,7 +71,12 @@ class PressurePolicy:
     relieves down to ``low * capacity`` once usage exceeds
     ``high * capacity`` (post-admission footprint growth — an admitted
     ingest materializes ``comp_len`` memory tokens its queue estimate
-    did not include — is re-absorbed here)."""
+    did not include — is re-absorbed here).
+    ``offload_late_sessions``: widen the offload lever to sessions whose
+    pending work is ENTIRELY past its deadline (``unsalvageable_fn``) —
+    their SLO is lost whether they stay resident or not, so they are
+    preferred AHEAD of idle LRU victims.  Off by default: without
+    deadlines the lever keeps its idle-sessions-only behavior."""
     capacity_tokens: int
     recompress_group: int = 2
     min_groups: int = 2
@@ -79,6 +84,7 @@ class PressurePolicy:
     enable_offload: bool = True
     high_watermark: float = 0.9
     low_watermark: float = 0.75
+    offload_late_sessions: bool = False
 
     def __post_init__(self):
         if self.capacity_tokens < 1:
@@ -116,6 +122,12 @@ class MemoryPressureController:
                              tokens freed (0 = nothing to shrink)
       offload_fn(sid)     -> perform the offload, return an
                              `OffloadResult`-like with ``.moved``
+      unsalvageable_fn(sid) -> whether the session's pending work is
+                             entirely past its deadline (optional; only
+                             consulted when
+                             ``policy.offload_late_sessions`` is on —
+                             such sessions become PREFERRED offload
+                             victims despite having queued work)
     """
 
     def __init__(self, policy: PressurePolicy, *,
@@ -125,6 +137,7 @@ class MemoryPressureController:
                  has_queued_fn: Callable[[str], bool],
                  recompress_fn: Callable[[str], int],
                  offload_fn: Callable[[str], object],
+                 unsalvageable_fn: Optional[Callable[[str], bool]] = None,
                  obs: Optional[Observability] = None,
                  max_decisions: int = 4096):
         self.policy = policy
@@ -134,6 +147,7 @@ class MemoryPressureController:
         self._has_queued = has_queued_fn
         self._recompress = recompress_fn
         self._offload = offload_fn
+        self._unsalvageable = unsalvageable_fn or (lambda sid: False)
         self.obs = obs if obs is not None else Observability()
         # bounded decision ring: the property suite reads whole (small)
         # traces; a long-lived engine keeps only the recent window
@@ -202,15 +216,26 @@ class MemoryPressureController:
         return self._lru(out)
 
     def offload_candidates(self) -> List:
-        """Idle resident sessions with a nonzero footprint, LRU first
-        (sessions with queued work would restore on the next batch, so
-        offloading them frees nothing durable)."""
+        """Resident sessions with a nonzero footprint that are safe to
+        offload: idle ones (queued work would restore on the next batch,
+        so offloading them frees nothing durable) and — with
+        ``policy.offload_late_sessions`` — sessions whose pending work
+        is ENTIRELY past deadline.  The late ones are preferred first
+        (their SLO is lost either way; an idle session may still serve a
+        future request on time), then LRU within each group."""
         if not self.policy.enable_offload:
             return []
-        return self._lru(
-            [s for s in self._sessions()
-             if s.resident and self._footprint(s.sid) > 0
-             and not self._has_queued(s.sid)])
+        late_ok = self.policy.offload_late_sessions
+        out = []
+        for s in self._sessions():
+            if not s.resident or self._footprint(s.sid) <= 0:
+                continue
+            if not self._has_queued(s.sid):
+                out.append((1, s))
+            elif late_ok and self._unsalvageable(s.sid):
+                out.append((0, s))
+        out.sort(key=lambda g_s: (g_s[0], g_s[1].last_used))
+        return [s for _, s in out]
 
     # -- the ladder -----------------------------------------------------
     def _decide(self, lever: str, **fields) -> None:
@@ -255,11 +280,16 @@ class MemoryPressureController:
                 if freed >= deficit:
                     break
                 tokens = self._footprint(sess.sid)
+                # recorded BEFORE the offload runs: whether this victim
+                # was taken despite queued work (only legal when the
+                # late-sessions lever is on and the work is all late)
+                late_work = self._has_queued(sess.sid)
                 res = self._offload(sess.sid)
                 if getattr(res, "moved", False):
                     freed += tokens
                     self._m_freed.labels(lever="offload").inc(tokens)
-                    self._decide("offload", sid=sess.sid, freed=tokens)
+                    self._decide("offload", sid=sess.sid, freed=tokens,
+                                 late_work=late_work)
                     self.obs.recorder.note(
                         "pressure",
                         f"offload sid={sess.sid} freed={tokens}")

@@ -18,7 +18,14 @@ Admission is priority-with-aging: lower *effective* priority drains
 first, where a request's effective priority decreases by one for every
 ``aging`` batches popped since it was submitted — a starved low-priority
 session always drains eventually under sustained high-priority load.
-Submission order breaks ties.  Two invariants keep batching safe:
+Within one effective-priority class, requests carrying a *deadline*
+drain earliest-deadline-first (EDF); deadline-less requests sort after
+every deadline inside the class, and submission order breaks the
+remaining ties.  The whole ordering lives in ONE function —
+`Scheduler.effective_key` — so aging and EDF can never disagree about
+who goes first (aging still rescues a starved request: one more aging
+step drops it into a strictly better class, where it beats any deadline).
+Two invariants keep batching safe:
 
   * program order per session — a request is only eligible once it is
     its session's earliest pending request (priority never reorders one
@@ -31,13 +38,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Sequence, Union
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
                                 batch_bucket, token_bucket)
-from repro.obs import MetricsRegistry
+from repro.obs import MetricsRegistry, MonotonicClock
 
 _KINDS = ("ingest", "query", "stream")
 
@@ -49,6 +57,10 @@ class Request:
     tokens: np.ndarray             # (1, token_len) int32
     priority: int = 0              # lower drains first
     tenant: str = "default"        # admission-quota group (serve.admission)
+    deadline: Optional[float] = None  # absolute scheduler-clock seconds by
+    #                                which the result should be delivered
+    #                                (None = no SLO); EDF key within the
+    #                                request's effective-priority class
     shard: int = 0                 # owning arena shard (set at submit from
     #                                the session's placement; the sharded
     #                                pop groups lanes by this)
@@ -112,7 +124,8 @@ class Scheduler:
                  token_buckets: Optional[Sequence[int]] = SERVE_TOKEN_BUCKETS,
                  max_token_len: Union[int, Dict[str, int], None] = None,
                  aging: Optional[int] = 32,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 edf: bool = True, clock=None):
         """``max_batch``: int cap for every op kind, or a dict
         ``{kind: cap}`` (a kind's batch must fit its arena).
 
@@ -123,7 +136,15 @@ class Scheduler:
         ``cfg.ccm.stream_chunk``); a request's own length is always
         allowed.  ``aging``: every ``aging`` popped batches a waiting
         request's effective priority improves by one (None/0 disables —
-        pure FIFO-within-priority, which can starve)."""
+        pure FIFO-within-priority, which can starve).
+
+        ``edf``: order deadline-carrying requests earliest-deadline-
+        first WITHIN their effective-priority class (`effective_key`).
+        With no deadlines submitted the ordering is identical either
+        way, so the default is on.  ``clock`` is the time source for
+        lateness checks (`is_late`) — the engine passes its
+        observability clock so simulated traffic runs on logical
+        time."""
         self.batch_buckets = tuple(sorted(batch_buckets))
         cap = self.batch_buckets[-1]
         if max_batch is None:
@@ -139,6 +160,8 @@ class Scheduler:
             max_token_len = {k: max_token_len for k in _KINDS}
         self.max_token_len = dict(max_token_len)
         self.aging = int(aging) if aging else 0
+        self.edf = bool(edf)
+        self.clock = clock if clock is not None else MonotonicClock()
         self._queue: List[Request] = []
         self._seq = itertools.count()
         self._round = 0
@@ -152,13 +175,18 @@ class Scheduler:
             "batches popped from the queue (the aging clock)")
 
     def make_request(self, sid: str, kind: str, tokens, priority: int = 0,
-                     tenant: str = "default") -> Request:
+                     tenant: str = "default",
+                     deadline: Optional[float] = None) -> Request:
         """Validate and wrap a submission WITHOUT queueing it — the
         admission controller holds backpressured requests outside the
         queue and enqueues them when capacity frees (``seq`` is assigned
-        at enqueue time so drain order follows admission order)."""
+        at enqueue time so drain order follows admission order).
+        ``deadline`` is an absolute time on this scheduler's clock; it
+        rides the request unchanged through every admission verdict."""
         if kind not in _KINDS:
             raise ValueError(f"unknown op kind {kind!r}")
+        if deadline is not None and not math.isfinite(deadline):
+            raise ValueError(f"deadline must be finite, got {deadline!r}")
         arr = np.asarray(tokens)
         if arr.ndim > 2 or (arr.ndim == 2 and arr.shape[0] != 1):
             # a (B, L) batch passed by mistake would silently become one
@@ -170,7 +198,7 @@ class Scheduler:
         # caller buffer would alias later writes
         toks = np.array(arr, np.int32, copy=True).reshape(1, -1)
         return Request(sid=sid, kind=kind, tokens=toks, priority=priority,
-                       tenant=tenant)
+                       tenant=tenant, deadline=deadline)
 
     def enqueue(self, req: Request) -> Request:
         """Admit a made request into the queue (stamps seq + aging round)."""
@@ -180,9 +208,11 @@ class Scheduler:
         return req
 
     def submit(self, sid: str, kind: str, tokens, priority: int = 0,
-               tenant: str = "default") -> Request:
+               tenant: str = "default",
+               deadline: Optional[float] = None) -> Request:
         return self.enqueue(
-            self.make_request(sid, kind, tokens, priority, tenant))
+            self.make_request(sid, kind, tokens, priority, tenant,
+                              deadline=deadline))
 
     @property
     def pending(self) -> int:
@@ -193,11 +223,61 @@ class Scheduler:
         """Logical aging clock: number of batches popped so far."""
         return self._round
 
+    def aged_steps(self, req: Request, round_: Optional[int] = None) -> int:
+        """How many aging promotions ``req`` has earned by ``round_``
+        (default: the current round) — the ONE place the aging formula
+        lives."""
+        if not self.aging:
+            return 0
+        return ((self._round if round_ is None else round_)
+                - req.round) // self.aging
+
     def effective_priority(self, req: Request) -> int:
         """Priority after aging: drops by one per ``aging`` rounds waited."""
-        if not self.aging:
-            return req.priority
-        return req.priority - (self._round - req.round) // self.aging
+        return req.priority - self.aged_steps(req)
+
+    def effective_key(self, req: Request) -> Tuple[int, float, int]:
+        """THE scheduler ordering — every drain, shed and fill decision
+        sorts by this one key, so aging and EDF compose in exactly one
+        place:
+
+          (effective priority,   # aging-promoted class; strictly lower
+                                 # beats ANY deadline in a higher class
+           deadline,             # EDF within the class; no deadline
+                                 # sorts after every deadline (+inf)
+           seq)                  # submission order breaks ties
+
+        With ``edf=False`` (or no deadline on the request) the middle
+        component is +inf for everyone, which reproduces the pre-EDF
+        ``(effective_priority, seq)`` ordering bit for bit.  Aging still
+        rescues a starved deadline-less request: one more aging step
+        drops its class below the deadline traffic's, and the first
+        component dominates."""
+        dl = req.deadline if (self.edf and req.deadline is not None) \
+            else math.inf
+        return (self.effective_priority(req), dl, req.seq)
+
+    def is_late(self, req: Request, now: Optional[float] = None) -> bool:
+        """Whether ``req``'s deadline has already passed (deadline-less
+        requests are never late)."""
+        if req.deadline is None:
+            return False
+        return (self.clock.now() if now is None else now) > req.deadline
+
+    def shed_preference_key(self, req: Request,
+                            now: Optional[float] = None
+                            ) -> Tuple[int, int, float, int]:
+        """Victim-preference ordering for shed/offload levers — sort
+        ascending and take from the front.  Prefer, in order: requests
+        that are ALREADY LATE (their SLO is lost whether we run them or
+        not), then lower effective priority, then the tightest deadline
+        (closest to becoming late — least salvageable; deadline-less
+        last), then the youngest submission.  Without deadlines this
+        degrades to exactly the old (lowest-effective-priority,
+        youngest-first) victim order."""
+        eff, dl, seq = self.effective_key(req)
+        late = self.edf and self.is_late(req, now)
+        return (0 if late else 1, -eff, dl, -seq)
 
     def queued(self, tenant: Optional[str] = None,
                sid: Optional[str] = None) -> List[Request]:
@@ -238,13 +318,12 @@ class Scheduler:
 
     def _eligible(self) -> List[Request]:
         """Pending requests that are their session's earliest, ordered by
-        (effective priority, submission)."""
+        `effective_key` (effective priority, deadline-EDF, submission)."""
         earliest = {}
         for r in self._queue:
             if r.sid not in earliest or r.seq < earliest[r.sid].seq:
                 earliest[r.sid] = r
-        return sorted(earliest.values(),
-                      key=lambda r: (self.effective_priority(r), r.seq))
+        return sorted(earliest.values(), key=self.effective_key)
 
     def _head_token_len(self, head: Request) -> int:
         """Padded token length for a batch led by ``head``: its token
@@ -304,7 +383,7 @@ class Scheduler:
             lanes_of[r.tenant] = lanes_of.get(r.tenant, 0) + 1
         if self.aging:
             self._m_aged.inc(sum(
-                1 for r in taken if (round0 - r.round) // self.aging > 0))
+                1 for r in taken if self.aged_steps(r, round0) > 0))
         taken_set = set(id(r) for r in taken)
         self._queue = [r for r in self._queue if id(r) not in taken_set]
         bucket = min(batch_bucket(len(taken), self.batch_buckets), cap)
@@ -394,7 +473,7 @@ class Scheduler:
         if self.aging:
             self._m_aged.inc(sum(
                 1 for g in taken for r in g
-                if (round0 - r.round) // self.aging > 0))
+                if self.aged_steps(r, round0) > 0))
         taken_set = set(id(r) for g in taken for r in g)
         self._queue = [r for r in self._queue if id(r) not in taken_set]
         n_max = max(len(g) for g in taken)

@@ -20,15 +20,30 @@ Events are plain tuples (hypothesis-friendly):
 
   ("create",  sid, tenant)          # online session (auto on first use)
   ("submit",  sid, op, length, priority, tenant)
+  ("submit",  sid, op, length, priority, tenant, rel_deadline)
   ("run",     max_batches)          # drain up to N batches
   ("offload", sid)                  # explicit offload (may be a no-op)
   ("close",   sid)                  # cancel queued + drop state
+
+The optional 7th submit element is a RELATIVE deadline in simulated
+seconds (None = no SLO): the driver turns it into an absolute deadline
+on the manual clock at submit time, so lateness is a deterministic
+function of the event sequence.  Every scheduler pop is additionally
+recorded in ``pop_log`` — the eligible set with its `effective_key`s
+and lateness flags AT decision time, the chosen requests, and the caps
+the engine passed — which is what lets the deadline property suite
+replay the fill exactly and prove EDF-within-priority at every pop.
 
 The driver never lets a trace die on *caller-contract* errors the fuzzer
 can't know about (op on a closed sid, KV-cache exhaustion, wrong-kind
 op): those submissions are skipped and counted in ``skipped``.  Engine
 bugs — `ArenaFull` escaping, accounting drift, free-list corruption —
 propagate, which is exactly what the property suite wants to catch.
+
+This module also hosts the SHARED trace generators
+(`tenant_of` / `expand_event` / `random_events` / `event_strategy`) so
+the admission, pressure and deadline property suites all fuzz the same
+traffic model instead of three hand-rolled copies.
 """
 from __future__ import annotations
 
@@ -43,6 +58,83 @@ from repro.serve import ServeEngine, TenantQuota
 from repro.serve.scheduler import Request
 
 OPS = ("ingest", "query")
+
+# shared traffic-model vocabulary (used by every property suite)
+SIDS = tuple(f"s{i}" for i in range(5))
+LENGTHS = (1, 2, 3, 5, 8, 13)
+PRIORITIES = (0, 1, 2, 3)
+
+
+def tenant_of(sid: str) -> str:
+    """Deterministic sid -> tenant map: t0 is quota-bound in bounded
+    configs, t1/t2 ride the default quota."""
+    return f"t{int(sid[1]) % 3}"
+
+
+def expand_event(ev: Tuple) -> Tuple:
+    """Fill a 5-tuple submit's tenant from `tenant_of`; full 6/7-tuple
+    submits and every other event pass through unchanged."""
+    if ev[0] == "submit" and len(ev) == 5:
+        _, sid, op, length, prio = ev
+        return ("submit", sid, op, length, prio, tenant_of(sid))
+    return ev
+
+
+def random_events(rng, n: int, *, sids=SIDS, ops=OPS, lengths=LENGTHS,
+                  priorities=PRIORITIES, tenants=None, rel_deadlines=None,
+                  max_run: int = 3) -> List[Tuple]:
+    """Seeded trace generator over the shared traffic model
+    (``rng``: `numpy.random.RandomState`).  ``tenants=None`` derives
+    tenants via `tenant_of`; ``rel_deadlines`` (a tuple possibly
+    containing None) adds the 7th submit element."""
+    evs: List[Tuple] = []
+    for _ in range(n):
+        roll = rng.rand()
+        if roll < 0.55:
+            sid = sids[rng.randint(len(sids))]
+            ev = ["submit", sid, ops[rng.randint(len(ops))],
+                  int(lengths[rng.randint(len(lengths))]),
+                  int(priorities[rng.randint(len(priorities))]),
+                  (tenants[rng.randint(len(tenants))] if tenants
+                   else tenant_of(sid))]
+            if rel_deadlines is not None:
+                ev.append(rel_deadlines[rng.randint(len(rel_deadlines))])
+            evs.append(tuple(ev))
+        elif roll < 0.75:
+            evs.append(("run", int(rng.randint(1, max_run + 1))))
+        elif roll < 0.85:
+            evs.append(("offload", sids[rng.randint(len(sids))]))
+        else:
+            evs.append(("close", sids[rng.randint(len(sids))]))
+    return evs
+
+
+def event_strategy(*, sids=SIDS, ops=OPS, lengths=LENGTHS,
+                   priorities=PRIORITIES, tenants=None, rel_deadlines=None,
+                   max_run: int = 3):
+    """Hypothesis strategy over the same traffic model as
+    `random_events` (imported lazily so this module stays usable
+    without hypothesis installed)."""
+    from hypothesis import strategies as st
+
+    parts = [st.sampled_from(sids), st.sampled_from(ops),
+             st.sampled_from(lengths), st.sampled_from(priorities)]
+    if tenants is not None:
+        parts.append(st.sampled_from(tenants))
+    if rel_deadlines is not None:
+        parts.append(st.sampled_from(rel_deadlines))
+
+    def mk_submit(t):
+        t = list(t)
+        rel = (t.pop(),) if rel_deadlines is not None else ()
+        tenant = t.pop() if tenants is not None else tenant_of(t[0])
+        return ("submit", t[0], t[1], t[2], t[3], tenant) + rel
+
+    return st.one_of(
+        st.tuples(*parts).map(mk_submit),
+        st.tuples(st.just("run"), st.integers(1, max_run)),
+        st.tuples(st.just("offload"), st.sampled_from(sids)),
+        st.tuples(st.just("close"), st.sampled_from(sids)))
 
 
 @dataclasses.dataclass
@@ -95,6 +187,7 @@ class ServeSimulation:
                  pressure_policy=None,
                  params=None,
                  n_shards: int = 1,
+                 edf: bool = True,
                  obs: Optional[Observability] = None):
         # tracing on a ManualClock by default: event application advances
         # the clock by exactly 1.0s, so every span timestamp — and
@@ -114,7 +207,7 @@ class ServeSimulation:
             offload_cost_model=offload_cost_model,
             pressure_policy=pressure_policy,
             step_factory=None if params is not None else make_null_step,
-            n_shards=n_shards,
+            n_shards=n_shards, edf=edf,
             obs=self.obs)
         self.cache_len = cache_len
         self.verdicts: List[Tuple[Tuple, Any]] = []
@@ -128,22 +221,70 @@ class ServeSimulation:
         self._delivered: Dict[int, int] = {}
         self._skipped = 0
         self._closed_for_good: set = set()
+        # rid -> absolute deadline the driver computed at submit time
+        # (conservation: the engine must carry it unchanged end to end)
+        self.deadline_of: Dict[int, Optional[float]] = {}
+        # one entry per non-empty scheduler pop: the eligible set (keys +
+        # lateness at decision time), what was taken, and the caps the
+        # engine passed — enough to replay the fill deterministically
+        self.pop_log: List[Dict[str, Any]] = []
         # count batch deliveries at the source: wrap BOTH scheduler pops
         # (the engine uses next_batch at n_shards=1, next_sharded_batches
         # otherwise — `requests` is uniform across the two return types)
         sched = self.engine.scheduler
 
-        def _counting(orig):
-            def pop(*a, **kw):
-                batch = orig(*a, **kw)
-                if batch is not None:
-                    for r in batch.requests:
-                        self._delivered[id(r)] = \
-                            self._delivered.get(id(r), 0) + 1
-                return batch
-            return pop
-        sched.next_batch = _counting(sched.next_batch)
-        sched.next_sharded_batches = _counting(sched.next_sharded_batches)
+        def _snap_elig():
+            # effective_key/is_late read _round and the clock, which the
+            # pop only advances AFTER building its own eligible order —
+            # so this pre-pop snapshot sees exactly the keys the pop used
+            now = sched.clock.now()
+            return now, [dict(rid=id(r), sid=r.sid, kind=r.kind,
+                              tenant=r.tenant, token_len=r.token_len,
+                              shard=r.shard, deadline=r.deadline,
+                              key=sched.effective_key(r),
+                              late=sched.is_late(r, now))
+                         for r in sched._eligible()]
+
+        def _record(batch, now, elig, caps, default_cap, **extra):
+            for r in batch.requests:
+                self._delivered[id(r)] = self._delivered.get(id(r), 0) + 1
+            self.pop_log.append(dict(
+                now=now, elig=elig, kind=batch.kind,
+                token_len=batch.token_len, bucket=batch.bucket,
+                taken=[id(r) for r in batch.requests],
+                lane_caps=None if caps is None else dict(caps),
+                default_lane_cap=default_cap,
+                max_batch=dict(sched.max_batch),
+                batch_buckets=sched.batch_buckets,
+                token_buckets=sched.token_buckets,
+                max_token_len=dict(sched.max_token_len), **extra))
+
+        orig_pop = sched.next_batch
+        orig_sharded = sched.next_sharded_batches
+
+        def pop(caps=None, default_cap=None):
+            now, elig = _snap_elig()
+            batch = orig_pop(caps, default_cap)
+            if batch is not None:
+                _record(batch, now, elig, caps, default_cap, sharded=False)
+            return batch
+
+        def pop_sharded(n_shards, caps=None, default_cap=None,
+                        per_shard_cap=None, max_total=None):
+            now, elig = _snap_elig()
+            batch = orig_sharded(n_shards, caps, default_cap,
+                                 per_shard_cap=per_shard_cap,
+                                 max_total=max_total)
+            if batch is not None:
+                _record(batch, now, elig, caps, default_cap, sharded=True,
+                        n_shards=n_shards, per_shard_cap=per_shard_cap,
+                        max_total=max_total,
+                        taken_shards=[[id(r) for r in sb.requests]
+                                      for sb in batch.shards])
+            return batch
+
+        sched.next_batch = pop
+        sched.next_sharded_batches = pop_sharded
 
     # -- event application --------------------------------------------
     def _ensure_session(self, sid: str, tenant: str) -> bool:
@@ -165,8 +306,10 @@ class ServeSimulation:
             _, sid, tenant = event
             self._ensure_session(sid, tenant)
         elif kind == "submit":
-            _, sid, op, length, priority, tenant = event
-            self._apply_submit(sid, op, length, priority, tenant)
+            _, sid, op, length, priority, tenant = event[:6]
+            rel = event[6] if len(event) > 6 else None
+            self._apply_submit(sid, op, length, priority, tenant,
+                               rel_deadline=rel)
         elif kind == "run":
             self.engine.run(max_batches=event[1])
         elif kind == "offload":
@@ -182,7 +325,8 @@ class ServeSimulation:
         self.snapshots.append(snap)
         return snap
 
-    def _apply_submit(self, sid, op, length, priority, tenant) -> None:
+    def _apply_submit(self, sid, op, length, priority, tenant,
+                      rel_deadline=None) -> None:
         if op not in OPS or not self._ensure_session(sid, tenant):
             self._skipped += 1
             return
@@ -192,10 +336,15 @@ class ServeSimulation:
                 self._skipped += 1
                 return
         toks = np.zeros(length, np.int32)
-        verdict = getattr(self.engine, op)(sid, toks, priority=priority)
-        self.verdicts.append((("submit", sid, op, length, priority, tenant),
+        deadline = None if rel_deadline is None \
+            else self.clock.now() + float(rel_deadline)
+        verdict = getattr(self.engine, op)(sid, toks, priority=priority,
+                                           deadline=deadline)
+        self.verdicts.append((("submit", sid, op, length, priority, tenant,
+                               rel_deadline),
                               verdict))
         self._submitted.append(verdict.request)
+        self.deadline_of[id(verdict.request)] = deadline
         victims = getattr(verdict, "shed_victims", ())
         if victims:
             sch = self.engine.scheduler

@@ -34,31 +34,17 @@ import pytest
 from repro.serve import OffloadCostModel, TenantQuota
 from repro.serve.admission import POLICIES, Queued, Shed
 
-from simulation import ServeSimulation
+# the trace/config vocabulary (SIDS, LENGTHS, ...) and both trace
+# generators are shared with the pressure and deadline suites — one
+# traffic model, three checkers
+from simulation import (ServeSimulation, event_strategy, expand_event,
+                        random_events)
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
-
-SIDS = tuple(f"s{i}" for i in range(5))
-OPS = ("ingest", "query")
-LENGTHS = (1, 2, 3, 5, 8, 13)
-PRIORITIES = (0, 1, 2, 3)
-
-
-def tenant_of(sid: str) -> str:
-    """Deterministic sid -> tenant map: t0 is quota-bound in bounded
-    configs, t1/t2 ride the default quota."""
-    return f"t{int(sid[1]) % 3}"
-
-
-def _expand(ev):
-    if ev[0] == "submit":
-        _, sid, op, length, prio = ev
-        return ("submit", sid, op, length, prio, tenant_of(sid))
-    return ev
 
 
 # offload cost models the fuzz sweeps: None (no recording), a model
@@ -158,7 +144,7 @@ def run_trace(cfg, events, conf) -> None:
     sim = build_sim(cfg, conf)
     prev_counters = None
     for ev in events:
-        snap = sim.apply(_expand(ev))
+        snap = sim.apply(expand_event(ev))
         check_snapshot(snap, conf)
         # 7. admission counters are MONOTONIC across events (the pump
         # counts under 'pumped' instead of mutating 'admitted')
@@ -246,30 +232,12 @@ def _random_conf(rng) -> dict:
     }
 
 
-def _random_events(rng, n):
-    evs = []
-    for _ in range(n):
-        roll = rng.rand()
-        if roll < 0.55:
-            evs.append(("submit", SIDS[rng.randint(len(SIDS))],
-                        OPS[rng.randint(len(OPS))],
-                        int(LENGTHS[rng.randint(len(LENGTHS))]),
-                        int(PRIORITIES[rng.randint(len(PRIORITIES))])))
-        elif roll < 0.75:
-            evs.append(("run", int(rng.randint(1, 4))))
-        elif roll < 0.85:
-            evs.append(("offload", SIDS[rng.randint(len(SIDS))]))
-        else:
-            evs.append(("close", SIDS[rng.randint(len(SIDS))]))
-    return evs
-
-
 def test_seeded_traces_uphold_invariants(tiny_cfg):
     """Deterministic sweep of the same checker (runs without
     hypothesis)."""
     rng = np.random.RandomState(20260729)
     for _ in range(40):
-        run_trace(tiny_cfg, _random_events(rng, 35), _random_conf(rng))
+        run_trace(tiny_cfg, random_events(rng, 35), _random_conf(rng))
 
 
 def test_sharded_placement_balances_and_no_shard_starves(tiny_cfg):
@@ -284,10 +252,10 @@ def test_sharded_placement_balances_and_no_shard_starves(tiny_cfg):
             "batched": True, "async": False, "aging": 3, "n_shards": 2}
     for _ in range(8):
         sim = build_sim(tiny_cfg, conf)
-        for ev in _random_events(rng, 30):
+        for ev in random_events(rng, 30):
             if ev[0] == "close":
                 continue              # closes would skew the balance probe
-            snap = sim.apply(_expand(ev))
+            snap = sim.apply(ev)
             check_snapshot(snap, conf)
             assert max(snap.shard_open) - min(snap.shard_open) <= 1, \
                 snap.shard_open
@@ -378,15 +346,7 @@ def test_oversized_request_shed_under_every_policy(tiny_cfg):
 # ---------------------------------------------------------------------------
 
 if HAVE_HYPOTHESIS:
-    EVENTS = st.lists(
-        st.one_of(
-            st.tuples(st.just("submit"), st.sampled_from(SIDS),
-                      st.sampled_from(OPS), st.sampled_from(LENGTHS),
-                      st.sampled_from(PRIORITIES)),
-            st.tuples(st.just("run"), st.integers(1, 3)),
-            st.tuples(st.just("offload"), st.sampled_from(SIDS)),
-            st.tuples(st.just("close"), st.sampled_from(SIDS)),
-        ), max_size=40)
+    EVENTS = st.lists(event_strategy(), max_size=40)
 
     CONFIGS = st.fixed_dictionaries({
         "policy": st.sampled_from(POLICIES),

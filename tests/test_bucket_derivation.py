@@ -1,0 +1,247 @@
+"""Traffic-derived token-bucket ladder: golden cases + properties.
+
+`launch.specs.derive_token_buckets` fits a ladder to observed request
+lengths by exact DP over ``pad_waste + compile_cost_tokens * churn``.
+This suite pins:
+
+  * golden hand-computed fits, including the cost-model regression pin
+    (the exact crossover where pricing a compile higher flips the fit
+    from two buckets to one);
+  * coverage — the ladder always serves the largest observed length
+    with a bucket (nothing runs off-ladder on the fitted trace);
+  * monotonicity — strictly increasing, and never pad-regressing vs
+    the static baseline on the trace it was fit to (the clamp);
+  * determinism — same history, same ladder;
+  * exactness — a seeded sweep cross-checks the DP against brute-force
+    enumeration over all bucket placements at observed lengths;
+  * warm-shape gravity — lengths the engine already compiled cost no
+    churn, so refits keep them;
+  * the engine wiring — ``bucket_policy='derived'`` refits after the
+    configured submission interval, swaps the active ladder atomically
+    into both engine and scheduler, and counts the refit.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.launch.serve import make_null_step
+from repro.launch.specs import (SERVE_TOKEN_BUCKETS, derive_token_buckets,
+                                pad_waste, token_bucket)
+from repro.obs import ManualClock, Observability
+from repro.serve import ServeEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- goldens ------------------------------------------------------------
+
+def test_golden_free_compiles_exact_cover():
+    # zero churn price: one bucket per distinct length, zero pad
+    assert derive_token_buckets([6, 7], max_buckets=2,
+                                compile_cost_tokens=0.0,
+                                baseline=()) == (6, 7)
+    assert derive_token_buckets([6, 7], max_buckets=1,
+                                compile_cost_tokens=0.0,
+                                baseline=()) == (7,)
+
+
+def test_golden_cost_model_crossover():
+    """Hand-computed regression pin for the cost model on [1,1,1,7]:
+
+      (1, 7): pad 0,  churn 2C   ->  cost 2C
+      (7,)  : pad 18, churn 1C   ->  cost 18 + C
+
+    crossover at C = 18: below it two buckets win, above it one."""
+    lens = [1, 1, 1, 7]
+    assert derive_token_buckets(lens, max_buckets=8,
+                                compile_cost_tokens=2.0,
+                                baseline=()) == (1, 7)
+    assert derive_token_buckets(lens, max_buckets=8,
+                                compile_cost_tokens=20.0,
+                                baseline=()) == (7,)
+    assert pad_waste(lens, (7,)) == 18
+    assert pad_waste(lens, (1, 7)) == 0
+
+
+def test_golden_compiled_lens_cost_no_churn():
+    # same trace and the expensive price, but both shapes are already
+    # compiled -> churn is free and the exact cover wins again
+    assert derive_token_buckets([1, 1, 1, 7], max_buckets=8,
+                                compile_cost_tokens=20.0,
+                                compiled_lens=(1, 7),
+                                baseline=()) == (1, 7)
+
+
+def test_golden_clamp_unions_baseline_on_regression():
+    """Churn pricing can buy FEWER buckets than the baseline had; the
+    clamp unions the baseline's hit buckets back in so a refit never
+    pads worse than what it replaced (on its own window)."""
+    lens = [1] * 5 + [8] * 5
+    # unclamped DP at C=100: (8,) costs 35+100 < (1,8) at 0+200
+    assert derive_token_buckets(lens, max_buckets=8,
+                                compile_cost_tokens=100.0,
+                                baseline=()) == (8,)
+    got = derive_token_buckets(lens, max_buckets=8,
+                               compile_cost_tokens=100.0,
+                               baseline=(1, 8))
+    assert got == (1, 8)
+    assert pad_waste(lens, got) <= pad_waste(lens, (1, 8))
+
+
+def test_empty_history_returns_baseline():
+    assert derive_token_buckets([], baseline=(4, 2, 8)) == (2, 4, 8)
+    assert derive_token_buckets(
+        []) == tuple(sorted(SERVE_TOKEN_BUCKETS))
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        derive_token_buckets([3], max_buckets=0)
+    with pytest.raises(ValueError):
+        derive_token_buckets([3], compile_cost_tokens=-1.0)
+    with pytest.raises(ValueError):
+        derive_token_buckets([0])
+
+
+# -- properties ---------------------------------------------------------
+
+def _check_ladder(lengths, ladder, max_buckets):
+    assert ladder == tuple(sorted(set(ladder)))          # strict monotone
+    assert all(isinstance(b, int) and b >= 1 for b in ladder)
+    assert max(ladder) >= max(lengths)                   # coverage
+    # never regress vs the static baseline on the fitted trace
+    assert pad_waste(lengths, ladder) <= \
+        pad_waste(lengths, SERVE_TOKEN_BUCKETS)
+
+
+def _brute_force_cost(lengths, max_buckets, cost, compiled):
+    """Exhaustive optimum over ladders at observed lengths (the DP's
+    search space: the last bucket must cover the max length)."""
+    uniq = sorted(set(lengths))
+    best = float("inf")
+    for k in range(1, min(max_buckets, len(uniq)) + 1):
+        for combo in itertools.combinations(uniq, k):
+            if combo[-1] != uniq[-1]:
+                continue
+            c = pad_waste(lengths, combo) + cost * sum(
+                1 for b in combo if b not in compiled)
+            best = min(best, c)
+    return best
+
+
+def _dp_cost(lengths, ladder, cost, compiled):
+    return pad_waste(lengths, ladder) + cost * sum(
+        1 for b in ladder if b not in compiled)
+
+
+def _sweep_case(rng):
+    lengths = [int(rng.randint(1, 40)) for _ in range(rng.randint(1, 25))]
+    while len(set(lengths)) > 7:                 # keep brute force cheap
+        lengths.pop()
+    max_buckets = int(rng.randint(1, 9))
+    cost = float(rng.choice([0.0, 1.0, 5.0, 30.0, 200.0]))
+    uniq = sorted(set(lengths))
+    compiled = set(u for u in uniq if rng.rand() < 0.3)
+    return lengths, max_buckets, cost, compiled
+
+
+def test_seeded_sweep_dp_matches_brute_force():
+    rng = np.random.RandomState(20260813)
+    for _ in range(300):
+        lengths, max_buckets, cost, compiled = _sweep_case(rng)
+        ladder = derive_token_buckets(lengths, max_buckets=max_buckets,
+                                      compile_cost_tokens=cost,
+                                      compiled_lens=compiled,
+                                      baseline=())
+        want = _brute_force_cost(lengths, max_buckets, cost, compiled)
+        got = _dp_cost(lengths, ladder, cost, compiled)
+        assert got == want, (lengths, max_buckets, cost, compiled,
+                             ladder, got, want)
+
+
+def test_seeded_sweep_ladder_properties():
+    rng = np.random.RandomState(20260814)
+    for _ in range(200):
+        lengths, max_buckets, cost, compiled = _sweep_case(rng)
+        ladder = derive_token_buckets(lengths, max_buckets=max_buckets,
+                                      compile_cost_tokens=cost,
+                                      compiled_lens=compiled)
+        _check_ladder(lengths, ladder, max_buckets)
+        # determinism: same history, same fit
+        again = derive_token_buckets(lengths, max_buckets=max_buckets,
+                                     compile_cost_tokens=cost,
+                                     compiled_lens=compiled)
+        assert again == ladder
+
+
+if HAVE_HYPOTHESIS:
+    @given(lengths=st.lists(st.integers(1, 40), min_size=1, max_size=25),
+           max_buckets=st.integers(1, 8),
+           cost=st.sampled_from((0.0, 1.0, 5.0, 30.0, 200.0)))
+    @settings(max_examples=200, deadline=None)
+    def test_property_derived_ladders(lengths, max_buckets, cost):
+        ladder = derive_token_buckets(lengths, max_buckets=max_buckets,
+                                      compile_cost_tokens=cost)
+        _check_ladder(lengths, ladder, max_buckets)
+        if len(set(lengths)) <= 7:
+            raw = derive_token_buckets(lengths, max_buckets=max_buckets,
+                                       compile_cost_tokens=cost,
+                                       baseline=())
+            assert _dp_cost(lengths, raw, cost, set()) == \
+                _brute_force_cost(lengths, max_buckets, cost, set())
+else:
+    def test_property_derived_ladders():
+        pytest.skip("property fuzz needs hypothesis")
+
+
+# -- engine wiring ------------------------------------------------------
+
+def test_engine_refits_ladder_under_derived_policy(tiny_cfg):
+    eng = ServeEngine(
+        None, tiny_cfg, n_slots=3, cache_len=64,
+        token_buckets=(2, 4, 8, 16),
+        bucket_policy="derived", bucket_refit_interval=4,
+        bucket_compile_cost_tokens=1.0,
+        step_factory=make_null_step,
+        obs=Observability.tracing(clock=ManualClock()))
+    for sid in ("s0", "s1", "s2"):
+        eng.create_session(sid, kind="online")
+    # 6 offered lengths, all 3s -> after the 4th submission the next
+    # drain refits; at compile cost 1.0 the fit collapses to one warm
+    # bucket at the single observed length
+    for i in range(6):
+        eng.ingest(f"s{i % 3}", np.zeros(3, np.int32))
+        eng.run()
+    assert int(eng._m_refits.value) >= 1
+    assert eng.token_buckets == (3,)
+    assert eng.scheduler.token_buckets == (3,)
+    assert int(eng._g_ladder.value) == 1
+    assert eng.length_history() == [3] * 6
+    # preview API agrees with the applied ladder on the same window
+    assert eng.derived_token_buckets() == (3,)
+
+
+def test_engine_static_policy_never_refits(tiny_cfg):
+    eng = ServeEngine(
+        None, tiny_cfg, n_slots=3, cache_len=64,
+        token_buckets=(2, 4, 8, 16),
+        bucket_refit_interval=2,
+        step_factory=make_null_step,
+        obs=Observability.tracing(clock=ManualClock()))
+    eng.create_session("s0", kind="online")
+    for _ in range(6):
+        eng.ingest("s0", np.zeros(3, np.int32))
+        eng.run()
+    assert int(eng._m_refits.value) == 0
+    assert eng.token_buckets == (2, 4, 8, 16)
+
+
+def test_derived_policy_requires_ragged(tiny_cfg):
+    with pytest.raises(ValueError):
+        ServeEngine(None, tiny_cfg, n_slots=3, token_buckets=None,
+                    bucket_policy="derived", step_factory=make_null_step)

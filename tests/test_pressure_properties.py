@@ -33,7 +33,9 @@ import pytest
 from repro.serve import PressurePolicy
 from repro.serve.pressure import MemoryPressureController
 
-from simulation import ServeSimulation
+# SIDS and the trace strategy come from the shared traffic model in
+# tests/simulation.py (same vocabulary as the admission/deadline suites)
+from simulation import SIDS, ServeSimulation, event_strategy
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -42,7 +44,6 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 COMP_LEN = 2           # token value of one memory group in the model
-SIDS = tuple(f"s{i}" for i in range(5))
 
 
 # -- 1. pure-controller model checker -----------------------------------
@@ -242,14 +243,8 @@ def _run_pressure_sim(cfg, conf, events):
 
 
 if HAVE_HYPOTHESIS:
-    event_st = st.one_of(
-        st.tuples(st.just("submit"), st.sampled_from(SIDS),
-                  st.sampled_from(("ingest", "query")),
-                  st.sampled_from((2, 4, 8)), st.integers(0, 3),
-                  st.just("default")),
-        st.tuples(st.just("run"), st.integers(1, 4)),
-        st.tuples(st.just("offload"), st.sampled_from(SIDS)),
-        st.tuples(st.just("close"), st.sampled_from(SIDS)))
+    event_st = event_strategy(lengths=(2, 4, 8), tenants=("default",),
+                              max_run=4)
     conf_st = st.fixed_dictionaries({
         "n_slots": st.integers(3, 5),
         "policy": st.sampled_from(("block", "shed-lowest-priority",
