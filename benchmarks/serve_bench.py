@@ -60,6 +60,17 @@ tok/s at 1 vs 4 shards is reported for trend tracking (on a 2-core
 CPU container the forced devices share cores, so the ratio is noise —
 the exactness/no-transfer invariants are the signal).
 
+A seventh scenario drives PREFIX-HEAVY arrivals — every session opens
+with the same per-tenant context prefix — under a tight logical-memory
+budget (`PressurePolicy.capacity_tokens`, cheap levers off so every
+deficit falls to ``reject-new``) twice: content-addressed prefix dedup
+on (all sessions attach to ONE compressed row, copy-on-write) vs off
+(every session compresses its own row).  The acceptance invariant —
+recorded as ``prefix_dedup.dedup_raises_admitted_sessions`` — is
+strictly more sessions holding their compressed prefix at EQUAL
+capacity with dedup on, with sampled query logits matching a direct
+compress-from-scratch in both arms.
+
 Also checks the LRU offload path end-to-end: a session offloaded to host
 and restored must reproduce its query logits EXACTLY (allclose) vs a
 never-offloaded run.
@@ -438,6 +449,75 @@ def run_deadline(params, cfg, *, edf, rounds, arrivals_per_round=6,
     }
 
 
+def run_prefix_dedup(params, cfg, *, dedup, n_sessions=12, prefix_len=8,
+                     qlen=4, capacity_tokens=16, seed=23):
+    """Prefix-heavy admission under a tight logical-memory budget:
+    ``n_sessions`` sessions all open with the SAME tenant-scoped prefix,
+    then a couple of sampled sessions serve a query (numeric check).
+    ``dedup`` flips the content-addressed prefix cache; the pressure
+    budget (cheap levers off, ``reject-new`` overflow) is sized so the
+    dedup-off arm — one compressed row per session — runs out of
+    logical memory while the dedup-on arm shares one row.  The gate is
+    ``admitted``: sessions actually holding their compressed prefix
+    after the open wave."""
+    policy = PressurePolicy(capacity_tokens=capacity_tokens,
+                            enable_recompress=False, enable_offload=False)
+    eng = ServeEngine(params, cfg, n_slots=n_sessions + 4, cache_len=32,
+                      batch_buckets=(1, 2, 4),
+                      admission_policy="reject-new",
+                      pressure_policy=policy,
+                      prefix_cache=dedup)
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(0, cfg.vocab_size,
+                         size=prefix_len).astype(np.int32)
+    query = rng.randint(0, cfg.vocab_size, size=qlen).astype(np.int32)
+    t0 = time.perf_counter()
+    for s in range(n_sessions):         # open wave: everyone, same prefix
+        eng.create_session(f"u{s}", prefix_tokens=prefix)
+        eng.run()
+    mgr = eng._mgr["online"]
+    admitted = sum(1 for s_ in mgr.sessions.values() if s_.mem_groups > 0)
+    used_after_open = eng.pressure.used_tokens()
+    shared_rows = len(mgr.arena.shared_slots())
+    # numeric spot-check on sessions that DID get their prefix: sampled
+    # queries must match a direct compress-from-scratch (the dedup-on
+    # samples COW-break off the shared row here)
+    holders = [s_.sid for s_ in mgr.sessions.values() if s_.mem_groups > 0]
+    st = I.init_online_state(cfg, 1, max_cache_len=32)
+    st = I.ingest_context(params, cfg, st, prefix[None])
+    want, _ = I.prefill(params, cfg, st, query[None], full_logits=True)
+    # the budget is sized for the open wave; a query needs extra
+    # headroom (queued tokens + the pre-charged KV-cache growth), so
+    # release the non-sampled holders first and each sample after its
+    # query — the open-wave numbers above are already recorded
+    samples = {holders[0], holders[-1]}
+    for sid in holders:
+        if sid not in samples:
+            eng.close_session(sid)
+    sample_ok = True
+    for sid in samples:
+        r = eng.query(sid, query).request
+        eng.run()
+        if r.result is None or not np.allclose(
+                np.asarray(r.result), np.asarray(want[0]), atol=1e-5):
+            sample_ok = False
+        eng.close_session(sid)
+    wall = time.perf_counter() - t0
+    cache = eng.prefix_cache
+    return {
+        "dedup": "on" if dedup else "off",
+        "capacity_tokens": capacity_tokens,
+        "sessions": n_sessions,
+        "admitted": admitted,
+        "used_tokens_after_open": used_after_open,
+        "shared_rows_after_open": shared_rows,
+        "dedup_hits": int(cache._m_hits.value) if cache else 0,
+        "dedup_inserts": int(cache._m_inserts.value) if cache else 0,
+        "sampled_queries_match_direct": bool(sample_ok),
+        "wall_s": wall,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, default=96)
@@ -634,6 +714,28 @@ def main():
     C.csv_row(f"serve_shard_{n_sh}", t_sh * 1e6,
               f"{sh_tok / t_sh:.0f} tok/s, {path}")
 
+    # -- prefix-heavy arrivals: dedup on vs off, equal memory budget ----
+    prefix_dedup = {}
+    for arm in (True, False):
+        r = run_prefix_dedup(params, cfg, dedup=arm)
+        prefix_dedup[r["dedup"]] = r
+        print(f"\nprefix dedup [{r['dedup']:3s}] capacity="
+              f"{r['capacity_tokens']}: admitted {r['admitted']}/"
+              f"{r['sessions']} sessions, used {r['used_tokens_after_open']}"
+              f" tokens after open, {r['shared_rows_after_open']} shared "
+              f"rows, hits={r['dedup_hits']} inserts={r['dedup_inserts']}, "
+              f"sampled queries match: {r['sampled_queries_match_direct']}")
+        C.csv_row(f"serve_prefix_{r['dedup']}", r["wall_s"] * 1e6,
+                  f"admitted {r['admitted']}/{r['sessions']}")
+    raises_admitted = (prefix_dedup["on"]["admitted"]
+                       > prefix_dedup["off"]["admitted"])
+    print(f"dedup raises admitted sessions at equal capacity: "
+          f"{raises_admitted} ({prefix_dedup['on']['admitted']} vs "
+          f"{prefix_dedup['off']['admitted']})")
+    if not raises_admitted:
+        print("WARNING: prefix dedup must admit strictly more sessions "
+              "than no-dedup at equal memory capacity")
+
     results = {
         "config": {"sessions": args.sessions, "turns": args.turns,
                    "chunk": args.chunk, "qlen": args.qlen,
@@ -657,6 +759,9 @@ def main():
                      "controller_reduces_shed": bool(reduces)},
         "deadline": {**deadline,
                      "deadline_reduces_late_rate": bool(reduces_late)},
+        "prefix_dedup": {**prefix_dedup,
+                         "dedup_raises_admitted_sessions":
+                             bool(raises_admitted)},
         "sharded": {
             "n_shards": n_sh, "sessions": sh_sessions,
             "mesh": mesh is not None,

@@ -7,7 +7,9 @@ The serve engine continuously batches whatever mix of ops is pending
 each round, packs the active sessions' arena rows into one jitted step,
 and LRU-offloads cold sessions to host when the arena is smaller than
 the user population — total users exceed device slots with no semantic
-effect (offload->restore is bit-exact).
+effect (offload->restore is bit-exact).  At the end one user's session
+is forked into an agent tree: branches share the parent's compressed
+memory copy-on-write and diverge with private turns.
 
     PYTHONPATH=src python examples/serve_many_users.py
 """
@@ -79,6 +81,26 @@ def main():
               f"occupancy {eng.occupancy()['online']:.2f}, "
               f"{offloads} offloads so far")
     wall = time.perf_counter() - t0
+
+    # forked agent tree: branch the first user's finished session
+    # copy-on-write.  Both branches attach to u0's arena row for free
+    # (refcount, no clone); each branch's first ingest breaks the share
+    # with one jitted clone, so divergence costs exactly one row and
+    # the parent never observes the branches' private turns.
+    eng.fork_session("u0", "u0/a")
+    eng.fork_session("u0", "u0/b")
+    branches = {}
+    for i, b in enumerate(("u0/a", "u0/b")):
+        extra = toks[(i + 1) % args.users, :sl - layout.comp_len]
+        eng.ingest(b, extra)                    # diverge: private turn
+        branches[b] = eng.query(b, toks[0, args.turns * sl:]).request
+    eng.run()
+    parent = np.asarray(queries[0].result)
+    diverged = [b for b, r in branches.items()
+                if not np.allclose(np.asarray(r.result), parent)]
+    print(f"\nforked u0 -> {sorted(branches)}: "
+          f"{len(diverged)}/2 branches diverged from the parent "
+          "(copy-on-write; u0's own state untouched)")
 
     lm = np.asarray(batch["loss_mask"])
     hits = tot = 0.0

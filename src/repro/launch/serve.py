@@ -302,6 +302,27 @@ def recompress_arena_slots(mem_slabs, ids, cfg: ModelConfig, group: int):
         lambda s, r: KOPS.session_scatter(s, ids, r), mem_slabs, new)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def cow_clone_slots(slabs, src_ids, dst_ids):
+    """Copy-on-write break: clone the ``src_ids`` rows of every slab
+    leaf into the freshly-allocated ``dst_ids`` rows — one jitted
+    gather/scatter over the donated slabs, batched over all of a shard's
+    COW breaks in an activation plan.  Pad lanes pass
+    ``src == dst == pad_slot`` (scratch-row self-copy, no effect), so
+    the program compiles once per batch bucket.
+
+    This is the only sanctioned way to make a shared arena row writable:
+    the caller allocates a fresh slot, clones the shared row here, drops
+    its reference on the shared slot, and repoints the session — the
+    siblings' view of the original row is never touched.  Module-level
+    jit like `recompress_arena_slots`: every arena (engines, fuzzed
+    simulation traces) shares one compile per shape."""
+    from repro.kernels import ops as KOPS
+    rows = jax.tree.map(lambda s: KOPS.session_gather(s, src_ids), slabs)
+    return jax.tree.map(
+        lambda s, r: KOPS.session_scatter(s, dst_ids, r), slabs, rows)
+
+
 def make_null_step(cfg: ModelConfig, op: str, ragged: bool = False
                    ) -> Callable:
     """Control-plane-only arena step with `make_arena_step`'s exact

@@ -17,7 +17,11 @@ device feasible.  This package is that serving layer:
                  class), pad to bucketed batch sizes
   session.py   — session lifecycle + batched/async LRU host offload
                  (restore-vs-recompute cost model, optionally calibrated
-                 from measured transfer/replay rates)
+                 from measured transfer/replay rates); copy-on-write
+                 forks share the parent's refcounted arena row
+  prefix.py    — content-addressed prefix cache: sessions opening with
+                 an identical (tenant-scoped) prefix attach to one
+                 shared compressed row instead of recompressing it
   pressure.py  — unified memory-pressure controller: a logical token
                  budget walked down the recompress -> offload -> shed
                  degradation ladder (cheapest lever first)
@@ -29,6 +33,7 @@ from repro.serve.admission import (Admitted, AdmissionController, Queued,
                                    Shed, TenantQuota, Verdict)
 from repro.serve.arena import ArenaFull, SessionArena
 from repro.serve.engine import ServeEngine
+from repro.serve.prefix import PrefixCache, PrefixEntry
 from repro.serve.pressure import MemoryPressureController, PressurePolicy
 from repro.serve.scheduler import (Request, ScheduledBatch, Scheduler,
                                    ShardedBatch)
@@ -37,7 +42,7 @@ from repro.serve.session import (CloseResult, OffloadCostModel,
 
 __all__ = ["Admitted", "AdmissionController", "ArenaFull", "CloseResult",
            "MemoryPressureController", "OffloadCostModel",
-           "OffloadResult", "PressurePolicy", "Queued", "Request",
-           "ScheduledBatch", "Scheduler", "ServeEngine", "SessionArena",
-           "SessionManager", "ShardedBatch", "Shed", "TenantQuota",
-           "Verdict"]
+           "OffloadResult", "PrefixCache", "PrefixEntry",
+           "PressurePolicy", "Queued", "Request", "ScheduledBatch",
+           "Scheduler", "ServeEngine", "SessionArena", "SessionManager",
+           "ShardedBatch", "Shed", "TenantQuota", "Verdict"]

@@ -6,6 +6,22 @@ slabs: each pytree leaf of the single-session template (inner batch dim
 1) becomes a slab with a leading row axis.  Slot ids are handed out from
 a free-list; nothing is ever reallocated per session.
 
+REFCOUNTED ROWS: a live row is held by one or more logical references —
+a resident session, a forked child sharing its parent's state
+copy-on-write, a prefix-cache entry pinning a compressed shared prefix.
+``alloc`` hands a row out at refcount 1, ``incref`` adds a holder, and
+``free`` DROPS ONE REFERENCE — the row only returns to its shard's
+free-list when the count hits zero.  Shared rows are read-only by
+contract: every scatter entry point (``unpack`` / ``mark_dirty`` /
+``reset_slots``) refuses target rows with refcount > 1, because a write
+through one holder would silently corrupt every sibling — writers must
+break sharing first (clone the row into a fresh slot and decref the
+shared one; `SessionManager.activate_batch` does this with one jitted
+clone per shard, `launch.serve.cow_clone_slots`).  The consistency
+probe asserts the refcount bookkeeping (every live row counted >= 1,
+refs tracked only for live rows) and reports any recorded write-guard
+violation.
+
 SHARDING (session-axis partitioning): the arena is split into
 ``n_shards`` equal contiguous row blocks along the leading axis — one
 block per device when the engine runs mesh-native.  Shard ``s`` owns
@@ -38,7 +54,7 @@ from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -123,7 +139,9 @@ class SessionArena:
             self.slabs = place(self.slabs)
         self._free = [deque(self.shard_slots(s)) for s in range(n_shards)]
         self._live = set()
+        self._refs = {}               # slot -> reference count (live only)
         self._dirty = set()           # slots that have ever been written
+        self._violations = []         # recorded shared-row write attempts
         self._pack = _pack_slabs
         self._scatter = _scatter_slabs
 
@@ -186,13 +204,56 @@ class SessionArena:
                 f"all {self.slots_per_shard} slots of shard {shard} in use")
         slot = self._free[shard].popleft()
         self._live.add(slot)
+        self._refs[slot] = 1
         return slot
 
-    def free(self, slot: int) -> None:
+    def incref(self, slot: int) -> int:
+        """Add one logical reference to a live row (fork / prefix-cache
+        attach); returns the new count.  The row will survive ``free``
+        calls until every holder has released it."""
         if slot not in self._live:
             raise ValueError(f"slot {slot} is not allocated")
-        self._live.remove(slot)
-        self._free[self.shard_of(slot)].append(slot)
+        self._refs[slot] += 1
+        return self._refs[slot]
+
+    def refcount(self, slot: int) -> int:
+        """Current reference count (0 for rows not allocated)."""
+        return self._refs.get(slot, 0)
+
+    def shared(self, slot: int) -> bool:
+        """Whether the row has more than one holder (writes forbidden
+        until sharing is broken)."""
+        return self._refs.get(slot, 0) > 1
+
+    def shared_slots(self) -> List[int]:
+        """Live rows currently held by more than one reference."""
+        return sorted(s for s, n in self._refs.items() if n > 1)
+
+    def free(self, slot: int) -> int:
+        """Drop ONE reference; the row returns to its shard's free-list
+        only when no holder remains.  Returns the remaining count."""
+        if slot not in self._live:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._refs[slot] -= 1
+        left = self._refs[slot]
+        if left == 0:
+            del self._refs[slot]
+            self._live.remove(slot)
+            self._free[self.shard_of(slot)].append(slot)
+        return left
+
+    def _guard_writes(self, slot_ids) -> None:
+        """Reject any scatter targeting a shared row: one holder writing
+        through a row with refcount > 1 would corrupt every sibling.
+        Violations are recorded (surfaced by `consistency_errors`) and
+        raised — callers must COW-break first."""
+        bad = sorted({int(s) for s in slot_ids
+                      if self._refs.get(int(s), 0) > 1})
+        if bad:
+            msg = (f"write targets shared rows {bad} (refcount > 1): "
+                   "break sharing (cow_clone_slots) before any scatter")
+            self._violations.append(msg)
+            raise RuntimeError(msg)
 
     def metrics_sample(self) -> dict:
         """Point-in-time occupancy sample for gauge export (the engine's
@@ -200,6 +261,7 @@ class SessionArena:
         ``shards`` list carries the same sample per shard block."""
         return {"n_slots": self.n_slots, "live": self.n_slots - self.n_free,
                 "free": self.n_free, "occupancy": self.occupancy,
+                "shared": len(self.shared_slots()),
                 "shards": [
                     {"n_slots": self.slots_per_shard,
                      "live": self.slots_per_shard - len(self._free[s]),
@@ -241,6 +303,18 @@ class SessionArena:
         bogus = (set(all_free) | self._live) - data_rows
         if bogus:
             errs.append(f"out-of-range slots tracked: {sorted(bogus)}")
+        unref = self._live - set(self._refs)
+        if unref:
+            errs.append(f"live slots with no refcount: {sorted(unref)}")
+        ghost = set(self._refs) - self._live
+        if ghost:
+            errs.append(f"refcounts tracked for dead slots: "
+                        f"{sorted(ghost)}")
+        nonpos = sorted(s for s, n in self._refs.items() if n < 1)
+        if nonpos:
+            errs.append(f"non-positive refcounts: {nonpos}")
+        errs.extend(f"shared-row write attempted: {v}"
+                    for v in self._violations)
         return errs
 
     # -- batched pack/unpack -------------------------------------------
@@ -251,6 +325,7 @@ class SessionArena:
 
     def unpack(self, slot_ids: Sequence[int], state) -> None:
         """Scatter an updated batch back (donates slabs + batch)."""
+        self._guard_writes(slot_ids)
         ids = jnp.asarray(slot_ids, jnp.int32)
         self._dirty.update(int(i) for i in slot_ids)
         self.slabs = self._scatter(self.slabs, ids, state)
@@ -258,6 +333,7 @@ class SessionArena:
     def mark_dirty(self, slot_ids: Sequence[int]) -> None:
         """Record external writes (the engine's fused step updates
         ``slabs`` directly without going through ``unpack``)."""
+        self._guard_writes(slot_ids)
         self._dirty.update(int(i) for i in slot_ids)
 
     # -- single-slot access (offload/restore path) ---------------------

@@ -68,6 +68,7 @@ from repro.obs import Observability
 from repro.serve.admission import (AdmissionController, TenantQuota,
                                    Verdict)
 from repro.serve.arena import SessionArena
+from repro.serve.prefix import PrefixCache
 from repro.serve.pressure import MemoryPressureController, PressurePolicy
 from repro.serve.scheduler import (Request, ScheduledBatch, Scheduler,
                                    ShardedBatch)
@@ -95,6 +96,8 @@ class ServeEngine:
                  async_offload: bool = False,
                  offload_cost_model: Optional[OffloadCostModel] = None,
                  pressure_policy: Optional[PressurePolicy] = None,
+                 prefix_cache: bool = True,
+                 prefix_cache_entries: int = 64,
                  step_factory: Optional[Callable] = None,
                  n_shards: int = 1, mesh=None,
                  edf: bool = True,
@@ -122,6 +125,19 @@ class ServeEngine:
         per transfer, ``async_offload`` overlaps the device->host copy
         with scheduling, ``offload_cost_model`` drops state and replays
         request history when that is cheaper than the round trip.
+
+        Prefix dedup (`serve.prefix`): with ``prefix_cache=True`` (the
+        default), `create_session`'s ``prefix_tokens=`` consults a
+        content-addressed cache of compressed prefixes — a hit attaches
+        the new session to the cached row (refcount share, no
+        recompression); a miss compresses once and pins the result for
+        the next session.  ``prefix_cache_entries`` bounds the LRU.
+
+        Forks: `fork_session(parent, child)` queues a zero-token
+        ``fork`` request on the PARENT session (program order picks the
+        snapshot point); when it executes, the child shares the
+        parent's arena row copy-on-write — the first write through
+        either of them clones the row (`serve.session` COW break).
 
         Pressure (`serve.pressure`): a ``pressure_policy`` turns on the
         unified memory-pressure controller over the ONLINE arena — a
@@ -258,6 +274,29 @@ class ServeEngine:
                                         n_shards=n_shards, place=place),
                 stream_max_resident, replay_fn=self._make_replay("stream"),
                 **mgr_kw)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            self.prefix_cache = PrefixCache(
+                self._mgr["online"].arena,
+                max_entries=prefix_cache_entries, obs=self.obs)
+            # activation-scarcity hook: a starved shard reclaims a
+            # cache-only prefix row before evicting any live session
+            self._mgr["online"].cache_release = \
+                self.prefix_cache.release_one
+            self._mgr["online"].cache_unpin = \
+                self.prefix_cache.unpin_slot
+        # prefix-miss bookkeeping: sid -> the in-flight ingest request
+        # whose execution should pin the session's row into the cache
+        # (and the prefix tokens that key it)
+        self._prefix_req: Dict[str, Request] = {}
+        self._prefix_toks: Dict[str, np.ndarray] = {}
+        self._pending_forks: set = set()   # child sids reserved by
+        #                                    queued fork requests
+        # derived-bucket refit gating: a refit landing between a sharded
+        # pop's sub-batches would pad them to different ladders — the
+        # swap is deferred to the next pop boundary
+        self._popping = False
+        self._refit_pending = False
         caps = {op: self._mgr[kind].max_resident
                 for op, kind in _OP_STATE.items() if kind in self._mgr}
         # sharded-pop caps: a pop must fit one activate_batch call —
@@ -371,12 +410,26 @@ class ServeEngine:
                 "time (late='yes' sheds lose nothing — the SLO was "
                 "gone; late='no' sheds are real SLO casualties)",
                 labels=("late",)),
+            "cancelled": reg.counter(
+                "serve_deadline_cancelled_total",
+                "deadline-carrying requests cancelled (close_session) "
+                "before running — the fourth terminal disposition, so "
+                "met + missed + shed + cancelled == requests",
+                labels=("kind",)),
         }
-        for fam in ("requests", "met", "missed"):
+        for fam in ("requests", "met", "missed", "cancelled"):
             for k in _OP_STATE:
                 self._m_deadline[fam].labels(kind=k)
         for late in ("yes", "no"):
             self._m_deadline["shed"].labels(late=late)
+        self._m_fork = reg.counter(
+            "serve_fork_total",
+            "session forks executed (child attached to the parent's "
+            "arena row copy-on-write)")
+        self._m_fork_failed = reg.counter(
+            "serve_fork_failed_total",
+            "fork requests that could not execute (parent closed "
+            "before the fork ran, or the child sid was taken)")
         self._h_lateness = reg.histogram(
             "serve_deadline_lateness_seconds",
             "how far past its deadline a MISSED delivery landed "
@@ -385,6 +438,11 @@ class ServeEngine:
             "serve_bucket_refits_total",
             "token-bucket ladder refits applied from the observed "
             "length distribution (bucket_policy='derived')")
+        self._m_refits_deferred = reg.counter(
+            "serve_bucket_refits_deferred_total",
+            "ladder refits requested mid-pop and deferred to the next "
+            "pop boundary (a swap between a sharded pop's per-shard "
+            "sub-batches would mix bucket ladders)")
         self._g_ladder = reg.gauge(
             "serve_token_bucket_count",
             "buckets in the active token-bucket ladder (0 = exact-"
@@ -401,6 +459,11 @@ class ServeEngine:
             "resident": reg.gauge(
                 "serve_resident_sessions",
                 "device-resident sessions", labels=("arena",)),
+            "shared_rows": reg.gauge(
+                "serve_shared_rows",
+                "live arena rows held by more than one reference "
+                "(fork siblings / prefix-cache pins) — the dedup "
+                "savings currently in effect", labels=("arena",)),
             "queue_depth": reg.gauge(
                 "serve_queue_depth",
                 "requests in the scheduler queue"),
@@ -471,23 +534,157 @@ class ServeEngine:
 
     def create_session(self, sid: str, kind: str = "online",
                        tenant: str = "default",
-                       shard: Optional[int] = None) -> int:
+                       shard: Optional[int] = None,
+                       prefix_tokens=None) -> int:
         """Open a session and return its owning shard.  ``shard=None``
         (default) places it on the least-loaded shard of its kind's
         arena; an explicit shard pins it there (operators co-locating a
         tenant, tests pinning layouts).  The placement is for life —
-        session state never migrates between shards."""
+        session state never migrates between shards.
+
+        ``prefix_tokens`` (online sessions): the session's opening
+        context.  With the prefix cache enabled, a session whose tenant
+        already compressed this exact prefix ATTACHES to the cached row
+        (copy-on-write share — no ingest, no recompression; the session
+        is born resident and pins to the cached row's shard); otherwise
+        the prefix is submitted as a normal ingest and its compressed
+        row is pinned into the cache when it executes, so the NEXT
+        session with this prefix dedups."""
         if kind not in self._mgr:
             raise ValueError(
                 f"no arena for session kind {kind!r} "
                 "(construct the engine with stream_slots > 0?)")
+        if prefix_tokens is not None and kind != "online":
+            raise ValueError("prefix_tokens applies to online sessions "
+                             "(compressed-memory prefixes)")
+        if prefix_tokens is not None and self.prefix_cache is not None:
+            ent = self.prefix_cache.lookup(tenant, prefix_tokens)
+            if ent is not None and (shard is None or shard == ent.shard):
+                # dedup hit: born resident on the shared row, read-only
+                # until the first write COW-breaks
+                self._mgr[kind].adopt_row(sid, tenant, ent.shard,
+                                          ent.slot, ent.mem_groups)
+                self._kind[sid] = kind
+                self._shard[sid] = ent.shard
+                self._tenant[sid] = tenant
+                self.prefix_cache.note_hit()
+                self.obs.recorder.note(
+                    "prefix", f"dedup hit sid={sid} slot={ent.slot} "
+                              f"shard={ent.shard}")
+                return ent.shard
         if shard is None:
             shard = self._place(kind)
         self._mgr[kind].create(sid, tenant, shard=shard)
         self._kind[sid] = kind
         self._shard[sid] = shard
         self._tenant[sid] = tenant
+        if prefix_tokens is not None:
+            verdict = self.ingest(sid, prefix_tokens)
+            req = verdict.request
+            if not req.shed and self.prefix_cache is not None:
+                # pin the compressed row into the cache when this very
+                # request executes (cancel/shed clean these up)
+                self._prefix_req[sid] = req
+                self._prefix_toks[sid] = np.array(
+                    np.asarray(prefix_tokens, np.int32).reshape(-1),
+                    copy=True)
         return shard
+
+    def fork_session(self, parent_sid: str, child_sid: str,
+                     priority: int = 0) -> Verdict:
+        """Fork ``parent_sid`` into a copy-on-write child.  The fork is
+        SCHEDULED, not immediate: a zero-token ``fork`` request queues
+        on the PARENT session, so the snapshot point respects the
+        parent's program order (ops submitted before the fork are in
+        the child's branch; ops submitted after are not).  When it
+        executes, the child shares the parent's arena row (resident
+        parent), host tree (offloaded parent) or replay history — zero
+        device copies either way — and pins to the parent's shard.
+
+        The child is addressable IMMEDIATELY: requests may queue on it
+        right away, but the scheduler HOLDS them (no priority or
+        deadline can reorder a child op before the fork that creates
+        the session) until the fork request executes and releases the
+        hold."""
+        kind = self._kind.get(parent_sid)
+        if kind is None:
+            raise ValueError(f"unknown parent session {parent_sid!r}")
+        if child_sid in self._kind or child_sid in self._pending_forks:
+            raise ValueError(f"session {child_sid!r} already exists")
+        tenant = self._tenant[parent_sid]
+        req = self.scheduler.make_request(
+            parent_sid, "fork", np.zeros(0, np.int32), priority,
+            tenant=tenant)
+        req.shard = self._shard[parent_sid]
+        req.fork_child = child_sid
+        self._pending_forks.add(child_sid)
+        rec = self.obs.recorder
+        rec.submit(req)
+        verdict = self.admission.submit_request(req)
+        self._record_verdict(verdict)
+        if not req.shed:
+            # reserve the child's address now: submits on it validate
+            # and queue (held), a competing create/fork on the sid
+            # raises.  _abort_fork unwinds all of this if the fork dies
+            # before executing.
+            self._kind[child_sid] = kind
+            self._shard[child_sid] = self._shard[parent_sid]
+            self._tenant[child_sid] = tenant
+            self.scheduler.hold(child_sid)
+        return dataclasses.replace(verdict, shard=req.shard)
+
+    def _exec_fork(self, r: Request) -> None:
+        """Execute one popped fork request — pure control plane (no
+        arena activation, no device compute): wire the child into the
+        manager and release the scheduler hold on its queued requests.
+        A fork whose parent or child vanished between submit and
+        execution (close/shed races) fails with a counted, structured
+        outcome rather than an exception mid-drain."""
+        child = r.fork_child
+        kind = self._kind.get(r.sid)
+        if kind is not None and child is not None \
+                and child in self._pending_forks:
+            self._pending_forks.discard(child)
+            self._mgr[kind].fork(r.sid, child, tenant=r.tenant)
+            if r.sid in self._cached:
+                # the child's row shares the parent's KV cache rows —
+                # ADD the parent's accounting to any reservations the
+                # child's own held queries already made
+                self._cached[child] = (self._cached[r.sid]
+                                       + self._cached.get(child, 0))
+            self.scheduler.release(child)
+            self._m_fork.inc()
+            self.obs.recorder.executed(r, "fork")
+        else:
+            self._abort_fork(child)
+            self._m_fork_failed.inc()
+            self.obs.recorder.note(
+                "fork", f"failed parent={r.sid} child={child}")
+        r.result = None
+        r.done = True
+        self.obs.recorder.finished(r)
+
+    def _abort_fork(self, child: Optional[str]) -> None:
+        """Unwind a fork that died before executing (parent closed, fork
+        request shed as an overflow victim): drop the child-sid
+        reservation, cancel its held queued requests (recursively
+        aborting any grandchild forks queued on it), and release the
+        scheduler hold."""
+        if child is None or child not in self._pending_forks:
+            return
+        self._pending_forks.discard(child)
+        self.scheduler.release(child)
+        if self._kind.pop(child, None) is None:
+            return                    # shed before registration
+        rec = self.obs.recorder
+        for r in self.admission.cancel(child):
+            rec.cancelled(r)
+            if r.deadline is not None:
+                self._m_deadline["cancelled"].labels(kind=r.kind).inc()
+            self._abort_fork(r.fork_child)
+        self._cached.pop(child, None)
+        self._shard.pop(child, None)
+        self._tenant.pop(child, None)
 
     def shard_of(self, sid: str) -> Optional[int]:
         """The shard owning ``sid``'s session (None = unknown sid)."""
@@ -513,6 +710,22 @@ class ServeEngine:
         rec = self.obs.recorder
         for r in dropped:                     # terminal span: cancelled
             rec.cancelled(r)
+            if r.deadline is not None:
+                # terminal disposition: a cancelled deadline-carrying
+                # request never reaches met/missed, so without this the
+                # deadline conservation met+missed+shed+cancelled ==
+                # requests would leak on every close
+                self._m_deadline["cancelled"].labels(kind=r.kind).inc()
+            if r.fork_child is not None:
+                # a queued fork dies with its parent: unwind the child
+                # reservation and its held queued work
+                self._abort_fork(r.fork_child)
+        # closing a not-yet-created fork child: drop the reservation so
+        # the queued fork fails structurally instead of resurrecting it
+        self._pending_forks.discard(sid)
+        self.scheduler.release(sid)
+        self._prefix_req.pop(sid, None)
+        self._prefix_toks.pop(sid, None)
         self._cached.pop(sid, None)
         self._shard.pop(sid, None)
         self._tenant.pop(sid, None)
@@ -537,12 +750,21 @@ class ServeEngine:
     def _session_footprint(self, sid: str) -> int:
         """Logical device-memory tokens a resident ONLINE session holds:
         its filled compressed-memory groups times comp_len, plus its
-        live KV-cache tokens."""
-        sess = self._mgr["online"].sessions.get(sid)
+        live KV-cache tokens.  A SHARED row (fork siblings, prefix-cache
+        attachment) is charged ONCE — to its first resident holder by
+        sid order — because the device genuinely holds one copy; this is
+        the accounting that lets the pressure budget admit more sessions
+        under prefix-heavy dedup at equal capacity."""
+        mgr = self._mgr["online"]
+        sess = mgr.sessions.get(sid)
         if sess is None or not sess.resident:
             return 0
-        return (sess.mem_groups * self.cfg.ccm.comp_len
-                + self._cached.get(sid, 0))
+        mem = sess.mem_groups * self.cfg.ccm.comp_len
+        if mgr.arena.shared(sess.slot):
+            sharers = mgr.slot_sharers(sess.slot)
+            if sharers and sid != sharers[0]:
+                mem = 0
+        return mem + self._cached.get(sid, 0)
 
     def _has_pending_work(self, sid: str) -> bool:
         """Whether the session has work anywhere (scheduler queue or
@@ -574,6 +796,12 @@ class ServeEngine:
         sess = mgr.sessions.get(sid)
         if sess is None or not sess.resident:
             return 0
+        if mgr.arena.shared(sess.slot):
+            # a shared row is read-only: recompressing in place would
+            # silently corrupt every sibling (the arena's write guard
+            # would refuse the scatter anyway) — refuse the lever; the
+            # controller moves on to the next candidate
+            return 0
         group = self.pressure.policy.recompress_group
         new_groups = -(-sess.mem_groups // group)
         freed = (sess.mem_groups - new_groups) * self.cfg.ccm.comp_len
@@ -596,6 +824,13 @@ class ServeEngine:
             # plain decrement: every shed query (newcomer or queued
             # victim) carries a reservation made at its own submit
             self._cached[req.sid] -= req.token_len
+        if req.fork_child is not None:
+            self._abort_fork(req.fork_child)
+        if self._prefix_req.get(req.sid) is req:
+            # the shed request was the prefix ingest that would have
+            # pinned the cache entry — it never runs
+            self._prefix_req.pop(req.sid, None)
+            self._prefix_toks.pop(req.sid, None)
         self._m_shard_shed.labels(shard=str(req.shard)).inc()
         if req.deadline is not None:
             late = self.scheduler.is_late(req)
@@ -757,6 +992,25 @@ class ServeEngine:
                     self._max_mem_groups)
         return replay
 
+    def _maybe_cache_prefix(self, r: Request, sess) -> None:
+        """Pin a just-executed prefix ingest into the prefix cache.
+        Identity-checked against the request recorded at
+        `create_session` (NOT just the sid) so a later ordinary ingest
+        on the same session never caches non-prefix content.  Runs
+        AFTER the batch's scatter + `mark_dirty`, so the incref lands on
+        a row the write guard has already cleared at refcount 1."""
+        if self._prefix_req.get(r.sid) is not r:
+            return
+        self._prefix_req.pop(r.sid, None)
+        ptoks = self._prefix_toks.pop(r.sid, None)
+        if self.prefix_cache is None or ptoks is None:
+            return
+        ent = self.prefix_cache.insert(
+            sess.tenant, ptoks, sess.slot, sess.shard, sess.mem_groups)
+        self.obs.recorder.note(
+            "prefix", f"cached sid={r.sid} slot={ent.slot} "
+                      f"shard={ent.shard} groups={ent.mem_groups}")
+
     def _run_batch(self, batch: ScheduledBatch) -> None:
         mgr = self._mgr[_OP_STATE[batch.kind]]
         arena = mgr.arena
@@ -801,6 +1055,7 @@ class ServeEngine:
                 # controller's footprint accounting
                 sess.mem_groups = min(sess.mem_groups + 1,
                                       self._max_mem_groups)
+                self._maybe_cache_prefix(r, sess)
             mgr.record(r.sid, r.kind, r.tokens[0])
             rec.executed(r, shape)
         rec.note("batch", f"kind={batch.kind} shape={shape} "
@@ -885,6 +1140,7 @@ class ServeEngine:
             if sb.kind == "ingest":
                 sess.mem_groups = min(sess.mem_groups + 1,
                                       self._max_mem_groups)
+                self._maybe_cache_prefix(r, sess)
             mgr.record(r.sid, r.kind, r.tokens[0])
             rec.executed(r, shape)
         valid = sum(r.token_len for r in all_reqs)
@@ -923,39 +1179,61 @@ class ServeEngine:
         n = 0
         t0 = self.obs.clock.now()
         while max_batches is None or n < max_batches:
-            # recomputed per pop: pumped backlog entries can introduce
-            # tenants that were not queued when the drain started
-            caps, default_cap = self.admission.lane_caps()
-            if self.n_shards == 1:
-                batch = self.scheduler.next_batch(caps, default_cap)
-            else:
-                batch = self.scheduler.next_sharded_batches(
-                    self.n_shards, caps, default_cap,
-                    per_shard_cap=self._per_shard_cap,
-                    max_total=self._max_total)
-            if batch is None:
-                pumped = self.admission.pump()
-                if pumped:
-                    for r in pumped:
-                        rec.pumped(r)
-                    continue
-                break
-            self.admission.note_popped(batch.requests)
-            for r in batch.requests:
-                rec.popped(r)
-            if isinstance(batch, ShardedBatch):
-                self._run_sharded_batch(batch)
-            else:
-                self._run_batch(batch)
-            if self.pressure is not None:
-                # drain hook: footprints grew by the batch's ingest
-                # groups / query cache writes AFTER their admission
-                # check — re-absorb past the high watermark so the next
-                # submit doesn't start from a deep deficit
-                self.pressure.maybe_relieve()
-            for r in self.admission.pump():
-                rec.pumped(r)
-            n += 1
+            # pop boundary: the ONLY place a derived-bucket refit may
+            # land.  A pop (especially a sharded one, whose per-shard
+            # sub-batches must share one ladder) and its execution run
+            # under `_popping`; a refit requested meanwhile is deferred
+            # and applied here, before the next pop starts
+            if (self.bucket_policy == "derived"
+                    and self._len_seen - self._len_at_refit
+                    >= self._bucket_refit_interval):
+                self.refit_token_buckets()
+            self._popping = True
+            try:
+                # recomputed per pop: pumped backlog entries can
+                # introduce tenants that were not queued when the drain
+                # started
+                caps, default_cap = self.admission.lane_caps()
+                if self.n_shards == 1:
+                    batch = self.scheduler.next_batch(caps, default_cap)
+                else:
+                    batch = self.scheduler.next_sharded_batches(
+                        self.n_shards, caps, default_cap,
+                        per_shard_cap=self._per_shard_cap,
+                        max_total=self._max_total)
+                if batch is None:
+                    pumped = self.admission.pump()
+                    if pumped:
+                        for r in pumped:
+                            rec.pumped(r)
+                        continue
+                    break
+                self.admission.note_popped(batch.requests)
+                for r in batch.requests:
+                    rec.popped(r)
+                if batch.kind == "fork":
+                    # control-plane only: snapshot the parent at its
+                    # program-order point — no device step runs
+                    for r in batch.requests:
+                        self._exec_fork(r)
+                elif isinstance(batch, ShardedBatch):
+                    self._run_sharded_batch(batch)
+                else:
+                    self._run_batch(batch)
+                if self.pressure is not None:
+                    # drain hook: footprints grew by the batch's ingest
+                    # groups / query cache writes AFTER their admission
+                    # check — re-absorb past the high watermark so the
+                    # next submit doesn't start from a deep deficit
+                    self.pressure.maybe_relieve()
+                for r in self.admission.pump():
+                    rec.pumped(r)
+                n += 1
+            finally:
+                self._popping = False
+            if self._refit_pending:
+                self._refit_pending = False
+                self.refit_token_buckets()
         if n:
             now = self.obs.clock.now()
             for reqs, out in self._undelivered:
@@ -986,7 +1264,13 @@ class ServeEngine:
             for m in self._mgr.values():
                 jax.block_until_ready(jax.tree.leaves(m.arena.slabs)[0])
             self._m["wall_s"].inc(self.obs.clock.now() - t0)
-        if (self.bucket_policy == "derived"
+        if self._refit_pending:
+            # a refit deferred by the final pop (the loop broke before
+            # reaching the next pop boundary) — apply it now, the drain
+            # is over
+            self._refit_pending = False
+            self.refit_token_buckets()
+        elif (self.bucket_policy == "derived"
                 and self._len_seen - self._len_at_refit
                 >= self._bucket_refit_interval):
             # off the hot path: refit between drains so the next drain's
@@ -1085,7 +1369,21 @@ class ServeEngine:
         caps still apply at pop time).  Counted in
         ``serve_bucket_refits_total``; the drain loop calls this
         automatically under ``bucket_policy='derived'`` every
-        ``bucket_refit_interval`` submissions."""
+        ``bucket_refit_interval`` submissions.
+
+        ATOMICITY: a ladder swap must never land between a sharded
+        pop's per-shard sub-batches (they would bucket to different
+        token lengths and the (S, B, L) lanes could not stack).  While
+        the drain loop is inside a pop (``_popping``) the refit is
+        DEFERRED — recorded and applied at the next pop boundary — and
+        the active ladder is returned unchanged."""
+        if self._popping:
+            self._refit_pending = True
+            self._m_refits_deferred.inc()
+            self.obs.recorder.note(
+                "buckets", "refit deferred: pop in progress "
+                           "(applied at the next pop boundary)")
+            return self._token_buckets
         ladder = self.derived_token_buckets()
         self._token_buckets = ladder
         self.scheduler.token_buckets = ladder
@@ -1139,6 +1437,7 @@ class ServeEngine:
             g["slots"].labels(arena=kind, state="live").set(sample["live"])
             g["slots"].labels(arena=kind, state="free").set(sample["free"])
             g["resident"].labels(arena=kind).set(mgr.n_resident)
+            g["shared_rows"].labels(arena=kind).set(sample["shared"])
             errs = arena.consistency_errors()
             probe["probes"].labels(arena=kind).inc()
             if errs:

@@ -47,13 +47,13 @@ from repro.launch.specs import (SERVE_BATCH_BUCKETS, SERVE_TOKEN_BUCKETS,
                                 batch_bucket, token_bucket)
 from repro.obs import MetricsRegistry, MonotonicClock
 
-_KINDS = ("ingest", "query", "stream")
+_KINDS = ("ingest", "query", "stream", "fork")
 
 
 @dataclasses.dataclass
 class Request:
     sid: str
-    kind: str                      # 'ingest' | 'query' | 'stream'
+    kind: str                      # 'ingest' | 'query' | 'stream' | 'fork'
     tokens: np.ndarray             # (1, token_len) int32
     priority: int = 0              # lower drains first
     tenant: str = "default"        # admission-quota group (serve.admission)
@@ -70,6 +70,11 @@ class Request:
     done: bool = False
     cancelled: bool = False        # dropped by close_session, never ran
     shed: bool = False             # dropped by admission overflow, never ran
+    fork_child: Optional[str] = None  # kind='fork' only: the child sid to
+    #                                create when this request executes.
+    #                                Fork requests queue on the PARENT sid
+    #                                (zero tokens) so the snapshot point
+    #                                respects the parent's program order
 
     @property
     def token_len(self) -> int:
@@ -163,6 +168,7 @@ class Scheduler:
         self.edf = bool(edf)
         self.clock = clock if clock is not None else MonotonicClock()
         self._queue: List[Request] = []
+        self._held: set = set()
         self._seq = itertools.count()
         self._round = 0
         reg = metrics or MetricsRegistry()
@@ -316,11 +322,28 @@ class Scheduler:
             r.done = True
         return dropped
 
+    def hold(self, sid: str) -> None:
+        """Gate a session's queued requests out of eligibility until
+        `release`.  The engine holds a fork CHILD from `fork_session`
+        until the creating fork request executes: the child's program
+        starts at the fork, so no priority/deadline reordering may run a
+        child op before the session exists — the cross-session half of
+        the program-order invariant."""
+        self._held.add(sid)
+
+    def release(self, sid: str) -> None:
+        """Lift a `hold` (the fork executed, or was cancelled/shed and
+        the child's queued requests were dropped by the engine)."""
+        self._held.discard(sid)
+
     def _eligible(self) -> List[Request]:
         """Pending requests that are their session's earliest, ordered by
-        `effective_key` (effective priority, deadline-EDF, submission)."""
+        `effective_key` (effective priority, deadline-EDF, submission).
+        Held sessions (fork children awaiting creation) are skipped."""
         earliest = {}
         for r in self._queue:
+            if r.sid in self._held:
+                continue
             if r.sid not in earliest or r.seq < earliest[r.sid].seq:
                 earliest[r.sid] = r
         return sorted(earliest.values(), key=self.effective_key)

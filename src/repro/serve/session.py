@@ -50,6 +50,7 @@ from typing import Any, Callable, Collection, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.launch.serve import cow_clone_slots
 from repro.launch.specs import batch_bucket
 from repro.obs import Observability
 from repro.serve.arena import ArenaFull, SessionArena
@@ -187,7 +188,24 @@ class SessionManager:
         self.resident_quota_of = resident_quota_of or (lambda tenant: None)
         self.sessions: Dict[str, Session] = {}
         self._clock = 0
-        self._inflight: List[Any] = []   # (host buffer, n transfer rows)
+        # async transfers not yet synced: [host buffer, n transfer rows,
+        # shard, {sids whose state rides the buffer}].  The sid set is
+        # how close() severs a closed session from a copy still on the
+        # wire — entries with no surviving sids are dropped instead of
+        # resurrecting host rows at the next sync() (the buffer itself
+        # completes safely under jax's own reference).
+        self._inflight: List[Any] = []
+        # optional hook the engine wires to the prefix cache: called
+        # with a shard id when activation planning needs a free slot,
+        # returns the number of cache-only rows released (0 or 1) —
+        # dropping a cached prefix nobody references is cheaper than
+        # evicting a live session
+        self.cache_release: Optional[Callable[[int], int]] = None
+        # slot-targeted variant: drop the cache pin on ONE specific row
+        # (returns True if an entry held it).  Needed when an eviction
+        # victim's row would otherwise stay alive on a cache pin alone —
+        # evicting the session then frees nothing and activation starves
+        self.cache_unpin: Optional[Callable[[int], bool]] = None
         self._host = jax.devices("cpu")[0]
         self._device = jax.local_devices()[0]
         self._state_bytes = sum(
@@ -240,6 +258,11 @@ class SessionManager:
             "ARENA SHARD (each shard stages its own host copies; the "
             "unlabeled calibration gauge above stays global)",
             labels=("shard",))
+        self._m_cow = reg.counter(
+            "serve_cow_breaks_total",
+            "copy-on-write breaks: shared arena rows cloned into fresh "
+            "slots (one jitted clone per shard per activation) before a "
+            "batch could write them", labels=("shard",))
         for d in ("offload", "restore"):
             for s in range(arena.n_shards):
                 self._m_bytes.labels(dir=d, shard=str(s))
@@ -247,6 +270,7 @@ class SessionManager:
                 self._m_sessions.labels(dir=d, shard=str(s))
         for s in range(arena.n_shards):
             self._g_shard_bw.labels(shard=str(s))
+            self._m_cow.labels(shard=str(s))
 
     def _count_transfer(self, direction: str, n_rows: int, n_sessions: int,
                         seconds: float, measured: bool,
@@ -312,7 +336,83 @@ class SessionManager:
         sess.host_state = None
         sess.history = None
         sess.needs_replay = False
+        # sever the sid from async transfers still on the wire: a
+        # buffer carrying ONLY closed sessions is dropped outright (the
+        # copy completes under jax's own reference and is then
+        # collected) so sync() never books bandwidth for — or retains —
+        # state nobody can restore
+        if self._inflight:
+            for ent in self._inflight:
+                ent[3].discard(sid)
+            self._inflight = [e for e in self._inflight if e[3]]
         return CloseResult(sid, "closed", was_resident=was_resident)
+
+    # -- forks / shared rows -------------------------------------------
+    def fork(self, parent_sid: str, child_sid: str,
+             tenant: Optional[str] = None) -> Session:
+        """Copy-on-write fork: the child starts as a byte-identical
+        branch of the parent at zero device cost.  A RESIDENT parent's
+        arena row is shared (incref — the row is read-only until one of
+        them writes, at which point `activate_batch` clones it); an
+        OFFLOADED parent's host tree is shared by reference (immutable
+        on host — each restore scatters into its own fresh slot); a
+        recompute-dropped parent propagates ``needs_replay`` with the
+        copied history.  The child pins to the parent's shard — forks
+        never cross a device boundary."""
+        parent = self.sessions.get(parent_sid)
+        if parent is None:
+            raise ValueError(f"unknown parent session {parent_sid!r}")
+        child = self.create(child_sid, tenant or parent.tenant,
+                            parent.shard)
+        self._clock += 1
+        child.last_used = self._clock
+        if parent.history is not None:
+            child.history = list(parent.history)
+        child.history_tokens = parent.history_tokens
+        child.mem_groups = parent.mem_groups
+        child.n_ops = parent.n_ops
+        if parent.resident:
+            self.arena.incref(parent.slot)
+            child.slot = parent.slot
+            child.fresh = False
+        elif parent.host_state is not None:
+            child.host_state = parent.host_state   # shared immutable tree
+            child.fresh = False
+            # the parent's state may still be an async transfer on the
+            # wire — the child's restore must order behind it too
+            for ent in self._inflight:
+                if parent_sid in ent[3]:
+                    ent[3].add(child_sid)
+        elif parent.needs_replay:
+            child.needs_replay = True
+            child.fresh = False
+        # else: parent never activated — the child is fresh too (both
+        # zero-init on first activation)
+        self.obs.recorder.note(
+            "fork", f"parent={parent_sid} child={child_sid} "
+                    f"shard={parent.shard} "
+                    f"shared_slot={parent.slot if parent.resident else None}")
+        return child
+
+    def adopt_row(self, sid: str, tenant: str, shard: int, slot: int,
+                  mem_groups: int = 0) -> Session:
+        """Create a session attached to an EXISTING live arena row
+        (prefix-cache dedup hit): increfs the row and starts the session
+        resident on it, read-only until its first write COW-breaks."""
+        sess = self.create(sid, tenant, shard)
+        self.arena.incref(slot)
+        sess.slot = slot
+        sess.fresh = False
+        sess.mem_groups = mem_groups
+        self._clock += 1
+        sess.last_used = self._clock
+        return sess
+
+    def slot_sharers(self, slot: int) -> List[str]:
+        """Resident sids currently holding ``slot`` (refcount holders
+        that are sessions; a prefix-cache entry can hold one more)."""
+        return sorted(s.sid for s in self.sessions.values()
+                      if s.slot == slot)
 
     @property
     def n_resident(self) -> int:
@@ -348,23 +448,40 @@ class SessionManager:
     def activate_batch(self, sids, pinned: Collection[str] = ()) -> list:
         """Make every session in ``sids`` resident and return their slots.
 
-        Three phases, each one device dispatch for the whole batch:
+        Four phases, each one device dispatch for the whole batch:
         (1) plan — walk the batch in order, picking every eviction
         victim up front (tenant-quota LRU first, then global LRU for
         the ``max_resident`` budget, then the owning SHARD's LRU when
         that shard is out of free slots — a full shard evicts its own
         victim even while other shards have room, since sessions never
-        migrate); (2) evict — ONE batched offload of all victims
-        (staged per shard inside `offload_batch`); (3) admit — allocate
-        slots on each session's own shard, zero fresh sessions with one
-        batched scatter, restore offloaded sessions with one stacked
-        `device_put` + scatter per shard, and replay recompute-dropped
-        sessions from their history."""
+        migrate).  Slot scarcity is REFCOUNT-AWARE: evicting a session
+        that shares its row only frees the slot when no other holder
+        remains, and cache-only prefix rows are released (engine-wired
+        ``cache_release`` hook) before any live session is evicted.
+        Batch sessions sitting on a SHARED row additionally reserve a
+        fresh slot for their copy-on-write break — a write must never
+        scatter into a row with refcount > 1; (2) evict — ONE batched
+        offload of all victims (staged per shard, one transfer per
+        unique row inside `offload_batch`); (3) COW-break — clone every
+        still-shared batch row into its reserved slot with one jitted
+        `cow_clone_slots` per shard and drop the reference on the
+        shared original; (4) admit — allocate slots on each session's
+        own shard, zero fresh sessions with one batched scatter,
+        restore offloaded sessions with one stacked `device_put` +
+        scatter per shard, and replay recompute-dropped sessions from
+        their history."""
         untouchable = set(pinned) | set(sids)
         res = {s.sid: s for s in self.sessions.values() if s.resident}
         victims: List[Session] = []
         avail = [self.arena.shard_free(s)
                  for s in range(self.arena.n_shards)]
+        # planned refcounts: eviction decrefs are staged here so the
+        # planner knows which evictions actually free a slot (a shared
+        # row survives until its last holder goes)
+        plan_ref: Dict[int, int] = {}
+
+        def ref_left(slot: int) -> int:
+            return plan_ref.get(slot, self.arena.refcount(slot))
 
         def evict_one(pool, why="batch size exceeds arena capacity"):
             cands = [s for s in pool if s.sid not in untouchable]
@@ -373,15 +490,49 @@ class SessionManager:
             v = min(cands, key=lambda s: s.last_used)
             victims.append(v)
             del res[v.sid]
-            avail[v.shard] += 1
+            plan_ref[v.slot] = ref_left(v.slot) - 1
+            if plan_ref[v.slot] == 0:
+                avail[v.shard] += 1
             return v
 
+        def make_room(shard: int, why: str) -> None:
+            while avail[shard] == 0:
+                if self.cache_release is not None \
+                        and self.cache_release(shard):
+                    avail[shard] += 1
+                    continue
+                v = evict_one([s for s in res.values()
+                               if s.shard == shard], why=why)
+                # the victim's row may stay alive on a prefix-cache pin
+                # alone — drop that pin too, else the eviction frees no
+                # slot and the loop starves out of candidates
+                if (plan_ref.get(v.slot, 0) > 0
+                        and self.cache_unpin is not None
+                        and self.cache_unpin(v.slot)):
+                    plan_ref[v.slot] -= 1
+                    if plan_ref[v.slot] == 0:
+                        avail[v.shard] += 1
+
         need: List[str] = []
+        cow: List[Session] = []
+        cow_sids = set()
         for sid in sids:
             sess = self.sessions[sid]
             self._clock += 1
             sess.last_used = self._clock
-            if sess.resident or sid in need:
+            if sess.resident:
+                # a batch session on a shared row needs a private copy
+                # before the step's scatter — reserve a slot for the
+                # COW break on its own shard
+                if sid not in cow_sids and ref_left(sess.slot) > 1:
+                    cow_sids.add(sid)
+                    cow.append(sess)
+                    make_room(sess.shard,
+                              why=f"shard {sess.shard} has no free slot "
+                                  "for a copy-on-write break")
+                    avail[sess.shard] -= 1
+                continue
+            if sid in need:
                 continue
             quota = self.resident_quota_of(sess.tenant)
             if quota is not None:
@@ -391,17 +542,17 @@ class SessionManager:
                                if s.tenant == sess.tenant])
             while len(res) >= self.max_resident:
                 evict_one(res.values())
-            while avail[sess.shard] == 0:
-                evict_one([s for s in res.values()
-                           if s.shard == sess.shard],
-                          why=f"shard {sess.shard} has no free slot and "
-                              "no evictable resident")
+            make_room(sess.shard,
+                      why=f"shard {sess.shard} has no free slot and "
+                          "no evictable resident")
             res[sid] = sess          # planned resident
             need.append(sid)
             avail[sess.shard] -= 1
 
         if victims:
             self.offload_batch([v.sid for v in victims])
+        if cow:
+            self._cow_break(cow)
 
         fresh_slots, replay, restore = [], [], []
         for sid in need:
@@ -439,6 +590,38 @@ class SessionManager:
             self.obs.recorder.note(
                 "replay", f"sid={sess.sid} tokens={sess.history_tokens}")
         return [self.sessions[sid].slot for sid in sids]
+
+    def _cow_break(self, sess_list: List[Session]) -> None:
+        """Clone each session's shared row into a freshly allocated slot
+        on its own shard (one jitted `cow_clone_slots` per shard, padded
+        to a bucket with scratch-row self-copies) and drop the
+        reference on the shared original — the siblings' row is never
+        written.  Sessions whose row stopped being shared since
+        planning (a sibling was evicted or closed meanwhile) keep their
+        slot; the conservative reservation is simply unused."""
+        todo = [s for s in sess_list if self.arena.shared(s.slot)]
+        by_shard: Dict[int, List[Session]] = {}
+        for sess in todo:
+            by_shard.setdefault(sess.shard, []).append(sess)
+        for shard in sorted(by_shard):
+            group = by_shard[shard]
+            src = [s.slot for s in group]
+            dst = [self.arena.alloc(shard) for _ in group]
+            n = self._bucket(len(group))
+            pad = self.arena.pad_slot_of(shard)
+            src_ids = np.asarray(src + [pad] * (n - len(src)), np.int32)
+            dst_ids = np.asarray(dst + [pad] * (n - len(dst)), np.int32)
+            self.arena.slabs = cow_clone_slots(
+                self.arena.slabs, src_ids, dst_ids)
+            for sess, new in zip(group, dst):
+                old = sess.slot
+                sess.slot = new
+                self.arena.free(old)          # drop ref; siblings keep it
+            self.arena.mark_dirty(dst)
+            self._m_cow.labels(shard=str(shard)).inc(len(group))
+            self.obs.recorder.note(
+                "cow_break", f"shard={shard} rows={len(group)} "
+                             f"src={src} dst={dst}")
 
     # -- offload -------------------------------------------------------
     def _classify(self, sid: str) -> Optional[OffloadResult]:
@@ -514,7 +697,7 @@ class SessionManager:
         t0 = self.obs.clock.now()
         host = jax.device_put(state, self._host)
         if self.async_offload:
-            self._inflight.append((host, 1, sess.shard))
+            self._inflight.append([host, 1, sess.shard, {sid}])
         else:
             host = jax.block_until_ready(host)
         self._count_transfer("offload", 1, 1, self.obs.clock.now() - t0,
@@ -557,22 +740,36 @@ class SessionManager:
             by_shard.setdefault(sess.shard, []).append(sess)
         for shard in sorted(by_shard):
             group = by_shard[shard]
-            slots = [s.slot for s in group]
-            n = self._bucket(len(slots))
-            ids = slots + [self.arena.pad_slot_of(shard)] * (n - len(slots))
+            # sessions sharing one row (COW siblings never diverged)
+            # stage ONE transfer lane for that row; every sibling's
+            # host_state references the same lane
+            lane_of: Dict[int, int] = {}
+            uniq: List[int] = []
+            for sess in group:
+                if sess.slot not in lane_of:
+                    lane_of[sess.slot] = len(uniq)
+                    uniq.append(sess.slot)
+            n = self._bucket(len(uniq))
+            ids = uniq + [self.arena.pad_slot_of(shard)] * (n - len(uniq))
             packed = self.arena.pack(ids)
             t0 = self.obs.clock.now()
             host = jax.device_put(packed, self._host)
             if self.async_offload:
-                self._inflight.append((host, n, shard))
+                self._inflight.append(
+                    [host, n, shard, {s.sid for s in group}])
             else:
                 host = jax.block_until_ready(host)
             self._count_transfer("offload", n, len(group),
                                  self.obs.clock.now() - t0,
                                  measured=not self.async_offload,
                                  shard=shard)
-            for i, sess in enumerate(group):
-                sess.host_state = jax.tree.map(lambda x, i=i: x[i], host)
+            row_host: Dict[int, Any] = {}
+            for sess in group:
+                if sess.slot not in row_host:
+                    i = lane_of[sess.slot]
+                    row_host[sess.slot] = jax.tree.map(
+                        lambda x, i=i: x[i], host)
+                sess.host_state = row_host[sess.slot]
                 self.arena.free(sess.slot)
                 sess.slot = None
                 sess.n_offloads += 1
@@ -651,7 +848,7 @@ class SessionManager:
         t0 = self.obs.clock.now()
         rows = 0
         shard_rows: Dict[int, int] = {}
-        for t, n, shard in self._inflight:
+        for t, n, shard, _sids in self._inflight:
             jax.block_until_ready(t)
             rows += n
             shard_rows[shard] = shard_rows.get(shard, 0) + n

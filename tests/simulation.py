@@ -19,8 +19,13 @@ cross-check that the null-step harness doesn't diverge structurally).
 Events are plain tuples (hypothesis-friendly):
 
   ("create",  sid, tenant)          # online session (auto on first use)
+  ("create",  sid, tenant, plen)    # ... opening with a deterministic
+                                    # prefix of plen tokens (content is a
+                                    # pure function of plen, so equal
+                                    # lengths dedup via the prefix cache)
   ("submit",  sid, op, length, priority, tenant)
   ("submit",  sid, op, length, priority, tenant, rel_deadline)
+  ("fork",    parent_sid, child_sid)  # scheduled copy-on-write fork
   ("run",     max_batches)          # drain up to N batches
   ("offload", sid)                  # explicit offload (may be a no-op)
   ("close",   sid)                  # cancel queued + drop state
@@ -61,8 +66,10 @@ OPS = ("ingest", "query")
 
 # shared traffic-model vocabulary (used by every property suite)
 SIDS = tuple(f"s{i}" for i in range(5))
+FORK_SIDS = tuple(f"f{i}" for i in range(4))   # fork-child sid pool
 LENGTHS = (1, 2, 3, 5, 8, 13)
 PRIORITIES = (0, 1, 2, 3)
+PREFIX_LENS = (4, 4, 8)        # repeats on purpose: equal lengths dedup
 
 
 def tenant_of(sid: str) -> str:
@@ -82,16 +89,33 @@ def expand_event(ev: Tuple) -> Tuple:
 
 def random_events(rng, n: int, *, sids=SIDS, ops=OPS, lengths=LENGTHS,
                   priorities=PRIORITIES, tenants=None, rel_deadlines=None,
-                  max_run: int = 3) -> List[Tuple]:
+                  max_run: int = 3, fork_sids=None,
+                  prefix_lens=None) -> List[Tuple]:
     """Seeded trace generator over the shared traffic model
     (``rng``: `numpy.random.RandomState`).  ``tenants=None`` derives
     tenants via `tenant_of`; ``rel_deadlines`` (a tuple possibly
-    containing None) adds the 7th submit element."""
+    containing None) adds the 7th submit element.
+
+    ``fork_sids`` (a child-sid pool, e.g. `FORK_SIDS`) mixes in fork
+    events — parents drawn from ``sids`` + the pool itself, so fork
+    trees grow several levels deep; ``prefix_lens`` mixes in 4-tuple
+    prefix creates (equal lengths dedup via the prefix cache).  Both
+    default off so the pre-fork property suites fuzz unchanged
+    traffic."""
+    all_sids = tuple(sids) + (tuple(fork_sids) if fork_sids else ())
     evs: List[Tuple] = []
     for _ in range(n):
         roll = rng.rand()
-        if roll < 0.55:
-            sid = sids[rng.randint(len(sids))]
+        if fork_sids and roll < 0.10:
+            parent = all_sids[rng.randint(len(all_sids))]
+            child = fork_sids[rng.randint(len(fork_sids))]
+            evs.append(("fork", parent, child))
+        elif prefix_lens is not None and roll < 0.18:
+            sid = all_sids[rng.randint(len(all_sids))]
+            evs.append(("create", sid, tenant_of(sid),
+                        int(prefix_lens[rng.randint(len(prefix_lens))])))
+        elif roll < 0.55:
+            sid = all_sids[rng.randint(len(all_sids))]
             ev = ["submit", sid, ops[rng.randint(len(ops))],
                   int(lengths[rng.randint(len(lengths))]),
                   int(priorities[rng.randint(len(priorities))]),
@@ -103,21 +127,24 @@ def random_events(rng, n: int, *, sids=SIDS, ops=OPS, lengths=LENGTHS,
         elif roll < 0.75:
             evs.append(("run", int(rng.randint(1, max_run + 1))))
         elif roll < 0.85:
-            evs.append(("offload", sids[rng.randint(len(sids))]))
+            evs.append(("offload", all_sids[rng.randint(len(all_sids))]))
         else:
-            evs.append(("close", sids[rng.randint(len(sids))]))
+            evs.append(("close", all_sids[rng.randint(len(all_sids))]))
     return evs
 
 
 def event_strategy(*, sids=SIDS, ops=OPS, lengths=LENGTHS,
                    priorities=PRIORITIES, tenants=None, rel_deadlines=None,
-                   max_run: int = 3):
+                   max_run: int = 3, fork_sids=None, prefix_lens=None):
     """Hypothesis strategy over the same traffic model as
     `random_events` (imported lazily so this module stays usable
-    without hypothesis installed)."""
+    without hypothesis installed).  ``fork_sids`` / ``prefix_lens``
+    mix in fork and prefix-create events exactly as in
+    `random_events`."""
     from hypothesis import strategies as st
 
-    parts = [st.sampled_from(sids), st.sampled_from(ops),
+    all_sids = tuple(sids) + (tuple(fork_sids) if fork_sids else ())
+    parts = [st.sampled_from(all_sids), st.sampled_from(ops),
              st.sampled_from(lengths), st.sampled_from(priorities)]
     if tenants is not None:
         parts.append(st.sampled_from(tenants))
@@ -130,11 +157,22 @@ def event_strategy(*, sids=SIDS, ops=OPS, lengths=LENGTHS,
         tenant = t.pop() if tenants is not None else tenant_of(t[0])
         return ("submit", t[0], t[1], t[2], t[3], tenant) + rel
 
-    return st.one_of(
+    options = [
         st.tuples(*parts).map(mk_submit),
         st.tuples(st.just("run"), st.integers(1, max_run)),
-        st.tuples(st.just("offload"), st.sampled_from(sids)),
-        st.tuples(st.just("close"), st.sampled_from(sids)))
+        st.tuples(st.just("offload"), st.sampled_from(all_sids)),
+        st.tuples(st.just("close"), st.sampled_from(all_sids))]
+    if fork_sids:
+        options.append(st.tuples(st.just("fork"),
+                                 st.sampled_from(all_sids),
+                                 st.sampled_from(tuple(fork_sids))))
+    if prefix_lens is not None:
+        options.append(st.tuples(st.just("create"),
+                                 st.sampled_from(all_sids),
+                                 st.sampled_from(prefix_lens))
+                       .map(lambda t: ("create", t[1], tenant_of(t[1]),
+                                       t[2])))
+    return st.one_of(*options)
 
 
 @dataclasses.dataclass
@@ -157,6 +195,9 @@ class Snapshot:
     shard_resident: List[int] = dataclasses.field(default_factory=list)
     shard_open: List[int] = dataclasses.field(default_factory=list)
     shard_free: List[int] = dataclasses.field(default_factory=list)
+    refcounts: List[str] = dataclasses.field(default_factory=list)
+    #                                     # refcount-conservation errors
+    shared_rows: int = 0                  # rows with refcount > 1
 
 
 @dataclasses.dataclass
@@ -303,8 +344,15 @@ class ServeSimulation:
             self.clock.advance(1.0)       # one simulated second per event
         kind = event[0]
         if kind == "create":
-            _, sid, tenant = event
-            self._ensure_session(sid, tenant)
+            if len(event) == 4:
+                _, sid, tenant, plen = event
+                self._apply_prefix_create(sid, tenant, int(plen))
+            else:
+                _, sid, tenant = event
+                self._ensure_session(sid, tenant)
+        elif kind == "fork":
+            _, parent, child = event
+            self._apply_fork(parent, child)
         elif kind == "submit":
             _, sid, op, length, priority, tenant = event[:6]
             rel = event[6] if len(event) > 6 else None
@@ -324,6 +372,33 @@ class ServeSimulation:
         snap = self.snapshot(event)
         self.snapshots.append(snap)
         return snap
+
+    def _apply_prefix_create(self, sid: str, tenant: str,
+                             plen: int) -> None:
+        """4-tuple create: open the session with a deterministic prefix
+        whose content is a pure function of its length — equal lengths
+        within one tenant dedup via the prefix cache."""
+        if sid in self.engine._kind or sid in self._closed_for_good:
+            self._skipped += 1
+            return
+        toks = (np.arange(plen, dtype=np.int32) * 7 + plen) % 101
+        self.engine.create_session(sid, tenant=tenant,
+                                   prefix_tokens=toks)
+
+    def _apply_fork(self, parent: str, child: str) -> None:
+        """Fork event: skipped (caller-contract) when the parent is
+        unknown/closed or the child sid is taken; fork-of-a-pending-
+        child parents are VALID — the scheduler hold chains the
+        grandchild fork behind its parent's creation."""
+        eng = self.engine
+        if (parent not in eng._kind
+                or child in eng._kind
+                or child in eng._pending_forks
+                or child in self._closed_for_good
+                or parent == child):
+            self._skipped += 1
+            return
+        eng.fork_session(parent, child)
 
     def _apply_submit(self, sid, op, length, priority, tenant,
                       rel_deadline=None) -> None:
@@ -386,6 +461,8 @@ class ServeSimulation:
             true_queued_tokens=true_q,
             backlog=len(eng.admission.backlog),
             consistency=mgr.arena.consistency_errors(),
+            refcounts=self.refcount_ledger(),
+            shared_rows=len(mgr.arena.shared_slots()),
             admission_counters=dict(eng.admission.stats),
             pressure_used=(eng.pressure.used_tokens()
                            if eng.pressure is not None else None),
@@ -398,6 +475,32 @@ class ServeSimulation:
             shard_open=mgr.shard_load(),
             shard_free=[mgr.arena.shard_free(s)
                         for s in range(eng.n_shards)])
+
+    def refcount_ledger(self) -> List[str]:
+        """Refcount conservation: every live online-arena row's refcount
+        must equal its holder count — resident sessions on the slot plus
+        prefix-cache entries pinning it.  Returns violations (empty =
+        conserved)."""
+        eng = self.engine
+        mgr = eng._mgr["online"]
+        holders: Dict[int, int] = {}
+        for sess in mgr.sessions.values():
+            if sess.resident:
+                holders[sess.slot] = holders.get(sess.slot, 0) + 1
+        if eng.prefix_cache is not None:
+            for ent in eng.prefix_cache._entries.values():
+                holders[ent.slot] = holders.get(ent.slot, 0) + 1
+        errs = []
+        for slot in sorted(mgr.arena._live):
+            want = holders.get(slot, 0)
+            got = mgr.arena.refcount(slot)
+            if got != want:
+                errs.append(f"slot {slot}: refcount {got} != "
+                            f"{want} holders")
+        for slot in sorted(holders):
+            if slot not in mgr.arena._live:
+                errs.append(f"slot {slot}: held but not allocated")
+        return errs
 
     @staticmethod
     def _shard_resident(mgr) -> List[int]:

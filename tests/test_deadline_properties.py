@@ -201,10 +201,39 @@ def check_conservation(sim):
                 assert e["late"] == (entry["now"] > e["deadline"])
 
 
+def check_disposition_conservation(sim):
+    """4b: every deadline-carrying request reaches EXACTLY ONE terminal
+    disposition — met, missed, shed or cancelled — so the families sum
+    back to ``serve_deadline_requests_total`` (minus any request still
+    sitting in the queue/backlog when the trace ends).  The cancelled
+    family is the regression: `close_session` used to drop queued
+    deadline requests without any terminal count, leaking the
+    conservation on every close."""
+    eng = sim.engine
+    kinds = ("ingest", "query", "stream", "fork")
+    fam = eng._m_deadline
+    requests = sum(int(fam["requests"].labels(kind=k).value)
+                   for k in kinds)
+    met = sum(int(fam["met"].labels(kind=k).value) for k in kinds)
+    missed = sum(int(fam["missed"].labels(kind=k).value) for k in kinds)
+    cancelled = sum(int(fam["cancelled"].labels(kind=k).value)
+                    for k in kinds)
+    shed = sum(int(fam["shed"].labels(late=y).value)
+               for y in ("yes", "no"))
+    still_pending = sum(
+        1 for r in list(eng.scheduler._queue) + list(eng.admission.backlog)
+        if r.deadline is not None)
+    assert met + missed + shed + cancelled + still_pending == requests, (
+        f"deadline dispositions leak: met={met} missed={missed} "
+        f"shed={shed} cancelled={cancelled} pending={still_pending} "
+        f"!= requests={requests}")
+
+
 def check_trace(sim):
     check_pops(sim)
     check_shed_decisions(sim)
     check_conservation(sim)
+    check_disposition_conservation(sim)
     for r in sim._submitted:                   # terminal resolution
         assert r.done
 
@@ -340,6 +369,26 @@ def test_met_missed_accounting(tiny_cfg):
     assert (met, missed, n_obs) == (3, 0, 0)
     met, missed, n_obs = drive(0.5)     # late before the run event fires
     assert (met, missed, n_obs) == (0, 3, 3)
+
+
+def test_cancelled_deadline_requests_get_terminal_disposition(tiny_cfg):
+    """Targeted satellite regression: closing a session with queued
+    deadline-carrying requests must emit the ``cancelled`` disposition
+    for each — before the fix they were counted in
+    ``serve_deadline_requests_total`` but never reached met/missed, so
+    the conservation met+missed+shed+cancelled == requests broke on
+    every close."""
+    sim = ServeSimulation(tiny_cfg, n_slots=3)
+    sim.apply(("submit", "s0", "ingest", 2, 0, "t0", 10.0))
+    sim.apply(("submit", "s0", "query", 2, 0, "t0", 10.0))
+    sim.apply(("submit", "s1", "ingest", 2, 0, "t1", 10.0))
+    sim.apply(("close", "s0"))            # 2 queued deadline reqs dropped
+    fam = sim.engine._m_deadline
+    assert int(fam["cancelled"].labels(kind="ingest").value) == 1
+    assert int(fam["cancelled"].labels(kind="query").value) == 1
+    sim.finish()                          # s1 delivers -> met
+    check_trace(sim)                      # incl. disposition conservation
+    assert int(fam["met"].labels(kind="ingest").value) == 1
 
 
 def test_aging_rescues_starved_request_under_edf(tiny_cfg):

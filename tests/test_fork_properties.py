@@ -1,0 +1,455 @@
+"""Fork / prefix-dedup property suite over the serve simulation.
+
+Fork- and prefix-heavy traces run through `tests/simulation.py` (REAL
+engine/arena/session/prefix objects, null compute step) and a model
+checker asserts, at EVERY event:
+
+  1. refcount conservation — every live arena row's refcount equals its
+     holder count (resident sessions on the slot + prefix-cache entries
+     pinning it), via `ServeSimulation.refcount_ledger`;
+  2. free-list integrity — `SessionArena.consistency_errors()` stays
+     empty: no double-free, no leaked slot, and crucially no
+     "shared-row write attempted" violation (a scatter must never land
+     on a row with refcount > 1 — the COW break has to run first);
+
+and at end of trace (after `finish()` drains to quiescence):
+
+  3. fork hygiene — no fork is left pending, no child sid is left held
+     in the scheduler, and every submitted request reached a terminal
+     disposition.
+
+NOTE the suite deliberately does NOT assert the pre-fork shard
+invariant `shard_free[s] == slots_per_shard - shard_resident[s]`:
+with row sharing two resident sessions can hold ONE slot, so free +
+resident no longer tiles the shard.  The refcount ledger is the
+sharing-aware replacement.
+
+Real-params tests (tiny model, same idiom as test_serve.py) prove the
+numerics: COW isolation (a forked parent's and child's logits each
+bit-match unforked controls), shared-row offload keeping siblings
+readable, and prefix-dedup hits serving the same logits as a fresh
+compression.  Satellite regressions ride along: close() vs an async
+offload still in flight, duplicate sids in batch calls, and the
+derived-bucket refit deferring to a pop boundary.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import inference as I
+from repro.launch.serve import make_null_step
+from repro.models import transformer as T
+from repro.serve import PressurePolicy
+from repro.serve.arena import SessionArena
+from repro.serve.engine import ServeEngine
+from repro.serve.session import SessionManager
+
+from simulation import (FORK_SIDS, PREFIX_LENS, ServeSimulation,
+                        event_strategy, random_events)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- the model checker --------------------------------------------------
+
+def check_fork_trace(sim):
+    """Refcount conservation + free-list integrity at every event;
+    fork hygiene and terminal resolution at quiescence."""
+    for snap in sim.snapshots:
+        assert snap.consistency == [], \
+            f"arena integrity broken after {snap.event}: {snap.consistency}"
+        assert snap.refcounts == [], \
+            f"refcount leak after {snap.event}: {snap.refcounts}"
+    eng = sim.engine
+    assert eng._pending_forks == set(), \
+        f"forks left pending at quiescence: {eng._pending_forks}"
+    assert not eng.scheduler._held, \
+        f"child sids left held at quiescence: {eng.scheduler._held}"
+    for r in sim._submitted:
+        assert r.done, f"request {r.sid}/{r.kind} never resolved"
+    # a closed/quiescent trace must also conserve refcounts one last
+    # time (snapshots already checked it per event; this catches drift
+    # inside the final drain itself)
+    assert sim.refcount_ledger() == []
+
+
+def _conf(rng):
+    return {
+        "policy": ("block", "shed-lowest-priority",
+                   "reject-new")[rng.randint(3)],
+        "max_queued_tokens": (None, 12, 24)[rng.randint(3)],
+        "n_slots": (4, 6, 8)[rng.randint(3)],   # even: divide n_shards=2
+        "aging": (0, 3)[rng.randint(2)],
+        "n_shards": (1, 2)[rng.randint(2)],
+    }
+
+
+def build_sim(cfg, conf):
+    return ServeSimulation(
+        cfg, n_slots=conf["n_slots"], policy=conf["policy"],
+        max_queued_tokens=conf["max_queued_tokens"],
+        aging=conf["aging"], n_shards=conf.get("n_shards", 1))
+
+
+def run_trace(cfg, events, conf):
+    sim = build_sim(cfg, conf)
+    for ev in events:
+        sim.apply(ev)
+    sim.finish()
+    check_fork_trace(sim)
+    return sim
+
+
+FORK_TRAFFIC = dict(fork_sids=FORK_SIDS, prefix_lens=PREFIX_LENS)
+
+
+# -- seeded sweeps (run without hypothesis) -----------------------------
+
+def test_seeded_fork_traces_uphold_invariants(tiny_cfg):
+    rng = np.random.RandomState(20260814)
+    forks = shares = 0
+    for _ in range(25):
+        sim = run_trace(tiny_cfg, random_events(rng, 35, **FORK_TRAFFIC),
+                        _conf(rng))
+        forks += int(sim.engine._m_fork.value)
+        shares += sum(s.shared_rows for s in sim.snapshots)
+    # the sweep must actually exercise the machinery it checks
+    assert forks > 0, "sweep never executed a fork"
+    assert shares > 0, "sweep never observed a shared row"
+
+
+def test_seeded_sharded_fork_traces(tiny_cfg):
+    """Sharded variant: children pin to the parent's shard, shared-row
+    offload dedups per shard, and the sharded pop carries fork batches.
+    n_shards=4 runs the loop path on one device; under CI's 4-forced-
+    device job the same test exercises real per-device slabs."""
+    rng = np.random.RandomState(20260815)
+    conf = {"policy": "block", "max_queued_tokens": None,
+            "n_slots": 8, "aging": 3, "n_shards": 4}
+    forks = 0
+    for _ in range(10):
+        sim = run_trace(tiny_cfg, random_events(rng, 35, **FORK_TRAFFIC),
+                        conf)
+        forks += int(sim.engine._m_fork.value)
+        eng = sim.engine
+        mgr = eng._mgr["online"]
+        for sess in mgr.sessions.values():      # children on parent shard
+            assert 0 <= sess.shard < 4
+    assert forks > 0
+
+
+def test_fork_trees_nest_and_abort_cleanly(tiny_cfg):
+    """Grandchild forks chain on held children; closing the root before
+    the drain aborts the whole pending subtree without leaking holds,
+    side tables or refcounts."""
+    sim = ServeSimulation(tiny_cfg, n_slots=4)
+    sim.apply(("submit", "s0", "ingest", 4, 0, "t0"))
+    sim.apply(("fork", "s0", "f0"))      # child queued on s0
+    sim.apply(("fork", "f0", "f1"))      # grandchild queued on held f0
+    sim.apply(("submit", "f1", "query", 2, 0, "t0"))   # held, must wait
+    sim.apply(("close", "s0"))           # aborts f0 -> recursively f1
+    sim.finish()
+    check_fork_trace(sim)
+    eng = sim.engine
+    assert "f0" not in eng._kind and "f1" not in eng._kind
+    assert int(eng._m_fork.value) == 0
+    # the same shape WITHOUT the close executes the whole tree
+    sim2 = ServeSimulation(tiny_cfg, n_slots=4)
+    sim2.apply(("submit", "s0", "ingest", 4, 0, "t0"))
+    sim2.apply(("fork", "s0", "f0"))
+    sim2.apply(("fork", "f0", "f1"))
+    sim2.apply(("submit", "f1", "query", 2, 0, "t0"))
+    sim2.finish()
+    check_fork_trace(sim2)
+    assert int(sim2.engine._m_fork.value) == 2
+    assert set(sim2.engine._mgr["online"].sessions) == {"s0", "f0", "f1"}
+
+
+# -- hypothesis fuzz ----------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    EVENTS = st.lists(event_strategy(**FORK_TRAFFIC), max_size=40)
+    CONFIGS = st.fixed_dictionaries({
+        "policy": st.sampled_from(("block", "shed-lowest-priority",
+                                   "reject-new")),
+        "max_queued_tokens": st.sampled_from((None, 12, 24)),
+        "n_slots": st.sampled_from((4, 6, 8)),
+        "aging": st.sampled_from((0, 3)),
+        "n_shards": st.sampled_from((1, 2)),
+    })
+
+    @given(events=EVENTS, conf=CONFIGS)
+    @settings(max_examples=120, deadline=None)
+    def test_property_fork_traces_uphold_invariants(tiny_cfg, events,
+                                                    conf):
+        run_trace(tiny_cfg, events, conf)
+else:
+    def test_property_fork_traces_uphold_invariants():
+        pytest.skip("property fuzz needs hypothesis")
+
+
+# -- real-model numerics ------------------------------------------------
+
+@pytest.fixture(scope="module")
+def params(tiny_cfg):
+    return T.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _tokens(key, n, vocab=128):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(key), (n,), 0, vocab, dtype=np.int32))
+
+
+def _direct_logits(params, cfg, chunks, query, cache_len=32):
+    st = I.init_online_state(cfg, 1, max_cache_len=cache_len)
+    for c in chunks:
+        st = I.ingest_context(params, cfg, st, c[None])
+    lg, _ = I.prefill(params, cfg, st, query[None], full_logits=True)
+    return np.asarray(lg[0])
+
+
+def test_fork_cow_isolation(tiny_cfg, params):
+    """The tentpole numeric: after a fork, a parent write COW-breaks
+    away from the shared row — the child's logits bit-match a control
+    that never saw the parent's post-fork ingest, and the parent's
+    match a control that ingested both chunks."""
+    c1, c2, q = _tokens(1, 8), _tokens(2, 8), _tokens(3, 4)
+    eng = ServeEngine(params, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4))
+    eng.create_session("p")
+    eng.ingest("p", c1)
+    eng.run()
+    eng.fork_session("p", "c")
+    eng.ingest("p", c2)                  # queues BEHIND the fork on p
+    rp = eng.query("p", q).request
+    rc = eng.query("c", q).request
+    eng.run()
+    np.testing.assert_allclose(
+        np.asarray(rp.result), _direct_logits(params, tiny_cfg, [c1, c2], q),
+        atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(rc.result), _direct_logits(params, tiny_cfg, [c1], q),
+        atol=1e-5)
+    mgr = eng._mgr["online"]
+    assert mgr.arena.consistency_errors() == []
+    assert int(eng._m_fork.value) == 1
+    cow = sum(int(mgr._m_cow.labels(shard=str(s)).value)
+              for s in range(mgr.arena.n_shards))
+    assert cow >= 1, "parent write never COW-broke the shared row"
+
+
+def test_fork_shared_row_offload_keeps_siblings_readable(tiny_cfg, params):
+    """Offloading one holder of a shared row must not tear the row out
+    from under its siblings: after offload + restore, parent and child
+    both still serve the pre-fork logits."""
+    c1, q = _tokens(11, 8), _tokens(12, 4)
+    want = _direct_logits(params, tiny_cfg, [c1], q)
+    eng = ServeEngine(params, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4))
+    eng.create_session("p")
+    eng.ingest("p", c1)
+    eng.run()
+    eng.fork_session("p", "c")
+    eng.run()                            # execute the fork -> shared row
+    mgr = eng._mgr["online"]
+    assert mgr.arena.shared(mgr.sessions["p"].slot)
+    eng.offload_session("p")             # parent leaves the shared row
+    assert not mgr.sessions["p"].resident
+    assert mgr.sessions["c"].resident    # sibling keeps it
+    rp = eng.query("p", q).request       # restore path
+    rc = eng.query("c", q).request       # still-resident path
+    eng.run()
+    np.testing.assert_allclose(np.asarray(rp.result), want, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rc.result), want, atol=1e-5)
+    assert mgr.arena.consistency_errors() == []
+
+
+def test_prefix_dedup_hits_match_fresh_compression(tiny_cfg, params):
+    """Two sessions opening with the same tenant-scoped prefix share one
+    compressed row (one insert, one hit) and both serve the same logits
+    as a direct compress-from-scratch."""
+    ptoks, q = _tokens(21, 8), _tokens(22, 4)
+    want = _direct_logits(params, tiny_cfg, [ptoks], q)
+    eng = ServeEngine(params, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4))
+    eng.create_session("a", prefix_tokens=ptoks)
+    eng.run()                            # owner compresses + caches
+    assert int(eng.prefix_cache._m_inserts.value) == 1
+    eng.create_session("b", prefix_tokens=ptoks)   # dedup hit: adopt row
+    assert int(eng.prefix_cache._m_hits.value) == 1
+    ra = eng.query("a", q).request
+    rb = eng.query("b", q).request
+    eng.run()
+    np.testing.assert_allclose(np.asarray(ra.result), want, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rb.result), want, atol=1e-5)
+    mgr = eng._mgr["online"]
+    assert mgr.arena.consistency_errors() == []
+    # different tenant, same tokens: no cross-tenant sharing
+    eng.create_session("x", tenant="other", prefix_tokens=ptoks)
+    assert int(eng.prefix_cache._m_hits.value) == 1
+    assert int(eng.prefix_cache._m_misses.value) >= 1
+
+
+def test_recompress_skips_shared_rows(tiny_cfg):
+    """Pressure lever 1 must never write a shared row in place: on a
+    shared slot `_recompress_session` reclaims 0 tokens and leaves the
+    slabs untouched (the write guard would refuse the scatter anyway)."""
+    eng = ServeEngine(None, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4),
+                      pressure_policy=PressurePolicy(capacity_tokens=10_000),
+                      step_factory=make_null_step)
+    eng.create_session("p")
+    eng.ingest("p", np.zeros(8, np.int32))
+    eng.run()
+    eng.fork_session("p", "c")
+    eng.run()
+    mgr = eng._mgr["online"]
+    assert mgr.arena.shared(mgr.sessions["p"].slot)
+    assert eng._recompress_session("p") == 0
+    assert eng._recompress_session("c") == 0
+    assert mgr.arena.consistency_errors() == []
+
+
+def test_arena_write_guard_refuses_shared_rows(tiny_cfg):
+    """Arena-level invariant: a scatter into a refcount>1 row raises and
+    is recorded as a consistency violation; once the row drops back to a
+    single holder writes are legal again."""
+    arena = SessionArena.for_online(tiny_cfg, n_slots=2, cache_len=8)
+    slot = arena.alloc()
+    arena.incref(slot)
+    with pytest.raises(RuntimeError, match="shared"):
+        arena.mark_dirty([slot])
+    assert any("shared-row write attempted" in e
+               for e in arena.consistency_errors())
+    arena.free(slot)                     # decref back to one holder
+    assert arena.refcount(slot) == 1
+    arena.mark_dirty([slot])             # now fine
+
+
+def test_session_footprint_charges_shared_row_once(tiny_cfg):
+    """Pressure accounting: a shared row's compressed-memory tokens are
+    charged to exactly one sharer, so used_tokens() reflects physical
+    rows, not logical sessions."""
+    eng = ServeEngine(None, tiny_cfg, n_slots=4, cache_len=32,
+                      batch_buckets=(1, 2, 4),
+                      pressure_policy=PressurePolicy(capacity_tokens=10_000),
+                      step_factory=make_null_step)
+    eng.create_session("p")
+    eng.ingest("p", np.zeros(8, np.int32))
+    eng.run()
+    solo = eng._session_footprint("p")
+    assert solo > 0
+    eng.fork_session("p", "c")
+    eng.run()
+    both = eng._session_footprint("p") + eng._session_footprint("c")
+    assert both == solo, \
+        "shared row double-charged across sharers"
+
+
+# -- satellite: close() vs async offload in flight ----------------------
+
+def test_close_mid_async_offload_does_not_resurrect(tiny_cfg):
+    """Regression: a sid closed while its async offload is still in
+    flight must be scrubbed from the in-flight entry — sync() must not
+    resurrect host rows for it, and recreating the sid starts fresh."""
+    import jax.numpy as jnp
+    arena = SessionArena.for_online(tiny_cfg, n_slots=2, cache_len=8)
+    mgr = SessionManager(arena, max_resident=2, async_offload=True)
+    for s in ("a", "b"):
+        mgr.create(s)
+        mgr.activate(s)
+    marked = jax.tree.map(lambda s: jnp.full(s.shape, 7, s.dtype),
+                          arena.template)
+    arena.write_slot(mgr.sessions["a"].slot, marked)
+    mgr.offload_batch(["a", "b"])        # async: buffers in flight
+    assert mgr._inflight
+    mgr.close("a")                       # close BEFORE the sync barrier
+    for entry in mgr._inflight:          # sid scrubbed from every entry
+        assert "a" not in entry[3]
+    mgr.sync()                           # must not raise, must not
+    assert "a" not in mgr.sessions       # resurrect the closed session
+    assert mgr.sessions["b"].host_state is not None
+    assert arena.consistency_errors() == []
+    # recreate the sid: state starts from zero, not the old marked row
+    mgr.create("a")
+    mgr.activate("a")
+    got = arena.read_slot(mgr.sessions["a"].slot)
+    for leaf in jax.tree.leaves(got):
+        assert not np.any(np.asarray(leaf) == 7), \
+            "closed session's bytes resurrected into the new session"
+
+
+def test_duplicate_sids_in_batch_calls(tiny_cfg):
+    """Regression: duplicate sids in one activate_batch/offload_batch
+    call must not double-count — one restore, one offload lane, refcount
+    stays 1, free-list stays consistent."""
+    import jax.numpy as jnp
+    arena = SessionArena.for_online(tiny_cfg, n_slots=2, cache_len=8)
+    mgr = SessionManager(arena, max_resident=2)
+    mgr.create("a")
+    slots = mgr.activate_batch(["a", "a"])
+    assert slots[0] == slots[1]
+    assert arena.refcount(slots[0]) == 1
+    marked = jax.tree.map(lambda s: jnp.full(s.shape, 7, s.dtype),
+                          arena.template)
+    arena.write_slot(slots[0], marked)
+    results = mgr.offload_batch(["a", "a"])
+    assert mgr.sessions["a"].n_offloads == 1
+    assert sum(1 for r in results if r.status == "offloaded") == 1
+    assert arena.consistency_errors() == []
+    mgr.activate("a")                    # restore round-trips the bytes
+    got = arena.read_slot(mgr.sessions["a"].slot)
+    for leaf, exp in zip(jax.tree.leaves(got), jax.tree.leaves(marked)):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(exp))
+
+
+# -- satellite: derived-bucket refit defers to pop boundaries -----------
+
+def test_derived_refit_defers_mid_pop(tiny_cfg):
+    """Regression: a ladder refit arriving while a (sharded) pop is
+    being executed must NOT swap token_buckets mid-flight — it is
+    deferred to the pop boundary, counted, and every sub-batch of every
+    sharded pop sees one uniform token_len."""
+    eng = ServeEngine(None, tiny_cfg, n_slots=8, cache_len=64,
+                      batch_buckets=(1, 2, 4),
+                      token_buckets=(2, 4, 8, 16),
+                      bucket_policy="derived", bucket_refit_interval=4,
+                      n_shards=4, step_factory=make_null_step)
+    sched = eng.scheduler
+    ladders_seen = []
+    deferred_returns = []
+    orig = sched.next_sharded_batches
+
+    def hostile_pop(*a, **k):
+        batch = orig(*a, **k)
+        if batch is not None:
+            # adversarial: demand a refit while the engine is inside
+            # its pop/execute window — must defer, not swap
+            before = eng._token_buckets
+            deferred_returns.append(eng.refit_token_buckets())
+            assert eng._token_buckets == before, \
+                "ladder swapped inside the pop window"
+            ladders_seen.append(before)
+            for sb in batch.shards:       # uniform padded length
+                assert sb.token_len == batch.token_len
+        return batch
+
+    sched.next_sharded_batches = hostile_pop
+    rng = np.random.RandomState(0)
+    for i in range(24):                   # skewed lengths drive a refit
+        sid = f"s{i % 6}"
+        if sid not in eng._kind:
+            eng.create_session(sid)
+        eng.ingest(sid, np.zeros(int(rng.choice((1, 2, 3, 15))),
+                                 np.int32))
+        eng.run()
+    assert len(ladders_seen) > 0
+    assert int(eng._m_refits_deferred.value) == len(deferred_returns)
+    assert int(eng._m_refits_deferred.value) > 0
+    # the deferred refits DID land (at boundaries): at least one applied
+    assert int(eng._m_refits.value) >= 1
+    assert not eng._refit_pending        # nothing left dangling
